@@ -1,0 +1,77 @@
+"""Catalog/versioning overheads (paper 4.3): branch, commit, merge,
+ephemeral-run lifecycle, and checkpoint save/restore throughput."""
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.catalog import Catalog
+from repro.io import ObjectStore
+from repro.table import Schema, TableFormat
+
+
+def run() -> List[str]:
+    out = []
+    store = ObjectStore(tempfile.mkdtemp())
+    catalog = Catalog(store)
+    fmt = TableFormat(store, shard_rows=65536)
+    rng = np.random.default_rng(0)
+    counter = [0]
+
+    def commit():
+        counter[0] += 1
+        catalog.commit("main", {f"t{counter[0] % 7}": f"key{counter[0]}"})
+
+    out.append(row("catalog_commit", bench(commit, iters=20) * 1e6, ""))
+
+    def branch_cycle():
+        counter[0] += 1
+        name = f"run_{counter[0]}"
+        catalog.create_branch(name)
+        catalog.commit(name, {"x": f"k{counter[0]}"})
+        catalog.merge(name, "main", delete_source=True)
+
+    out.append(
+        row("catalog_ephemeral_branch_cycle", bench(branch_cycle, iters=10) * 1e6,
+            "create+commit+merge+delete (Fig.4 lifecycle)")
+    )
+
+    # table write/read throughput
+    schema = Schema.of(a="float32", b="int32")
+    data = {
+        "a": rng.random(1_000_000).astype(np.float32),
+        "b": rng.integers(0, 100, 1_000_000).astype(np.int32),
+    }
+
+    def write():
+        counter[0] += 1
+        fmt.write(f"tbl{counter[0] % 3}", schema, data)
+
+    tw = bench(write, iters=3)
+    snap = fmt.write("tbl_read", schema, data)
+    tr = bench(lambda: fmt.read(snap), iters=3)
+    mb = 8 * 1_000_000 / 1e6
+    out.append(row("table_write_1m_rows", tw * 1e6, f"MBps={mb / tw:.0f}"))
+    out.append(row("table_read_1m_rows", tr * 1e6, f"MBps={mb / tr:.0f}"))
+
+    # checkpoint save/restore (100M-param-scale tree)
+    from repro.train import CheckpointManager
+
+    params = {
+        f"w{i}": jax.numpy.asarray(rng.standard_normal((1024, 1024)).astype(np.float32))
+        for i in range(12)
+    }
+    mgr = CheckpointManager(catalog, prefix="models/bench")
+    ts = bench(lambda: mgr.save(params, branch="main", step=counter[0]), iters=3)
+    like = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params
+    )
+    trr = bench(lambda: mgr.restore(like, branch="main"), iters=3)
+    pbytes = 12 * 1024 * 1024 * 4 / 1e6
+    out.append(row("checkpoint_save_48MB", ts * 1e6, f"MBps={pbytes / ts:.0f}"))
+    out.append(row("checkpoint_restore_48MB", trr * 1e6, f"MBps={pbytes / trr:.0f}"))
+    return out

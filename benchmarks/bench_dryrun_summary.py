@@ -1,0 +1,63 @@
+"""Deliverables (e)+(g) as CSV: dry-run coverage + roofline headlines.
+
+Reads the cached artifacts in results/ (produced by repro.launch.dryrun /
+roofline) — no compilation happens here.  Skipped gracefully when the
+dry-run has not been executed in this checkout.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from benchmarks.common import row
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def run() -> List[str]:
+    out = []
+    dryrun_path = RESULTS / "dryrun.json"
+    if not dryrun_path.exists():
+        return [row("dryrun_summary", 0.0, "results/dryrun.json absent — run repro.launch.dryrun")]
+    r = json.loads(dryrun_path.read_text())
+    base = {k: v for k, v in r.items() if "@" not in k}
+    ok = sum(1 for v in base.values() if v.get("ok"))
+    skipped = sum(1 for v in base.values() if "skipped" in v)
+    failed = sum(1 for v in base.values() if v.get("ok") is False)
+    compile_s = sum(v.get("compile_s", 0.0) for v in base.values() if v.get("ok"))
+    out.append(
+        row(
+            "dryrun_cells",
+            compile_s * 1e6 / max(ok, 1),
+            f"ok={ok};skipped={skipped};failed={failed};"
+            f"meshes=16x16+2x16x16;total_compile_s={compile_s:.0f}",
+        )
+    )
+    fits = sum(
+        1
+        for v in base.values()
+        if v.get("ok")
+        and ((v["memory"]["argument_bytes"] or 0) + (v["memory"]["temp_bytes"] or 0))
+        <= 16 * 2**30
+    )
+    out.append(row("dryrun_fits_16gb", 0.0, f"{fits}/{ok} cells within v5e HBM"))
+
+    roofline_path = RESULTS / "roofline.json"
+    if roofline_path.exists():
+        rl = json.loads(roofline_path.read_text())
+        live = {k: v for k, v in rl.items() if "terms_s" in v}
+        if live:
+            best = max(live.items(), key=lambda kv: kv[1]["roofline_fraction"])
+            doms = {}
+            for v in live.values():
+                doms[v["dominant"]] = doms.get(v["dominant"], 0) + 1
+            out.append(
+                row(
+                    "roofline_cells",
+                    0.0,
+                    f"n={len(live)};dominant_hist={doms};"
+                    f"best_frac={best[1]['roofline_fraction']:.2f}@{best[0]}",
+                )
+            )
+    return out

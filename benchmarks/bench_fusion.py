@@ -1,0 +1,63 @@
+"""Paper 4.4.2: fused physical plan vs naive isomorphic plan.
+
+The paper reports a 5x faster feedback loop from pushing filters into the
+scan and running SQL + Python expectation in one process.  We measure the
+same pipeline (the Appendix taxi DAG) under both planner modes, on
+several data scales, reporting wall time and object-store traffic.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.catalog import Catalog
+from repro.core import Runner
+from repro.io import ObjectStore
+from repro.runtime import ExecutorConfig, ServerlessExecutor
+from repro.table import TableFormat
+from tests.helpers_taxi import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
+
+
+def run(sizes=(10_000, 100_000, 500_000)) -> List[str]:
+    out = []
+    for n in sizes:
+        store = ObjectStore(tempfile.mkdtemp())
+        catalog = Catalog(store)
+        fmt = TableFormat(store, shard_rows=65536)
+        rng = np.random.default_rng(0)
+        snap = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(n, rng))
+        catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+        with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
+            runner = Runner(catalog, fmt, ex)
+            branch_id = [0]
+
+            def run_mode(fusion: bool):
+                branch_id[0] += 1
+                return runner.run(
+                    build_taxi_pipeline(),
+                    branch=f"b{branch_id[0]}_{fusion}",
+                    fusion=fusion,
+                    pushdown=fusion,
+                )
+
+            t_fused = bench(lambda: run_mode(True), warmup=1, iters=3)
+            t_naive = bench(lambda: run_mode(False), warmup=1, iters=3)
+            res_f = run_mode(True)
+            res_n = run_mode(False)
+        speedup = t_naive / t_fused
+        io_ratio = (
+            res_n.stats["io"]["bytes_written"]
+            / max(res_f.stats["io"]["bytes_written"], 1)
+        )
+        out.append(
+            row(
+                f"fusion_speedup_n{n}",
+                t_fused * 1e6,
+                f"naive_us={t_naive * 1e6:.0f};speedup={speedup:.2f}x;"
+                f"io_write_ratio={io_ratio:.2f}x;paper_claim=5x",
+            )
+        )
+    return out

@@ -1,0 +1,67 @@
+"""Paper 4.5: warm vs cold function start (the 300 ms container claim).
+
+Cold = trace + XLA-compile a pipeline stage; warm = cache hit on the same
+(fingerprint, shapes).  Also measures the executor's per-task overhead
+(submission → result for a no-op function) — the "serverless tax".
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.engine import Columnar, Query, col
+from repro.engine.exec import execute_query
+from repro.runtime import ExecutorConfig, FunctionSpec, ServerlessExecutor, WarmFunctionCache
+
+
+def run() -> List[str]:
+    out = []
+    rng = np.random.default_rng(0)
+    rel = Columnar.from_numpy(
+        {
+            "k": rng.integers(0, 64, 100_000).astype(np.int32),
+            "v": rng.random(100_000).astype(np.float32),
+        }
+    )
+    q = Query("t").where(col("v") > 0.5).group_by("k").agg("sum", col("v"), "s")
+
+    def stage(r):
+        return execute_query(q, r)
+
+    # cold starts: fresh cache each time
+    cold_times = []
+    for i in range(3):
+        cache = WarmFunctionCache()
+        spec = FunctionSpec(name=f"stage{i}", fn=stage, static_config={"i": i})
+        t0 = time.perf_counter()
+        fn = cache.get_or_compile(spec, rel)
+        cold_times.append(time.perf_counter() - t0)
+    cold = sorted(cold_times)[1]
+
+    cache = WarmFunctionCache()
+    spec = FunctionSpec(name="warm", fn=stage)
+    fn = cache.get_or_compile(spec, rel)
+
+    def warm_call():
+        cache.get_or_compile(spec, rel)(rel)
+
+    warm = bench(warm_call, warmup=2, iters=10)
+    out.append(
+        row(
+            "serverless_cold_start",
+            cold * 1e6,
+            f"warm_us={warm * 1e6:.0f};ratio={cold / max(warm, 1e-9):.1f}x;"
+            "paper_cold=spark_cluster_start;paper_warm=300ms",
+        )
+    )
+
+    # executor overhead
+    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
+        nspec = FunctionSpec(name="noop", fn=lambda x: x, jit=False)
+        overhead = bench(lambda: ex.run(nspec, 1), warmup=2, iters=20)
+    out.append(row("executor_task_overhead", overhead * 1e6, "noop submit->result"))
+    return out

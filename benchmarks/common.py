@@ -1,0 +1,22 @@
+"""Benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+
+def bench(fn: Callable[[], None], *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

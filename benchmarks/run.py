@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  bench_fusion            paper 4.4.2 (the 5x fused-plan claim)
+  bench_serverless        paper 4.5 (warm/cold starts, 300 ms claim)
+  bench_reasonable_scale  paper 3.1 / Fig. 1 (power-law workloads)
+  bench_engine            query engine + fused_filter_agg kernel
+  bench_catalog           paper 4.3 (branch/commit/merge, checkpoints)
+  bench_dryrun_summary    deliverables (e)+(g): dry-run + roofline headlines
+
+Run: ``PYTHONPATH=src:. python -m benchmarks.run [--only NAME]``
+"""
+import argparse
+import sys
+import traceback
+
+SUITES = [
+    "bench_reasonable_scale",
+    "bench_serverless",
+    "bench_catalog",
+    "bench_engine",
+    "bench_fusion",
+    "bench_dryrun_summary",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single suite")
+    args = ap.parse_args()
+    suites = [args.only] if args.only else SUITES
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in suites:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+        except Exception as e:
+            failed += 1
+            print(f"{name},ERROR,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

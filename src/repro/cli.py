@@ -1,0 +1,136 @@
+"""The CLI — the paper's primary interaction surface (4.6).
+
+Mirrors the two core commands plus the git-like helpers:
+
+  python -m repro.cli --lake /path/to/lake query -q "SELECT ..." [-b branch]
+  python -m repro.cli --lake ... run pipeline_module.py [-b branch]
+                                      [--no-fusion] [--run-id N --replay]
+  python -m repro.cli --lake ... branch [--create NAME] [--from BASE]
+  python -m repro.cli --lake ... log [-b branch]
+  python -m repro.cli --lake ... tables [-b branch]
+
+A pipeline module is a plain Python file defining ``PIPELINE`` (a
+``repro.core.Pipeline``) — the paper's "code in the IDE of choice".
+"""
+from __future__ import annotations
+
+import argparse
+import importlib.util
+import sys
+from pathlib import Path
+
+import numpy as np
+
+from repro.catalog import Catalog
+from repro.core import ExpectationFailed, Pipeline, Runner
+from repro.io import ObjectStore
+from repro.runtime import ServerlessExecutor
+from repro.table import TableFormat
+
+
+def _load_pipeline(path: str) -> Pipeline:
+    spec = importlib.util.spec_from_file_location("user_pipeline", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)  # type: ignore[union-attr]
+    pipeline = getattr(mod, "PIPELINE", None)
+    if not isinstance(pipeline, Pipeline):
+        raise SystemExit(f"{path} must define PIPELINE = repro.core.Pipeline(...)")
+    return pipeline
+
+
+def _print_table(rows: dict, *, limit: int = 20) -> None:
+    names = list(rows)
+    if not names:
+        print("(empty)")
+        return
+    n = len(rows[names[0]])
+    widths = {c: max(len(c), 12) for c in names}
+    print(" | ".join(c.ljust(widths[c]) for c in names))
+    print("-+-".join("-" * widths[c] for c in names))
+    for i in range(min(n, limit)):
+        print(" | ".join(str(rows[c][i]).ljust(widths[c]) for c in names))
+    if n > limit:
+        print(f"... ({n - limit} more rows)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(prog="repro.cli")
+    ap.add_argument("--lake", required=True, help="lake root directory")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    q = sub.add_parser("query", help="synchronous SQL against an artifact")
+    q.add_argument("-q", "--sql", required=True)
+    q.add_argument("-b", "--branch", default=None)
+    q.add_argument("--commit", default=None, help="time travel to a commit")
+
+    r = sub.add_parser("run", help="execute a pipeline (transform-audit-write)")
+    r.add_argument("pipeline", help="python file defining PIPELINE")
+    r.add_argument("-b", "--branch", default="main")
+    r.add_argument("--no-fusion", action="store_true")
+    r.add_argument("--replay", action="store_true")
+    r.add_argument("--run-id", type=int, default=None)
+
+    b = sub.add_parser("branch", help="list/create branches")
+    b.add_argument("--create", default=None)
+    b.add_argument("--from", dest="from_branch", default=None)
+
+    lg = sub.add_parser("log", help="commit log")
+    lg.add_argument("-b", "--branch", default="main")
+
+    t = sub.add_parser("tables", help="tables at a branch head")
+    t.add_argument("-b", "--branch", default="main")
+
+    args = ap.parse_args(argv)
+    store = ObjectStore(Path(args.lake))
+    catalog = Catalog(store)
+    fmt = TableFormat(store)
+
+    if args.cmd == "branch":
+        if args.create:
+            catalog.create_branch(args.create, from_branch=args.from_branch)
+            print(f"created branch {args.create!r}")
+        for name in catalog.branches():
+            print(name)
+        return
+
+    if args.cmd == "log":
+        for c in catalog.log(args.branch):
+            print(f"{c.commit_id[:12]}  {c.author:<8} {c.message}")
+        return
+
+    if args.cmd == "tables":
+        for name, key in sorted(catalog.tables(branch=args.branch).items()):
+            snap = fmt.load_snapshot(key)
+            print(f"{name:<32} {snap.num_rows:>10} rows  {key[:12]}")
+        return
+
+    with ServerlessExecutor() as ex:
+        runner = Runner(catalog, fmt, ex)
+        if args.cmd == "query":
+            out = runner.query(args.sql, branch=args.branch, commit_id=args.commit)
+            _print_table(out)
+            return
+        # run / replay
+        pipeline = _load_pipeline(args.pipeline)
+        if args.replay:
+            if args.run_id is None:
+                raise SystemExit("--replay needs --run-id")
+            res = runner.replay(pipeline, args.run_id)
+            print(f"replayed run {args.run_id} as {res.run_id}: "
+                  f"artifacts={sorted(res.artifacts)}")
+            return
+        try:
+            res = runner.run(
+                pipeline, branch=args.branch, fusion=not args.no_fusion,
+                pushdown=not args.no_fusion,
+            )
+        except ExpectationFailed as e:
+            raise SystemExit(f"AUDIT FAILED: {e}")
+        print(f"run {res.run_id} merged to {args.branch!r} "
+              f"@ {res.merged_commit[:12]}")
+        print(f"artifacts: {sorted(res.artifacts)}  checks: {res.checks}")
+        print(f"wall: {res.stats['wall_s']:.2f}s  io: {res.stats['io']}")
+
+
+if __name__ == "__main__":
+    main()

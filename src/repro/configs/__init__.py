@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+One module per assigned architecture with the exact published config;
+each exposes ``CONFIG`` (full-size) and ``smoke_config()`` (reduced, same
+family) plus ``input_specs(shape)`` via the shared shapes module.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.lm import LMConfig
+
+ARCH_IDS: List[str] = [
+    "deepseek_v3_671b",
+    "qwen2_moe_a2_7b",
+    "h2o_danube_3_4b",
+    "granite_34b",
+    "yi_6b",
+    "qwen3_32b",
+    "internvl2_2b",
+    "xlstm_350m",
+    "musicgen_medium",
+    "recurrentgemma_9b",
+]
+
+#: accepted spellings (CLI uses dashes)
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def resolve(arch: str) -> str:
+    arch = arch.replace("-", "_").replace(".", "_")
+    if arch not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCH_IDS)}")
+    return arch
+
+
+def get_config(arch: str) -> LMConfig:
+    mod = importlib.import_module(f"repro.configs.{resolve(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> LMConfig:
+    mod = importlib.import_module(f"repro.configs.{resolve(arch)}")
+    return mod.smoke_config()
+
+
+def all_configs() -> Dict[str, LMConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,120 @@
+"""Workload shapes and ShapeDtypeStruct input specs for every cell.
+
+The four assigned shapes (per arch):
+
+  train_4k      seq=4096    global_batch=256   → lowers train_step
+  prefill_32k   seq=32768   global_batch=32    → lowers prefill
+  decode_32k    seq=32768   global_batch=128   → lowers serve_step
+                                                  (1 token, 32k KV cache)
+  long_500k     seq=524288  global_batch=1     → serve_step, 500k state;
+                                                  ONLY sub-quadratic archs
+
+``input_specs`` returns allocation-free ShapeDtypeStructs (the dry-run
+contract); ``make_batch`` materializes small real batches for smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LMConfig, ModelFamily
+
+#: archs with sub-quadratic sequence mixing — the only ones that run
+#: ``long_500k`` (see DESIGN.md §4: pure full-attention archs skip it)
+SUB_QUADRATIC = {"h2o-danube-3-4b", "xlstm-350m", "recurrentgemma-9b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, WorkloadShape] = {
+    "train_4k": WorkloadShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": WorkloadShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": WorkloadShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": WorkloadShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: LMConfig, shape: WorkloadShape) -> Optional[str]:
+    """None if the (arch, shape) cell runs; else the skip reason."""
+    if shape.name == "long_500k" and cfg.name not in SUB_QUADRATIC:
+        return (
+            "full-attention arch: 500k dense KV decode is the workload this "
+            "shape excludes (DESIGN.md §4)"
+        )
+    return None
+
+
+def cells(configs: Dict[str, LMConfig]) -> List:
+    """All live (arch, shape) cells + skip records."""
+    live, skipped = [], []
+    for arch, cfg in configs.items():
+        for shape in SHAPES.values():
+            reason = shape_applicable(cfg, shape)
+            if reason is None:
+                live.append((arch, shape.name))
+            else:
+                skipped.append((arch, shape.name, reason))
+    return live, skipped
+
+
+# ------------------------------------------------------------- input specs
+def _token_spec(cfg: LMConfig, batch: int, seq: int) -> jax.ShapeDtypeStruct:
+    if cfg.n_codebooks > 1:
+        return jax.ShapeDtypeStruct((batch, seq, cfg.n_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def input_specs(cfg: LMConfig, shape: WorkloadShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs: Dict[str, Any] = {"tokens": _token_spec(cfg, b, s)}
+        if cfg.family == ModelFamily.VLM:
+            # text shortened so patches + text == seq budget
+            specs["tokens"] = _token_spec(cfg, b, s - cfg.num_patches)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _token_spec(cfg, b, s)}
+        if cfg.family == ModelFamily.VLM:
+            specs["tokens"] = _token_spec(cfg, b, s - cfg.num_patches)
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.num_patches, cfg.d_model), jnp.bfloat16
+            )
+        return specs
+    # decode: one new token against a seq-length cache
+    return {
+        "tokens": _token_spec(cfg, b, 1),
+        "lengths": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+# ------------------------------------------------------- smoke-test batches
+def make_batch(
+    cfg: LMConfig, *, batch: int, seq: int, rng: np.random.Generator
+) -> Dict[str, jax.Array]:
+    if cfg.n_codebooks > 1:
+        tokens = rng.integers(0, cfg.vocab, (batch, seq, cfg.n_codebooks))
+    else:
+        tokens = rng.integers(0, cfg.vocab, (batch, seq))
+    out = {"tokens": jnp.asarray(tokens.astype(np.int32))}
+    if cfg.family == ModelFamily.VLM:
+        out["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.num_patches, cfg.d_model)).astype(
+                np.float32
+            ),
+            dtype=jnp.bfloat16,
+        )
+    return out

@@ -1,0 +1,38 @@
+"""The paper's primary contribution: declarative pipelines + code intelligence.
+
+``Pipeline``      — one artifact per node, implicit DAG (paper 4.1, A)
+``LogicalPlan``   — typed DAG over catalog artifacts (paper 4.4.1)
+``PhysicalPlan``  — fused stages with scan pushdown (paper 4.4.2)
+``Runner``        — transform-audit-write over ephemeral branches (4.3)
+``RunRegistry``   — snapshotting, fingerprints, replay (4.4.1, 4.6)
+"""
+from repro.core.pipeline import Pipeline, Node, PipelineError, requirements
+from repro.core.logical import LogicalPlan, build_logical_plan
+from repro.core.physical import (
+    PhysicalPlan,
+    Stage,
+    ScanSpec,
+    PlannerConfig,
+    build_physical_plan,
+)
+from repro.core.runner import Runner, RunResult, ExpectationFailed
+from repro.core.snapshot import RunRecord, RunRegistry
+
+__all__ = [
+    "Pipeline",
+    "Node",
+    "PipelineError",
+    "requirements",
+    "LogicalPlan",
+    "build_logical_plan",
+    "PhysicalPlan",
+    "Stage",
+    "ScanSpec",
+    "PlannerConfig",
+    "build_physical_plan",
+    "Runner",
+    "RunResult",
+    "ExpectationFailed",
+    "RunRecord",
+    "RunRegistry",
+]

@@ -1,0 +1,265 @@
+"""Physical planner: fusion + scan pushdown (the paper's 4.4.2 optimization).
+
+The first Bauplan version mapped the logical plan isomorphically — one
+(serverless, stateless) function per node, every intermediate spilled to
+object storage.  The optimized planner instead:
+
+1. **pushes filters down** into the scan (shard pruning via min/max stats
+   + residual row filter), so the in-memory table starts small;
+2. **fuses** chains of nodes into a single stage executed as ONE jitted
+   XLA program — SQL logic and Python expectations run in place on
+   device-resident data, nothing round-trips through the store.
+
+Both behaviours are switchable (``PlannerConfig``) because the naive plan
+is the baseline the paper's 5x claim is measured against
+(benchmarks/bench_fusion.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.logical import LogicalPlan
+from repro.core.pipeline import Node
+from repro.engine.columnar import Columnar
+from repro.engine.exec import execute_query
+from repro.engine.query import Query
+from repro.runtime.resources import CostModel, ResourceRequest
+from repro.table.format import Snapshot
+from repro.table.scan import Predicate, ScanPlan, plan_scan
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    fusion: bool = True
+    pushdown: bool = True
+    #: cap on fused nodes per stage (very long chains recompile slowly)
+    max_stage_nodes: int = 32
+
+
+@dataclass(frozen=True)
+class ScanSpec:
+    """One external-table read feeding a stage."""
+
+    table: str
+    plan: ScanPlan
+    #: bytes that will actually be read after shard/column pruning
+    estimated_bytes: int
+
+    @property
+    def predicates(self) -> Tuple[Predicate, ...]:
+        return self.plan.predicates
+
+
+@dataclass
+class Stage:
+    stage_id: int
+    node_names: Tuple[str, ...]
+    scans: Dict[str, ScanSpec]
+    internal_inputs: Tuple[str, ...]
+    outputs: Tuple[str, ...]
+    checks: Tuple[str, ...]
+    fn: Callable[..., Tuple[Dict[str, Columnar], Dict[str, Any]]]
+    resources: ResourceRequest
+    fingerprint: str
+
+    @property
+    def input_order(self) -> Tuple[str, ...]:
+        """Stage fn positional args: scans first (sorted), then internals."""
+        return tuple(sorted(self.scans)) + self.internal_inputs
+
+
+@dataclass
+class PhysicalPlan:
+    logical: LogicalPlan
+    config: PlannerConfig
+    stages: List[Stage]
+
+    @property
+    def num_materializations(self) -> int:
+        return sum(len(s.outputs) for s in self.stages)
+
+    def describe(self) -> str:
+        lines = [f"physical plan ({'fused' if self.config.fusion else 'isomorphic'}):"]
+        for s in self.stages:
+            scans = {
+                t: f"{spec.plan.rows_to_read} rows"
+                f" (-{spec.plan.pruned_shards} shards)"
+                for t, spec in s.scans.items()
+            }
+            lines.append(
+                f"  stage {s.stage_id}: nodes={list(s.node_names)} scans={scans} "
+                f"inputs={list(s.internal_inputs)} outputs={list(s.outputs)} "
+                f"checks={list(s.checks)} mem={s.resources.memory_gb}GB"
+            )
+        return "\n".join(lines)
+
+
+def _ensure_columnar(value: Any, node_name: str) -> Columnar:
+    if isinstance(value, Columnar):
+        return value
+    if isinstance(value, dict):
+        return Columnar.from_arrays(value)
+    raise TypeError(
+        f"python node {node_name!r} must return a Columnar or a dict of "
+        f"columns, got {type(value)}"
+    )
+
+
+def _make_stage_fn(
+    ordered_nodes: Sequence[Node],
+    rewrites: Dict[str, Query],
+    input_order: Sequence[str],
+    outputs: Sequence[str],
+    ctx: Any,
+) -> Callable:
+    """Compose stage nodes into one pure function (jit-able end to end)."""
+
+    def stage_fn(*inputs: Columnar):
+        env: Dict[str, Columnar] = dict(zip(input_order, inputs))
+        checks: Dict[str, Any] = {}
+        for node in ordered_nodes:
+            if node.kind == "sql":
+                query = rewrites.get(node.name, node.query)
+                env[node.name] = execute_query(query, env[query.source])
+            elif node.kind == "python":
+                out = node.fn(ctx, *[env[p] for p in node.parents])
+                env[node.name] = _ensure_columnar(out, node.name)
+            else:  # expectation — returns a (traced) boolean
+                checks[node.name] = node.fn(ctx, *[env[p] for p in node.parents])
+        return {name: env[name] for name in outputs}, checks
+
+    return stage_fn
+
+
+def _scan_bytes(plan: ScanPlan) -> int:
+    row_bytes = sum(
+        np.dtype(plan.snapshot.schema.dtype_of(c)).itemsize for c in plan.columns
+    )
+    return plan.rows_to_read * row_bytes
+
+
+def build_physical_plan(
+    logical: LogicalPlan,
+    snapshots: Dict[str, Snapshot],
+    *,
+    config: PlannerConfig = PlannerConfig(),
+    ctx: Any = None,
+    cost_model: Optional[CostModel] = None,
+) -> PhysicalPlan:
+    cost_model = cost_model or CostModel()
+
+    # ---------------------------------------------------- stage assignment
+    # greedy: a node joins the stage that produced ALL its internal parents
+    # (expectations likewise); otherwise it opens a new stage.
+    node_stage: Dict[str, int] = {}
+    stage_nodes: List[List[str]] = []
+    produced_in: Dict[str, int] = {}
+    for name in logical.order:
+        node = logical.nodes[name]
+        internal_parents = [p for p in node.parents if p in logical.nodes]
+        target: Optional[int] = None
+        if config.fusion and internal_parents:
+            parent_stages = {produced_in[p] for p in internal_parents}
+            if len(parent_stages) == 1:
+                cand = parent_stages.pop()
+                if len(stage_nodes[cand]) < config.max_stage_nodes:
+                    target = cand
+        # (fusion disabled → target stays None → every node its own stage,
+        #  expectations included: the paper's "three separate executions")
+        if target is None:
+            stage_nodes.append([])
+            target = len(stage_nodes) - 1
+        stage_nodes[target].append(name)
+        node_stage[name] = target
+        if not node.is_expectation:
+            produced_in[name] = target
+
+    # --------------------------------------------- boundary identification
+    needed_later: Dict[str, List[int]] = {}
+    for name in logical.order:
+        node = logical.nodes[name]
+        for p in node.parents:
+            if p in produced_in and produced_in[p] != node_stage[name]:
+                needed_later.setdefault(p, []).append(node_stage[name])
+
+    stages: List[Stage] = []
+    for sid, names in enumerate(stage_nodes):
+        nodes = [logical.nodes[n] for n in names]
+        artifact_names = {n.name for n in nodes if not n.is_expectation}
+
+        # external scans for this stage
+        scan_tables: List[str] = []
+        for node in nodes:
+            for p in node.parents:
+                if p not in logical.nodes and p not in scan_tables:
+                    scan_tables.append(p)
+
+        # pushdown: only when a table feeds exactly one SQL node in-stage
+        rewrites: Dict[str, Query] = {}
+        scans: Dict[str, ScanSpec] = {}
+        for table in scan_tables:
+            snapshot = snapshots[table]
+            consumers_here = [
+                n for n in nodes if table in n.parents
+            ]
+            predicates: List[Predicate] = []
+            columns: Optional[List[str]] = None
+            if (
+                config.pushdown
+                and len(consumers_here) == 1
+                and consumers_here[0].kind == "sql"
+                and consumers_here[0].query is not None
+            ):
+                consumer = consumers_here[0]
+                query = consumer.query
+                if query.filter_expr is not None:
+                    pushed, residual = query.filter_expr.as_pushdown_conjuncts()
+                    if pushed:
+                        predicates = pushed
+                        rewrites[consumer.name] = replace(
+                            query, filter_expr=residual
+                        )
+                referenced = query.referenced_columns()
+                if query.projections or query.is_aggregation:
+                    # pure COUNT(*): still need one column for row counts
+                    columns = referenced or [snapshot.schema.names[0]]
+            plan = plan_scan(snapshot, columns=columns, predicates=predicates)
+            scans[table] = ScanSpec(table, plan, _scan_bytes(plan))
+
+        internal_inputs = tuple(
+            sorted(
+                {
+                    p
+                    for n in nodes
+                    for p in n.parents
+                    if p in produced_in and produced_in[p] != sid
+                }
+            )
+        )
+        outputs = tuple(
+            n
+            for n in names
+            if n in artifact_names
+            and (n in logical.outputs or n in needed_later)
+        )
+        checks = tuple(n.name for n in nodes if n.is_expectation)
+        input_order = tuple(sorted(scans)) + internal_inputs
+        fn = _make_stage_fn(nodes, rewrites, input_order, outputs, ctx)
+        total_bytes = sum(s.estimated_bytes for s in scans.values())
+        stages.append(
+            Stage(
+                stage_id=sid,
+                node_names=tuple(names),
+                scans=scans,
+                internal_inputs=internal_inputs,
+                outputs=outputs,
+                checks=checks,
+                fn=fn,
+                resources=cost_model.request_for_scan(total_bytes),
+                fingerprint="-".join(logical.nodes[n].fingerprint for n in names),
+            )
+        )
+    return PhysicalPlan(logical=logical, config=config, stages=stages)

@@ -1,0 +1,367 @@
+"""The run orchestrator: transform → audit → write (paper 4.3, Fig. 4).
+
+``bauplan run`` semantics:
+
+1. resolve (or create) the working branch — "Bauplan detects the Git
+   context and creates a Nessie branch with the same name";
+2. pin the base commit (or the one a replayed run recorded);
+3. execute the physical plan **into an ephemeral branch** ``run_<id>``;
+4. audit: every expectation must pass;
+5. write: merge the ephemeral branch atomically into the working branch
+   and delete it — or, on any failure, delete it without merging so dirty
+   artifacts are never visible (the database-transaction analogy).
+
+Stage execution goes through the serverless executor (retries, warm
+starts, speculation); artifacts flow between stages in memory within a
+run (data locality, 4.5) and hit the object store only at stage
+boundaries/outputs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.catalog.nessie import Catalog
+from repro.core.logical import LogicalPlan, build_logical_plan
+from repro.core.physical import (
+    PhysicalPlan,
+    PlannerConfig,
+    build_physical_plan,
+)
+from repro.core.pipeline import Pipeline
+from repro.core.snapshot import RunRecord, RunRegistry
+from repro.engine.columnar import Columnar
+from repro.runtime.executor import ServerlessExecutor
+from repro.runtime.function import FunctionSpec
+from repro.table.format import Snapshot, TableFormat
+from repro.table.scan import execute_scan
+from repro.table.schema import Column, Schema
+from repro.utils.logging import get_logger
+
+log = get_logger("core.runner")
+
+
+class ExpectationFailed(RuntimeError):
+    def __init__(self, failed: List[str]):
+        super().__init__(f"expectations failed: {failed} — run rolled back")
+        self.failed = failed
+
+
+class RunContext:
+    """Per-run context handed to python nodes (``ctx`` argument).
+
+    __repr__ deliberately covers only ``params`` — run_id and branch do
+    not change any node's computation, so stage fingerprints (and the
+    warm compiled-function cache) stay stable across runs.  This is the
+    compiled-executable analog of reusing a frozen container (4.5).
+    """
+
+    def __init__(self, branch: str, run_id: int, params: Dict[str, Any]):
+        self.branch = branch
+        self.run_id = run_id
+        self.params = params
+
+    def __repr__(self) -> str:
+        return f"RunContext(params={sorted(self.params.items())})"
+
+
+@dataclass
+class RunResult:
+    run_id: int
+    branch: str
+    merged_commit: Optional[str]
+    artifacts: Dict[str, str]
+    checks: Dict[str, bool]
+    stats: Dict[str, Any]
+    plan: PhysicalPlan
+
+    @property
+    def ok(self) -> bool:
+        return self.merged_commit is not None
+
+
+@dataclass
+class Runner:
+    catalog: Catalog
+    fmt: TableFormat
+    executor: ServerlessExecutor
+    registry: RunRegistry = None  # type: ignore[assignment]
+
+    def __post_init__(self) -> None:
+        if self.registry is None:
+            self.registry = RunRegistry(self.catalog.store)
+
+    # ------------------------------------------------------------ queries
+    def query(
+        self,
+        sql: str,
+        *,
+        branch: Optional[str] = None,
+        commit_id: Optional[str] = None,
+    ) -> Dict[str, np.ndarray]:
+        """``bauplan query -q "SELECT ..." [-b branch]`` — synchronous QW.
+
+        Point-wise interactive path: scan (with pushdown) + one compiled
+        query, straight to the caller. Time travel via branch/commit.
+        """
+        from repro.engine.exec import compile_query
+        from repro.engine.sql import parse_sql
+
+        query = parse_sql(sql)
+        key = self.catalog.table_key(
+            query.source, branch=branch, commit_id=commit_id
+        )
+        snapshot = self.fmt.load_snapshot(key)
+        pushed, residual = (
+            query.filter_expr.as_pushdown_conjuncts()
+            if query.filter_expr is not None
+            else ([], None)
+        )
+        from dataclasses import replace as _replace
+
+        from repro.table.scan import plan_scan
+
+        columns = (
+            query.referenced_columns()
+            if (query.projections or query.is_aggregation)
+            else None
+        )
+        if columns == []:  # pure COUNT(*): any one column carries the rows
+            columns = [snapshot.schema.names[0]]
+        scan = plan_scan(snapshot, columns=columns, predicates=pushed)
+        rel = Columnar.from_numpy(execute_scan(self.fmt, scan))
+        residual_query = _replace(query, filter_expr=residual)
+        out = compile_query(residual_query)(rel)
+        return out.to_numpy()
+
+    # ---------------------------------------------------------------- run
+    def run(
+        self,
+        pipeline: Pipeline,
+        *,
+        branch: str = "main",
+        params: Optional[Dict[str, Any]] = None,
+        fusion: bool = True,
+        pushdown: bool = True,
+        base_commit: Optional[str] = None,
+        author: str = "user",
+    ) -> RunResult:
+        t_start = time.perf_counter()
+        params = dict(params or {})
+
+        # 1. branch handling (auto-create like the paper's git detection)
+        if not self.catalog.has_branch(branch):
+            self.catalog.create_branch(branch)
+            log.info("created catalog branch %r from main", branch)
+        base = (
+            self.catalog.get_commit(base_commit)
+            if base_commit
+            else self.catalog.head(branch)
+        )
+
+        run_id = self.registry.next_run_id()
+        ephemeral = f"run_{run_id}"
+        self.catalog.create_branch(ephemeral, at_commit=base.commit_id)
+
+        try:
+            result = self._execute(
+                pipeline, branch, ephemeral, base.commit_id, params,
+                PlannerConfig(fusion=fusion, pushdown=pushdown), run_id,
+            )
+        except Exception:
+            # any failure: discard the ephemeral branch — prod stays clean
+            self.catalog.delete_branch(ephemeral)
+            raise
+
+        # 4. audit
+        failed = [k for k, v in result["checks"].items() if not v]
+        if failed:
+            self.catalog.delete_branch(ephemeral)
+            rec = self._record(
+                run_id, pipeline, branch, base.commit_id, params,
+                result, merged=None, t_start=t_start,
+            )
+            raise ExpectationFailed(failed)
+
+        # 5. write: atomic merge + ephemeral cleanup
+        merged = self.catalog.merge(
+            ephemeral, branch,
+            message=f"run {run_id}: {pipeline.name}",
+            author=author, delete_source=True,
+        )
+        rec = self._record(
+            run_id, pipeline, branch, base.commit_id, params,
+            result, merged=merged.commit_id, t_start=t_start,
+        )
+        return RunResult(
+            run_id=run_id,
+            branch=branch,
+            merged_commit=merged.commit_id,
+            artifacts=result["artifacts"],
+            checks=result["checks"],
+            stats=rec.stats,
+            plan=result["plan"],
+        )
+
+    # ------------------------------------------------------------- replay
+    def replay(
+        self,
+        pipeline: Pipeline,
+        run_id: int,
+        *,
+        strict_code: bool = True,
+    ) -> RunResult:
+        """Re-execute run ``run_id``: same code, same data version (4.6).
+
+        Executes into a fresh ephemeral branch that is dropped afterwards —
+        replay is for debugging/inspection, it never moves branches.
+        """
+        rec = self.registry.get(run_id)
+        if strict_code and rec.pipeline_fingerprint != pipeline.fingerprint:
+            raise ValueError(
+                "pipeline code differs from the recorded run "
+                f"({rec.pipeline_fingerprint} != {pipeline.fingerprint}); "
+                "pass strict_code=False to replay anyway"
+            )
+        replay_id = self.registry.next_run_id()
+        ephemeral = f"run_{replay_id}"
+        self.catalog.create_branch(ephemeral, at_commit=rec.base_commit)
+        try:
+            result = self._execute(
+                pipeline, rec.branch, ephemeral, rec.base_commit,
+                dict(rec.params), PlannerConfig(fusion=rec.fused), replay_id,
+            )
+        finally:
+            self.catalog.delete_branch(ephemeral)
+        return RunResult(
+            run_id=replay_id,
+            branch=rec.branch,
+            merged_commit=None,
+            artifacts=result["artifacts"],
+            checks=result["checks"],
+            stats={"replay_of": run_id},
+            plan=result["plan"],
+        )
+
+    # ------------------------------------------------------------ internal
+    def _execute(
+        self,
+        pipeline: Pipeline,
+        branch: str,
+        ephemeral: str,
+        base_commit: str,
+        params: Dict[str, Any],
+        config: PlannerConfig,
+        run_id: int,
+    ) -> Dict[str, Any]:
+        # 2. code intelligence: logical plan pinned to the base commit
+        tables_at_base = self.catalog.get_commit(base_commit).tables
+        schemas = {}
+        snapshots: Dict[str, Snapshot] = {}
+        for name in pipeline.external_sources():
+            if name not in tables_at_base:
+                raise KeyError(
+                    f"pipeline references table {name!r} missing at commit "
+                    f"{base_commit[:12]} on branch {branch!r}"
+                )
+            snap = self.fmt.load_snapshot(tables_at_base[name])
+            snapshots[name] = snap
+            schemas[name] = snap.schema
+        logical = build_logical_plan(pipeline, external_schemas=schemas)
+        ctx = RunContext(branch, run_id, params)
+        plan = build_physical_plan(logical, snapshots, config=config, ctx=ctx)
+        log.info("\n%s", plan.describe())
+
+        # 3. transform: execute stages through the serverless executor
+        env: Dict[str, Columnar] = {}  # in-memory artifact cache (locality)
+        artifacts: Dict[str, str] = {}
+        checks: Dict[str, bool] = {}
+        bytes_before = self.fmt.store.stats.snapshot()
+        for stage in plan.stages:
+            inputs: List[Columnar] = []
+            for table in sorted(stage.scans):
+                data = execute_scan(self.fmt, stage.scans[table].plan)
+                inputs.append(Columnar.from_numpy(data))
+            for name in stage.internal_inputs:
+                if name in env:  # data locality: reuse in-memory artifact
+                    inputs.append(env[name])
+                else:  # fallback: read back from the ephemeral branch
+                    key = self.catalog.table_key(name, branch=ephemeral)
+                    inputs.append(
+                        Columnar.from_numpy(self.fmt.read(self.fmt.load_snapshot(key)))
+                    )
+            spec = FunctionSpec(
+                name=f"{pipeline.name}/stage{stage.stage_id}",
+                fn=stage.fn,
+                static_config={"fingerprint": stage.fingerprint},
+                resources=stage.resources,
+            )
+            outputs, stage_checks = self.executor.run(spec, *inputs)
+            for cname, val in stage_checks.items():
+                checks[cname] = bool(np.asarray(val))
+            updates: Dict[str, Optional[str]] = {}
+            for name, rel in outputs.items():
+                env[name] = rel
+                compact = rel.to_numpy(compact=True)
+                schema = Schema(
+                    tuple(
+                        Column(c, str(compact[c].dtype)) for c in sorted(compact)
+                    )
+                )
+                snap = self.fmt.write(name, schema, compact)
+                key = self.fmt.manifest_key(snap)
+                artifacts[name] = key
+                updates[name] = key
+            if updates:
+                self.catalog.commit(
+                    ephemeral, updates,
+                    message=f"run {run_id} stage {stage.stage_id}",
+                    author="runner",
+                )
+        bytes_after = self.fmt.store.stats.snapshot()
+        io_delta = {
+            k: bytes_after[k] - bytes_before[k] for k in bytes_after
+        }
+        return {
+            "plan": plan,
+            "artifacts": artifacts,
+            "checks": checks,
+            "io": io_delta,
+        }
+
+    def _record(
+        self,
+        run_id: int,
+        pipeline: Pipeline,
+        branch: str,
+        base_commit: str,
+        params: Dict[str, Any],
+        result: Dict[str, Any],
+        *,
+        merged: Optional[str],
+        t_start: float,
+    ) -> RunRecord:
+        rec = RunRecord(
+            run_id=run_id,
+            pipeline_name=pipeline.name,
+            pipeline_fingerprint=pipeline.fingerprint,
+            branch=branch,
+            base_commit=base_commit,
+            params=params,
+            artifacts=result["artifacts"],
+            checks=result["checks"],
+            merged_commit=merged,
+            fused=result["plan"].config.fusion,
+            stats={
+                "wall_s": time.perf_counter() - t_start,
+                "stages": len(result["plan"].stages),
+                "io": result["io"],
+                "executor": self.executor.stats(),
+            },
+            created_at=time.time(),
+        )
+        self.registry.record(rec)
+        return rec

@@ -1,0 +1,86 @@
+"""Run snapshotting + replay (paper 4.4.1, 4.6).
+
+Every run is assigned an id and an immutable record: pipeline fingerprint,
+base data commit, parameters, produced artifact keys, and execution stats.
+"The same code on the same data version will produce identical results" —
+``Runner.replay`` re-executes a recorded run against its pinned commit and
+the tests assert snapshot-id equality (bit-for-bit reproducibility).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.io.objectstore import ObjectStore
+
+_RUN_NS = "runs"
+_COUNTER = "run_counter"
+
+
+@dataclass(frozen=True)
+class RunRecord:
+    run_id: int
+    pipeline_name: str
+    pipeline_fingerprint: str
+    branch: str
+    base_commit: str
+    params: Dict[str, Any]
+    #: artifact name -> snapshot manifest key
+    artifacts: Dict[str, str]
+    checks: Dict[str, bool]
+    merged_commit: Optional[str]
+    fused: bool
+    stats: Dict[str, Any]
+    created_at: float
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "run_id": self.run_id,
+            "pipeline_name": self.pipeline_name,
+            "pipeline_fingerprint": self.pipeline_fingerprint,
+            "branch": self.branch,
+            "base_commit": self.base_commit,
+            "params": self.params,
+            "artifacts": self.artifacts,
+            "checks": self.checks,
+            "merged_commit": self.merged_commit,
+            "fused": self.fused,
+            "stats": self.stats,
+            "created_at": self.created_at,
+        }
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "RunRecord":
+        return RunRecord(**d)
+
+
+@dataclass
+class RunRegistry:
+    """The Postgres-of-spare-parts: run records as refs in the store."""
+
+    store: ObjectStore
+
+    def next_run_id(self) -> int:
+        for _ in range(1000):
+            cur = self.store.get_ref(_RUN_NS, _COUNTER)  # None on first run
+            val = (cur or {"value": 0})["value"] + 1
+            if self.store.compare_and_set_ref(_RUN_NS, _COUNTER, cur, {"value": val}):
+                return val
+        raise RuntimeError("run-id contention")
+
+    def record(self, rec: RunRecord) -> None:
+        self.store.set_ref(_RUN_NS, f"run_{rec.run_id}", rec.to_json_dict())
+
+    def get(self, run_id: int) -> RunRecord:
+        raw = self.store.get_ref(_RUN_NS, f"run_{run_id}")
+        if raw is None:
+            raise KeyError(f"no run record for id {run_id}")
+        return RunRecord.from_json_dict(raw)
+
+    def all_runs(self) -> List[RunRecord]:
+        out = []
+        for name, raw in self.store.list_refs(_RUN_NS).items():
+            if name.startswith("run_"):
+                out.append(RunRecord.from_json_dict(raw))
+        return sorted(out, key=lambda r: r.run_id)

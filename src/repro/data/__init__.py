@@ -1,0 +1,3 @@
+from repro.data.tokens import TokenDataset, write_token_table
+
+__all__ = ["TokenDataset", "write_token_table"]

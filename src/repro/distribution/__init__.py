@@ -1,0 +1,34 @@
+"""Distribution layer: mesh axes, sharding rules, gradient compression.
+
+Parallelism map (DESIGN.md §5):
+  DP    batch over ("pod", "data")
+  FSDP  parameters + optimizer state sharded over "data" (ZeRO-ish)
+  TP    head/FFN dims over "model" (Megatron column/row)
+  EP    MoE experts over "model" (fallback: expert-internal TP)
+  SP    long-context KV/state over "data" when batch=1
+"""
+from repro.distribution.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    param_shardings,
+    batch_shardings,
+    state_shardings,
+    constrain,
+)
+from repro.distribution.compression import (
+    CompressionState,
+    init_compression,
+    compress_decompress,
+)
+
+__all__ = [
+    "ShardingRules",
+    "DEFAULT_RULES",
+    "param_shardings",
+    "batch_shardings",
+    "state_shardings",
+    "constrain",
+    "CompressionState",
+    "init_compression",
+    "compress_decompress",
+]

@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback.
+
+On a real multi-slice deployment the DP gradient all-reduce crosses the
+(slow) DCN between pods; quantizing to int8 cuts those bytes 4x.  The
+error-feedback accumulator keeps the quantization *unbiased over time*
+(residuals are re-added next step), which is what makes compressed SGD
+converge like exact SGD.
+
+Under single-program SPMD we express the transform at the value level
+(quantize → dequantize around the reduction the compiler inserts); the
+bytes saving is realized by the collective implementation on hardware.
+Tests verify the error-feedback contraction property.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CompressionState = Any  # pytree of f32 residuals, same structure as grads
+
+
+def init_compression(grads_like: Any) -> CompressionState:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like
+    )
+
+
+def _quantize_leaf(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    g32 = g.astype(jnp.float32) + err  # error feedback
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = g32 - deq  # residual carried to the next step
+    return deq.astype(g.dtype), new_err
+
+
+def compress_decompress(
+    grads: Any, state: CompressionState
+) -> Tuple[Any, CompressionState]:
+    """Apply int8+EF quantization leaf-wise. Returns (grads', new_state)."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(state)
+    out_g, out_e = [], []
+    for g, e in zip(flat_g, flat_e):
+        dg, de = _quantize_leaf(g, e)
+        out_g.append(dg)
+        out_e.append(de)
+    return (
+        jax.tree_util.tree_unflatten(treedef, out_g),
+        jax.tree_util.tree_unflatten(treedef, out_e),
+    )

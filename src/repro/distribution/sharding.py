@@ -1,0 +1,374 @@
+"""Sharding rules: parameter-path patterns → PartitionSpecs with fallbacks.
+
+Rules are ordered ``(regex, candidates)`` where each candidate is a tuple
+of mesh-axis names (or None) per trailing dimension.  The first candidate
+whose every named axis divides the corresponding dim is chosen; otherwise
+the dim is replicated.  This fallback chain is how e.g. qwen2-moe's 60
+experts (not divisible by model=16) degrade gracefully from EP to
+expert-internal TP without per-arch special cases.
+
+Stacked-segment leaves (under ``seg*/``) carry a leading layer dim that is
+never sharded — the matcher prepends None automatically.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import tree_map_with_path_str
+
+Axis = Optional[str]
+Candidate = Tuple[Axis, ...]
+
+
+#: ("data",) means FSDP over the data axis; ("model",) is tensor parallel.
+#: Multi-axis entries like ("data", "model") shard one dim over both.
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: Tuple[Tuple[str, Tuple[Candidate, ...]], ...]
+    #: batch axes for activations/inputs
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    #: axis to shard long sequences over when batch is unshardable
+    seq_axis: str = "data"
+    #: tensor-parallel axis for activation constraints (None = no TP)
+    tp_axis: Optional[str] = "model"
+    #: Megatron-style sequence sharding of residual activations
+    seq_shard: bool = True
+    name: str = "default"
+
+    def spec_for(self, path: str, shape: Sequence[int], mesh: Mesh) -> P:
+        trailing = list(shape)
+        if re.search(r"(^|/)seg\d+/", path):  # stacked layer dim: unsharded
+            trailing = trailing[1:]
+        for pattern, candidates in self.rules:
+            if re.search(pattern, path):
+                chosen = _first_fitting(candidates, trailing, mesh)
+                if chosen is None:
+                    chosen = (None,) * len(trailing)
+                if len(trailing) != len(shape):
+                    chosen = (None,) + tuple(chosen)
+                return P(*chosen)
+        return P()  # replicate by default (norms, scalars)
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _first_fitting(
+    candidates: Tuple[Candidate, ...], shape: Sequence[int], mesh: Mesh
+) -> Optional[Candidate]:
+    for cand in candidates:
+        if len(cand) != len(shape):
+            continue
+        ok = True
+        for dim, axis in zip(shape, cand):
+            if axis is None:
+                continue
+            size = _axis_size(mesh, axis)
+            if size == 0 or dim % size != 0:
+                ok = False
+                break
+            # axis must exist in this mesh
+            names = axis if isinstance(axis, tuple) else (axis,)
+            if any(a not in mesh.shape for a in names):
+                ok = False
+                break
+        if ok:
+            return cand
+    return None
+
+
+DEFAULT_RULES = ShardingRules(
+    rules=(
+        # --- embeddings / output heads: vocab over model (Megatron-style),
+        #     embed dim over data (FSDP); fall back to data-only.
+        (r"embed(/cb\d+)?/table", ((("model"), ("data")), (None, ("data")), (None, None))),
+        (r"(lm_head|heads/cb\d+)/w", ((("data"), ("model")), (None, ("model")), (None, None))),
+        # --- MoE experts: EP first (experts over model), else expert TP
+        (r"moe/experts/(gate|up)", (
+            (("model"), ("data"), None),      # EP + FSDP on d_in
+            (None, ("data"), ("model")),      # expert-internal TP on d_ff
+            (None, None, ("model")),
+            (None, None, None),
+        )),
+        (r"moe/experts/down", (
+            (("model"), None, ("data")),
+            (None, ("model"), ("data")),
+            (None, ("model"), None),
+            (None, None, None),
+        )),
+        (r"moe/router/w", ((("data"), None), (None, None))),
+        (r"moe/shared/(gate|up)/w", ((("data"), ("model")), (None, ("model")), (None, None))),
+        (r"moe/shared/down/w", ((("model"), ("data")), (("model"), None), (None, None))),
+        # --- attention: column-parallel qkv, row-parallel out
+        (r"attn/w(q|k|v)(_b)?/w", ((("data"), ("model")), (None, ("model")), (None, None))),
+        (r"attn/wo/w", ((("model"), ("data")), (("model"), None), (None, None))),
+        (r"attn/w(q|kv)_a/w", ((("data"), None), (None, None))),
+        # --- dense MLPs: column then row
+        (r"mlp/(gate|up)/w", ((("data"), ("model")), (None, ("model")), (None, None))),
+        (r"mlp/down/w", ((("model"), ("data")), (("model"), None), (None, None))),
+        # --- recurrent blocks: inner dim over model where divisible
+        (r"mix/(up|wq|wk|wv|w_in|w_gate|up_gate)/w", ((("data"), ("model")), (None, ("model")), (None, None))),
+        (r"mix/(down|w_out)/w", ((("model"), ("data")), (("model"), None), (None, None))),
+        (r"mix/(wi|wf|wx|wr|w_a|w_x)/w", ((("data"), None), (None, None))),
+        (r"mtp/proj/w", ((("data"), ("model")), (None, None))),
+    ),
+)
+
+
+#: Pure-FSDP profile (§Perf iteration for collective-bound dense train):
+#: batch shards over EVERY mesh axis, parameters fully shard over
+#: (data, model) with no tensor parallelism — per-step collectives are
+#: O(param bytes) all-gathers + grad reduce-scatters instead of
+#: O(activations × layers) TP reductions.  MoE archs keep DEFAULT_RULES
+#: (experts must stay distributed); this profile suits dense ≤ ~40B.
+FSDP_RULES = ShardingRules(
+    rules=(
+        (
+            r"",  # every parameter: fully shard, fall back gracefully
+            (
+                ("data", "model"),
+                ("data", None),
+                (None, "model"),
+                (None, None),
+                ("data", "model", None),
+                (None, "data", "model"),
+                (None, None, None),
+                (None,),
+            ),
+        ),
+    ),
+    batch_axes=("pod", "data", "model"),
+    seq_axis="model",
+    tp_axis=None,
+    seq_shard=False,
+    name="fsdp",
+)
+
+RULE_PROFILES = {"default": DEFAULT_RULES, "fsdp": FSDP_RULES}
+
+
+# ------------------------------------------------------------------ helpers
+def param_shardings(
+    rules: ShardingRules, mesh: Mesh, abstract_params: Any
+) -> Any:
+    """Map an abstract param tree to NamedShardings."""
+
+    def assign(path: str, leaf: Any):
+        spec = rules.spec_for(path, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return tree_map_with_path_str(assign, abstract_params)
+
+
+def batch_shardings(rules: ShardingRules, mesh: Mesh, abstract_batch: Any) -> Any:
+    """Inputs: batch dim over batch_axes (falls back to replication for
+    unshardable batch=1 long-context cells)."""
+    axes = tuple(a for a in rules.batch_axes if a in mesh.shape)
+
+    def assign(path: str, leaf: Any):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        if size > 1 and b % size == 0:
+            return NamedSharding(mesh, P(axes, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return tree_map_with_path_str(assign, abstract_batch)
+
+
+def state_shardings(rules: ShardingRules, mesh: Mesh, abstract_state: Any) -> Any:
+    """Decode caches: (layers, B, heads, S, D)-style leaves.
+
+    Batch over batch_axes when divisible; otherwise shard the *sequence*
+    axis (dim -2 for attention caches) over seq_axis — sequence-parallel
+    serving for the batch=1 long-context cells.  The "model" axis shards
+    the heads dim when it divides.
+    """
+    axes = tuple(a for a in rules.batch_axes if a in mesh.shape)
+    batch_size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    model_size = mesh.shape.get("model", 1)
+    seq_ok = rules.seq_axis in mesh.shape
+
+    def assign(path: str, leaf: Any):
+        shape = leaf.shape
+        if len(shape) < 2:
+            return NamedSharding(mesh, P())
+        spec: List[Any] = [None] * len(shape)
+        # leading dim is the stacked-layer dim for seg* state
+        bdim = 1 if re.search(r"(^|/)seg\d+/", path) else 0
+        if bdim < len(shape) and shape[bdim] % max(batch_size, 1) == 0 and batch_size > 1:
+            spec[bdim] = axes
+        elif len(shape) >= 4 and seq_ok and shape[-2] % mesh.shape[rules.seq_axis] == 0:
+            spec[-2] = rules.seq_axis  # sequence-parallel cache (batch=1)
+        # 5-D kv caches (L,B,H,S,D): heads over model when divisible,
+        # otherwise shard the SEQUENCE dim over model — softmax/contraction
+        # over a sharded cache axis partial-reduces cleanly under GSPMD
+        # (§Perf iteration: unsharded caches blew past HBM on MHA archs)
+        if len(shape) == 5 and model_size > 1:
+            if shape[2] % model_size == 0:
+                spec[2] = "model"
+            elif spec[3] is None and shape[3] % model_size == 0:
+                spec[3] = "model"
+        # 4-D latent caches (L,B,S,dkv): sequence over model
+        if (
+            len(shape) == 4
+            and bdim == 1
+            and model_size > 1
+            and spec[2] is None
+            and shape[2] % model_size == 0
+        ):
+            spec[2] = "model"
+        if len(shape) == 4 and bdim == 0 and model_size > 1 and shape[1] % model_size == 0:
+            spec[1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_map_with_path_str(assign, abstract_state)
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """Sharding constraint that no-ops outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context.
+#
+# FSDP shards parameters' non-TP dim over "data" while activations shard
+# their *batch* dim over the same axis.  Without explicit anchors GSPMD may
+# resolve the conflict the wrong way round (replicating activations and
+# keeping weights sharded — catastrophic for activation memory).  The model
+# calls ``constrain_batch``/``constrain_logits`` at block boundaries; when a
+# mesh is registered here, those pin activations to batch-over-data and
+# force the compiler to all-gather weights instead (the ZeRO dataflow).
+# No mesh registered (single-device tests/examples) → exact no-op.
+_ACT_MESH: Optional[Mesh] = None
+_ACT_BATCH_AXES: Tuple[str, ...] = ()
+_ACT_TP_AXIS: Optional[str] = None
+_ACT_SEQ_SHARD: bool = False
+
+
+def set_activation_mesh(
+    mesh: Optional[Mesh],
+    *,
+    batch_axes: Tuple[str, ...] = ("pod", "data"),
+    tp_axis: Optional[str] = "model",
+    seq_shard: bool = True,
+) -> None:
+    """Register the mesh for activation constraints.
+
+    ``seq_shard=True`` additionally shards the *sequence* dim of
+    residual-stream activations over the TP axis (Megatron sequence
+    parallelism): the per-layer scan checkpoints shrink by the TP degree,
+    which is what makes remat-full fit HBM at 4k×256 batches.
+    """
+    global _ACT_MESH, _ACT_BATCH_AXES, _ACT_TP_AXIS, _ACT_SEQ_SHARD
+    _ACT_MESH = mesh
+    _ACT_SEQ_SHARD = seq_shard
+    if mesh is not None:
+        _ACT_BATCH_AXES = tuple(a for a in batch_axes if a in mesh.shape)
+        _ACT_TP_AXIS = tp_axis if (tp_axis and tp_axis in mesh.shape) else None
+    else:
+        _ACT_BATCH_AXES = ()
+        _ACT_TP_AXIS = None
+
+
+def _batch_spec_for(x: jax.Array) -> Optional[P]:
+    if _ACT_MESH is None or not _ACT_BATCH_AXES:
+        return None
+    size = int(np.prod([_ACT_MESH.shape[a] for a in _ACT_BATCH_AXES]))
+    if x.ndim == 0 or x.shape[0] % size != 0 or size == 1:
+        return None
+    return P(_ACT_BATCH_AXES, *([None] * (x.ndim - 1)))
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim0 (batch) to the data axes; optionally dim1 (sequence) to
+    the TP axis (sequence parallelism) for 3-D residual activations."""
+    spec = _batch_spec_for(x)
+    if spec is None:
+        return x
+    parts = list(spec)
+    if (
+        _ACT_SEQ_SHARD
+        and _ACT_TP_AXIS is not None
+        and x.ndim == 3
+        and x.shape[1] % _ACT_MESH.shape[_ACT_TP_AXIS] == 0
+    ):
+        parts[1] = _ACT_TP_AXIS
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*parts))
+    )
+
+
+def constrain_moe_buffer(x: jax.Array) -> jax.Array:
+    """MoE expert tensors (B, E, C[, d]): batch over data, experts over
+    the TP axis (expert parallelism) — the all-to-all boundary under
+    pjit.  Works for both the int32 routing table (3-D) and the expert
+    input/output buffers (4-D)."""
+    if _ACT_MESH is None:
+        return x
+    spec = _batch_spec_for(x)
+    parts = list(spec) if spec is not None else [None] * x.ndim
+    if (
+        _ACT_TP_AXIS is not None
+        and x.ndim in (3, 4)
+        and x.shape[1] % _ACT_MESH.shape[_ACT_TP_AXIS] == 0
+    ):
+        parts[1] = _ACT_TP_AXIS
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*parts))
+    )
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """Attention tensors (B, H, S, D): batch over data, heads over the TP
+    axis when the head count divides it (q always; kv only for MHA-kv)."""
+    if _ACT_MESH is None or x.ndim != 4:
+        return x
+    spec = _batch_spec_for(x)
+    parts = list(spec) if spec is not None else [None] * x.ndim
+    if (
+        _ACT_TP_AXIS is not None
+        and x.shape[1] % _ACT_MESH.shape[_ACT_TP_AXIS] == 0
+    ):
+        parts[1] = _ACT_TP_AXIS
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*parts))
+    )
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    """Logits: batch over data axes, vocab (last dim) over the TP axis."""
+    if _ACT_MESH is None:
+        return x
+    spec = _batch_spec_for(x)
+    parts = list(spec) if spec is not None else [None] * x.ndim
+    if (
+        _ACT_TP_AXIS is not None
+        and x.shape[-1] % _ACT_MESH.shape[_ACT_TP_AXIS] == 0
+    ):
+        parts[-1] = _ACT_TP_AXIS
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_ACT_MESH, P(*parts))
+    )

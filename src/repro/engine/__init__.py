@@ -1,0 +1,28 @@
+"""Columnar query engine in JAX — the "duckdb from spare parts" (paper 4.5).
+
+A deliberately small analytical engine whose operators are pure JAX
+functions over fixed-shape columnar batches, so that the code-intelligence
+layer can FUSE a whole pipeline stage chain (scan → filter → aggregate →
+python expectation) into one XLA program — the paper's 4.4.2 optimization.
+
+Key design point for JIT stability: a relation is a `Columnar` — columns of
+identical length plus a validity mask.  Filters flip validity bits instead
+of shrinking arrays, so every operator is shape-preserving and fusable.
+"""
+from repro.engine.columnar import Columnar
+from repro.engine.expr import Expr, col, lit
+from repro.engine.query import Agg, Query
+from repro.engine.exec import execute_query, compile_query
+from repro.engine.sql import parse_sql
+
+__all__ = [
+    "Columnar",
+    "Expr",
+    "col",
+    "lit",
+    "Agg",
+    "Query",
+    "execute_query",
+    "compile_query",
+    "parse_sql",
+]

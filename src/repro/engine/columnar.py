@@ -1,0 +1,118 @@
+"""The engine's relation type: fixed-shape columns + validity mask."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class Columnar:
+    """A columnar relation with masked-row semantics.
+
+    ``valid`` marks live rows; operators never change column length, they
+    only flip validity — this keeps every op shape-stable under ``jit`` and
+    lets XLA fuse chains of them without materialization (the engine-level
+    mirror of the paper's "avoid spillover to object storage").
+    """
+
+    columns: Dict[str, jax.Array]
+    valid: jax.Array  # bool[n]
+
+    # ------------------------------------------------------------- pytree
+    def tree_flatten(self):
+        names = sorted(self.columns)
+        return ([self.columns[n] for n in names] + [self.valid], names)
+
+    @classmethod
+    def tree_unflatten(cls, names, leaves):
+        return cls(dict(zip(names, leaves[:-1])), leaves[-1])
+
+    # ------------------------------------------------------------ helpers
+    @staticmethod
+    def from_arrays(columns: Dict[str, jax.Array]) -> "Columnar":
+        if not columns:
+            raise ValueError("empty relation")
+        n = len(next(iter(columns.values())))
+        for name, arr in columns.items():
+            if len(arr) != n:
+                raise ValueError(f"ragged column {name!r}")
+        return Columnar(
+            {k: jnp.asarray(v) for k, v in columns.items()},
+            jnp.ones((n,), dtype=bool),
+        )
+
+    @staticmethod
+    def from_numpy(columns: Dict[str, np.ndarray]) -> "Columnar":
+        return Columnar.from_arrays({k: jnp.asarray(v) for k, v in columns.items()})
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def names(self) -> List[str]:
+        return sorted(self.columns)
+
+    def num_valid(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def column(self, name: str) -> jax.Array:
+        if name not in self.columns:
+            raise KeyError(f"no column {name!r}; have {self.names}")
+        return self.columns[name]
+
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.column(name)
+
+    # ---------------------------------------- masked statistics (for
+    # expectations — the paper's trips['count'].mean() > 10 pattern)
+    def sum(self, name: str) -> jax.Array:
+        vals = self.column(name)
+        return jnp.sum(jnp.where(self.valid, vals, 0))
+
+    def count(self) -> jax.Array:
+        return self.num_valid()
+
+    def mean(self, name: str) -> jax.Array:
+        total = self.sum(name).astype(jnp.float32)
+        return total / jnp.maximum(self.num_valid(), 1).astype(jnp.float32)
+
+    def min(self, name: str) -> jax.Array:
+        vals = self.column(name)
+        big = jnp.array(jnp.inf, vals.dtype) if vals.dtype.kind == "f" else jnp.iinfo(vals.dtype).max
+        return jnp.min(jnp.where(self.valid, vals, big))
+
+    def max(self, name: str) -> jax.Array:
+        vals = self.column(name)
+        small = jnp.array(-jnp.inf, vals.dtype) if vals.dtype.kind == "f" else jnp.iinfo(vals.dtype).min
+        return jnp.max(jnp.where(self.valid, vals, small))
+
+    def with_columns(self, new: Dict[str, jax.Array]) -> "Columnar":
+        cols = dict(self.columns)
+        cols.update(new)
+        return Columnar(cols, self.valid)
+
+    def select(self, names: List[str]) -> "Columnar":
+        return Columnar({n: self.column(n) for n in names}, self.valid)
+
+    def mask_where(self, keep: jax.Array) -> "Columnar":
+        return Columnar(self.columns, self.valid & keep)
+
+    # --------------------------------------------------- host-side export
+    def to_numpy(self, *, compact: bool = True) -> Dict[str, np.ndarray]:
+        """Pull to host; ``compact`` drops invalid rows (data-dependent
+        shape — host-side only, never inside jit)."""
+        valid = np.asarray(self.valid)
+        out = {}
+        for name, arr in self.columns.items():
+            host = np.asarray(arr)
+            out[name] = host[valid] if compact else host
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Columnar(cols={self.names}, capacity={self.capacity})"

@@ -1,0 +1,184 @@
+"""Vectorized, jit-able execution of Query objects over Columnar batches.
+
+Every operator is shape-stable (masked-row semantics), so a full query —
+and, via core/physical.py, a *chain* of queries plus Python expectations —
+compiles to a single XLA program.  Group-by uses a sort + segment-scatter
+formulation (radix-style grouping adapted to TPU-friendly dense ops: sort,
+cumsum, scatter-add are all well-supported lax primitives).
+
+The Pallas kernel in kernels/fused_filter_agg is a drop-in for the
+filter+group+sum hot path; `execute_query` uses the pure-jnp path by
+default so results are platform-independent (the kernel is validated
+against it in tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.columnar import Columnar
+from repro.engine.query import Agg, Query
+
+def apply_filter(rel: Columnar, query: Query) -> Columnar:
+    if query.filter_expr is None:
+        return rel
+    keep = query.filter_expr.evaluate(rel.columns)
+    return rel.mask_where(keep.astype(bool))
+
+
+def apply_projection(rel: Columnar, query: Query) -> Columnar:
+    if not query.projections:
+        return rel
+    out = {alias: expr.evaluate(rel.columns) for alias, expr in query.projections}
+    return Columnar(out, rel.valid)
+
+
+def _lex_sort_perm(rel: Columnar, keys) -> jax.Array:
+    """Permutation grouping equal key tuples, valid rows first.
+
+    Lexicographic order via repeated *stable* argsort from least- to
+    most-significant key; validity is the most significant key.  Avoids
+    packing keys into one word (no x64 requirement, no range limits).
+    """
+    perm = jnp.arange(rel.capacity)
+    for k in reversed(keys):
+        kcol = rel.column(k)
+        if kcol.dtype.kind not in ("i", "u", "b"):
+            raise TypeError(f"group key {k!r} must be integer/bool, got {kcol.dtype}")
+        order = jnp.argsort(kcol[perm].astype(jnp.int32), stable=True)
+        perm = perm[order]
+    order = jnp.argsort((~rel.valid[perm]).astype(jnp.int32), stable=True)
+    return perm[order]
+
+
+def apply_groupby(rel: Columnar, query: Query, *, capacity: Optional[int] = None) -> Columnar:
+    """Sort-based grouping with static output capacity.
+
+    Output relation has ``capacity`` rows (default: input capacity); rows
+    beyond the number of distinct groups are invalid.  All ops are
+    shape-stable → fully jit/fusion compatible.
+    """
+    cap = capacity or rel.capacity
+    order = _lex_sort_perm(rel, query.group_keys)
+    sorted_valid = rel.valid[order]
+    if query.group_keys:
+        diff = jnp.zeros((rel.capacity,), bool)
+        for k in query.group_keys:
+            kcol = rel.column(k)[order]
+            diff = diff | jnp.concatenate(
+                [jnp.ones((1,), bool), kcol[1:] != kcol[:-1]]
+            )
+        is_new = diff & sorted_valid
+    else:
+        # global aggregation: one group, opened by the first (valid) row
+        is_new = sorted_valid & (jnp.arange(rel.capacity) == 0)
+    seg_id = jnp.cumsum(is_new.astype(jnp.int32)) - 1  # -1 for invalid prefix
+    seg_id = jnp.where(sorted_valid, seg_id, cap)  # route invalid to overflow slot
+    seg_id = jnp.minimum(seg_id, cap)  # overflow slot is dropped
+
+    out_cols: Dict[str, jax.Array] = {}
+    # representative group-key columns
+    for k in query.group_keys:
+        src = rel.column(k)[order]
+        out = jnp.zeros((cap + 1,), dtype=src.dtype).at[seg_id].set(src)
+        out_cols[k] = out[:cap]
+
+    counts = jnp.zeros((cap + 1,), jnp.int32).at[seg_id].add(
+        sorted_valid.astype(jnp.int32)
+    )[:cap]
+
+    for agg in query.aggregates:
+        out_cols[agg.name] = _apply_one_agg(rel, agg, order, seg_id, sorted_valid, counts, cap)
+
+    group_valid = counts > 0
+    return Columnar(out_cols, group_valid)
+
+
+def _apply_one_agg(rel, agg: Agg, order, seg_id, sorted_valid, counts, cap):
+    if agg.fn == "count":
+        return counts
+    vals = agg.expr.evaluate(rel.columns)[order]
+    if agg.fn in ("sum", "mean"):
+        # f32 accum for floats, i32 for ints (x64 is disabled jax-wide)
+        acc_dtype = vals.dtype if vals.dtype.kind == "f" else jnp.int32
+        zeroed = jnp.where(sorted_valid, vals.astype(acc_dtype), 0)
+        total = jnp.zeros((cap + 1,), acc_dtype).at[seg_id].add(zeroed)[:cap]
+        if agg.fn == "sum":
+            return total
+        return total.astype(jnp.float32) / jnp.maximum(counts, 1).astype(jnp.float32)
+    if agg.fn == "min":
+        big = _extreme(vals.dtype, +1)
+        masked = jnp.where(sorted_valid, vals, big)
+        return jnp.full((cap + 1,), big, vals.dtype).at[seg_id].min(masked)[:cap]
+    if agg.fn == "max":
+        small = _extreme(vals.dtype, -1)
+        masked = jnp.where(sorted_valid, vals, small)
+        return jnp.full((cap + 1,), small, vals.dtype).at[seg_id].max(masked)[:cap]
+    raise ValueError(f"unsupported aggregate {agg.fn!r}")
+
+
+def _extreme(dtype, sign: int):
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.array(sign * jnp.inf, dtype)
+    info = jnp.iinfo(dtype)
+    return jnp.array(info.max if sign > 0 else info.min, dtype)
+
+
+def apply_sort(rel: Columnar, query: Query) -> Columnar:
+    if not query.order_by:
+        return rel
+    # stable multi-key sort: apply keys in reverse significance order,
+    # then one final stable pass pushing invalid rows to the end
+    perm = jnp.arange(rel.capacity)
+    for column, desc in reversed(query.order_by):
+        vals = rel.column(column)[perm]
+        if vals.dtype.kind == "b":
+            vals = vals.astype(jnp.int32)
+        order = jnp.argsort(-vals if desc else vals, stable=True)
+        perm = perm[order]
+    order = jnp.argsort((~rel.valid[perm]).astype(jnp.int32), stable=True)
+    perm = perm[order]
+    return Columnar({k: v[perm] for k, v in rel.columns.items()}, rel.valid[perm])
+
+
+def apply_limit(rel: Columnar, query: Query) -> Columnar:
+    if query.limit is None or query.limit >= rel.capacity:
+        return rel
+    n = query.limit
+    return Columnar({k: v[:n] for k, v in rel.columns.items()}, rel.valid[:n])
+
+
+def execute_query(
+    query: Query, rel: Columnar, *, group_capacity: Optional[int] = None
+) -> Columnar:
+    """Interpret a Query over a Columnar. Pure function of its inputs."""
+    rel = apply_filter(rel, query)
+    if query.is_aggregation:
+        rel = apply_groupby(rel, query, capacity=group_capacity)
+        if query.projections:
+            rel = apply_projection(rel, query)
+    else:
+        rel = apply_projection(rel, query)
+    rel = apply_sort(rel, query)
+    rel = apply_limit(rel, query)
+    return rel
+
+
+@functools.lru_cache(maxsize=512)
+def _compiled_for(query: Query, group_capacity: Optional[int]) -> Callable:
+    @jax.jit
+    def run(rel: Columnar) -> Columnar:
+        return execute_query(query, rel, group_capacity=group_capacity)
+
+    return run
+
+
+def compile_query(
+    query: Query, *, group_capacity: Optional[int] = None
+) -> Callable[[Columnar], Columnar]:
+    """Return the jit-compiled executable for a query (cached — this cache
+    is the engine-level face of the runtime's warm-container cache)."""
+    return _compiled_for(query, group_capacity)

@@ -1,0 +1,108 @@
+"""Declarative query description — the logical form of one SQL node.
+
+A `Query` is data, not execution: the code-intelligence layer stores it in
+the logical plan, extracts pushdown predicates from it, and the executor
+compiles it (engine/exec.py).  One Query == one artifact, per the paper's
+one-query-one-artifact pattern (4.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.engine.expr import Expr, col
+
+_AGG_FNS = {"sum", "count", "mean", "min", "max"}
+
+
+@dataclass(frozen=True)
+class Agg:
+    """One aggregation: ``fn(expr) AS name`` (``count`` ignores expr)."""
+
+    fn: str
+    expr: Optional[Expr]
+    name: str
+
+    def __post_init__(self) -> None:
+        if self.fn not in _AGG_FNS:
+            raise ValueError(f"unsupported aggregate {self.fn!r}")
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "fn": self.fn,
+            "expr": self.expr.to_json_dict() if self.expr else None,
+            "name": self.name,
+        }
+
+
+@dataclass(frozen=True)
+class Query:
+    """SELECT projections FROM source WHERE filter
+    GROUP BY group_keys ORDER BY order_by LIMIT limit."""
+
+    source: str  # logical table name (a catalog table or a parent node)
+    projections: Tuple[Tuple[str, Expr], ...] = ()  # (alias, expr); () = *
+    filter_expr: Optional[Expr] = None
+    group_keys: Tuple[str, ...] = ()
+    aggregates: Tuple[Agg, ...] = ()
+    order_by: Tuple[Tuple[str, bool], ...] = ()  # (column, descending)
+    limit: Optional[int] = None
+
+    # ------------------------------------------------------------- builders
+    def select(self, *names: str, **named_exprs: Expr) -> "Query":
+        proj = tuple((n, col(n)) for n in names) + tuple(named_exprs.items())
+        return replace(self, projections=self.projections + proj)
+
+    def where(self, expr: Expr) -> "Query":
+        combined = expr if self.filter_expr is None else Expr("and", (self.filter_expr, expr))
+        return replace(self, filter_expr=combined)
+
+    def group_by(self, *keys: str) -> "Query":
+        return replace(self, group_keys=self.group_keys + keys)
+
+    def agg(self, fn: str, expr: Optional[Expr], name: str) -> "Query":
+        return replace(self, aggregates=self.aggregates + (Agg(fn, expr, name),))
+
+    def count(self, name: str = "counts") -> "Query":
+        return self.agg("count", None, name)
+
+    def sort(self, column: str, *, desc: bool = False) -> "Query":
+        return replace(self, order_by=self.order_by + ((column, desc),))
+
+    def take(self, n: int) -> "Query":
+        return replace(self, limit=n)
+
+    # ------------------------------------------------------------- analysis
+    @property
+    def is_aggregation(self) -> bool:
+        return bool(self.aggregates) or bool(self.group_keys)
+
+    def referenced_columns(self) -> List[str]:
+        cols: List[str] = []
+        for _, e in self.projections:
+            cols.extend(e.referenced_columns())
+        if self.filter_expr is not None:
+            cols.extend(self.filter_expr.referenced_columns())
+        cols.extend(self.group_keys)
+        for a in self.aggregates:
+            if a.expr is not None:
+                cols.extend(a.expr.referenced_columns())
+        return list(dict.fromkeys(cols))
+
+    def output_columns(self) -> List[str]:
+        if self.is_aggregation:
+            return list(self.group_keys) + [a.name for a in self.aggregates]
+        if self.projections:
+            return [alias for alias, _ in self.projections]
+        return []  # "*": depends on input schema
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "source": self.source,
+            "projections": [(a, e.to_json_dict()) for a, e in self.projections],
+            "filter": self.filter_expr.to_json_dict() if self.filter_expr else None,
+            "group_keys": list(self.group_keys),
+            "aggregates": [a.to_json_dict() for a in self.aggregates],
+            "order_by": [list(o) for o in self.order_by],
+            "limit": self.limit,
+        }

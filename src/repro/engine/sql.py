@@ -1,0 +1,255 @@
+"""A minimal SQL front-end — enough to run the paper's Appendix verbatim.
+
+Supported grammar (case-insensitive keywords)::
+
+    SELECT item [, item ...]
+    FROM table
+    [WHERE conjunct [AND conjunct ...]]
+    [GROUP BY col [, col ...]]
+    [ORDER BY col [ASC|DESC] [, ...]]
+    [LIMIT n]
+
+    item     := expr [AS alias] | COUNT(*) [AS alias] | fn(expr) [AS alias]
+    conjunct := expr cmp expr
+    expr     := col | number | string-date | expr (+|-|*|/) expr | (expr)
+
+String literals that look like ISO dates ('2019-04-01') are converted to
+integer days-since-epoch, matching how the synthetic taxi dataset stores
+``pickup_at`` — a pragmatic "spare part" standing in for full date types.
+"""
+from __future__ import annotations
+
+import datetime as _dt
+import re
+from typing import List, Optional, Tuple
+
+from repro.engine.expr import Expr, col, lit
+from repro.engine.query import Agg, Query
+
+_TOKEN_RE = re.compile(
+    r"""
+    \s*(
+        '[^']*'            # string literal
+      | [A-Za-z_][\w.]*    # identifier / keyword
+      | \d+\.\d+ | \d+     # numbers
+      | >= | <= | != | <> | = | > | <
+      | [(),*+\-/]
+    )
+    """,
+    re.VERBOSE,
+)
+
+_KEYWORDS = {"select", "from", "where", "group", "by", "order", "limit",
+             "and", "as", "asc", "desc", "count", "sum", "min", "max", "avg"}
+_AGG_KEYWORDS = {"count", "sum", "min", "max", "avg"}
+_CMP = {">=": "ge", "<=": "le", "!=": "ne", "<>": "ne", "=": "eq", ">": "gt", "<": "lt"}
+
+
+def _tokenize(sql: str) -> List[str]:
+    pos, out = 0, []
+    sql = sql.strip().rstrip(";")
+    while pos < len(sql):
+        m = _TOKEN_RE.match(sql, pos)
+        if not m:
+            raise SyntaxError(f"SQL tokenize error at: {sql[pos:pos+20]!r}")
+        out.append(m.group(1))
+        pos = m.end()
+    return out
+
+
+class _Parser:
+    def __init__(self, tokens: List[str]):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self) -> Optional[str]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def peek_kw(self) -> Optional[str]:
+        t = self.peek()
+        return t.lower() if t and t.lower() in _KEYWORDS else None
+
+    def next(self) -> str:
+        t = self.peek()
+        if t is None:
+            raise SyntaxError("unexpected end of SQL")
+        self.i += 1
+        return t
+
+    def expect_kw(self, kw: str) -> None:
+        t = self.next()
+        if t.lower() != kw:
+            raise SyntaxError(f"expected {kw.upper()}, got {t!r}")
+
+    def accept_kw(self, kw: str) -> bool:
+        if self.peek() is not None and self.peek().lower() == kw:
+            self.i += 1
+            return True
+        return False
+
+    # ------------------------------------------------------------- exprs
+    def parse_expr(self) -> Expr:
+        node = self.parse_term()
+        while self.peek() in ("+", "-"):
+            op = self.next()
+            rhs = self.parse_term()
+            node = Expr("add" if op == "+" else "sub", (node, rhs))
+        return node
+
+    def parse_term(self) -> Expr:
+        node = self.parse_atom()
+        while self.peek() in ("*", "/"):
+            op = self.next()
+            rhs = self.parse_atom()
+            node = Expr("mul" if op == "*" else "div", (node, rhs))
+        return node
+
+    def parse_atom(self) -> Expr:
+        t = self.next()
+        if t == "(":
+            e = self.parse_expr()
+            if self.next() != ")":
+                raise SyntaxError("expected )")
+            return e
+        if t.startswith("'"):
+            return lit(_string_literal_value(t[1:-1]))
+        if re.fullmatch(r"\d+\.\d+", t):
+            return lit(float(t))
+        if re.fullmatch(r"\d+", t):
+            return lit(int(t))
+        if re.fullmatch(r"[A-Za-z_][\w.]*", t):
+            # agg keywords double as identifiers unless followed by "("
+            # (the paper's own SQL aliases a column `AS count`)
+            if t.lower() not in _KEYWORDS:
+                return col(t)
+            if t.lower() in _AGG_KEYWORDS and self.peek() != "(":
+                return col(t)
+        raise SyntaxError(f"unexpected token {t!r} in expression")
+
+    def parse_comparison(self) -> Expr:
+        lhs = self.parse_expr()
+        op = self.next()
+        if op not in _CMP:
+            raise SyntaxError(f"expected comparison, got {op!r}")
+        rhs = self.parse_expr()
+        return Expr(_CMP[op], (lhs, rhs))
+
+    # ------------------------------------------------------- select items
+    def parse_select_item(self) -> Tuple[str, object]:
+        """Return (alias, Expr | Agg)."""
+        t = self.peek()
+        is_agg_call = (
+            t is not None
+            and t.lower() in _AGG_KEYWORDS
+            and self.i + 1 < len(self.toks)
+            and self.toks[self.i + 1] == "("
+        )
+        if is_agg_call:
+            fn = self.next().lower()
+            if self.next() != "(":
+                raise SyntaxError(f"expected ( after {fn}")
+            if fn == "count" and self.peek() == "*":
+                self.next()
+                inner: Optional[Expr] = None
+            else:
+                inner = self.parse_expr()
+            if self.next() != ")":
+                raise SyntaxError("expected )")
+            alias = self._maybe_alias() or fn
+            fn = {"avg": "mean"}.get(fn, fn)
+            return alias, Agg(fn, inner, alias)
+        e = self.parse_expr()
+        default = e.args[0] if e.op == "col" else "expr"
+        alias = self._maybe_alias() or default
+        return alias, e
+
+    def _maybe_alias(self) -> Optional[str]:
+        if self.accept_kw("as"):
+            return self.next()
+        # bare alias (SELECT x y) is not supported to keep grammar simple
+        return None
+
+
+def _string_literal_value(s: str) -> float:
+    """Dates → integer days since epoch; everything else must be numeric."""
+    try:
+        d = _dt.date.fromisoformat(s)
+        return float((d - _dt.date(1970, 1, 1)).days)
+    except ValueError:
+        pass
+    try:
+        return float(s)
+    except ValueError as e:
+        raise SyntaxError(
+            f"string literal {s!r} is neither a date nor a number; "
+            "the numeric engine needs encodable literals"
+        ) from e
+
+
+def parse_sql(sql: str) -> Query:
+    p = _Parser(_tokenize(sql))
+    p.expect_kw("select")
+    items: List[Tuple[str, object]] = [p.parse_select_item()]
+    while p.accept_kw(","):  # pragma: no cover - comma is not a keyword
+        items.append(p.parse_select_item())
+    while p.peek() == ",":
+        p.next()
+        items.append(p.parse_select_item())
+    p.expect_kw("from")
+    source = p.next()
+
+    q = Query(source=source)
+    projections = []
+    for alias, item in items:
+        if isinstance(item, Agg):
+            q = Query(**{**q.__dict__, "aggregates": q.aggregates + (item,)})
+        else:
+            projections.append((alias, item))
+
+    if p.accept_kw("where"):
+        e = p.parse_comparison()
+        while p.accept_kw("and"):
+            e = Expr("and", (e, p.parse_comparison()))
+        q = q.where(e)
+
+    if p.accept_kw("group"):
+        p.expect_kw("by")
+        keys = [p.next()]
+        while p.peek() == ",":
+            p.next()
+            keys.append(p.next())
+        q = q.group_by(*keys)
+        # group keys are implicitly projected; drop redundant projections
+        projections = [(a, e) for a, e in projections
+                       if not (e.op == "col" and e.args[0] in keys and a == e.args[0])]
+        if projections:
+            raise SyntaxError(
+                "non-key, non-aggregate projections in GROUP BY query: "
+                f"{[a for a, _ in projections]}"
+            )
+    elif projections:
+        if q.aggregates and len(projections) != len(items):
+            raise SyntaxError("mixing aggregates and plain columns needs GROUP BY")
+        q = Query(**{**q.__dict__, "projections": tuple(projections)})
+
+    if p.accept_kw("order"):
+        p.expect_kw("by")
+        while True:
+            name = p.next()
+            desc = False
+            if p.accept_kw("desc"):
+                desc = True
+            elif p.accept_kw("asc"):
+                desc = False
+            q = q.sort(name, desc=desc)
+            if p.peek() == ",":
+                p.next()
+                continue
+            break
+
+    if p.accept_kw("limit"):
+        q = q.take(int(p.next()))
+
+    if p.peek() is not None:
+        raise SyntaxError(f"trailing tokens: {p.toks[p.i:]}")
+    return q

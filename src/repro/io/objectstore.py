@@ -1,0 +1,166 @@
+"""Content-addressed object store — the local-filesystem stand-in for S3.
+
+Design points lifted from the paper:
+
+* **Immutability**: objects are keyed by content hash; a key never changes
+  meaning.  This is what makes catalog branches, time travel and run replay
+  (4.3, 4.4.1) trivially correct — a snapshot is just a set of keys.
+* **Object storage as last resort** (4.5): the store counts puts/gets/bytes
+  so the physical planner and benchmarks can *prove* fusion avoided
+  spillover (the paper's 5x claim is about exactly this).
+* Namespaced refs: small mutable pointers (branch heads) live in a separate
+  ref space with atomic swap semantics, mirroring how Nessie keeps branch
+  heads apart from immutable commits.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+from repro.utils.hashing import content_hash
+
+
+@dataclass
+class StoreStats:
+    """Telemetry: the 'bytes moved' ledger used by planner + benchmarks."""
+
+    puts: int = 0
+    gets: int = 0
+    bytes_written: int = 0
+    bytes_read: int = 0
+    ref_updates: int = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return {
+            "puts": self.puts,
+            "gets": self.gets,
+            "bytes_written": self.bytes_written,
+            "bytes_read": self.bytes_read,
+            "ref_updates": self.ref_updates,
+        }
+
+
+@dataclass
+class ObjectStore:
+    """A content-addressed blob store rooted at a local directory.
+
+    Layout::
+
+        root/
+          objects/ab/cdef....        # immutable blobs, sharded by prefix
+          refs/<namespace>/<name>    # small mutable pointers (JSON)
+    """
+
+    root: Path
+    stats: StoreStats = field(default_factory=StoreStats)
+
+    def __post_init__(self) -> None:
+        self.root = Path(self.root)
+        (self.root / "objects").mkdir(parents=True, exist_ok=True)
+        (self.root / "refs").mkdir(parents=True, exist_ok=True)
+        # RLock: compare_and_set_ref holds the lock across get_ref/set_ref,
+        # and set_ref bumps stats under the same lock.
+        self._lock = threading.RLock()
+
+    # ------------------------------------------------------------------ blobs
+    def _object_path(self, key: str) -> Path:
+        return self.root / "objects" / key[:2] / key[2:]
+
+    def put(self, data: bytes) -> str:
+        """Store a blob, return its content address. Idempotent."""
+        key = content_hash(data)
+        path = self._object_path(key)
+        with self._lock:
+            self.stats.puts += 1
+            self.stats.bytes_written += len(data)
+        if path.exists():  # content-addressed: already present, done.
+            return key
+        path.parent.mkdir(parents=True, exist_ok=True)
+        # Write-then-rename for atomicity (a crashed writer never leaves a
+        # half-object visible — required for checkpoint fault tolerance).
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent), prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return key
+
+    def get(self, key: str) -> bytes:
+        path = self._object_path(key)
+        data = path.read_bytes()
+        actual = content_hash(data)
+        if actual != key:
+            raise IOError(f"object store corruption: key={key} hash={actual}")
+        with self._lock:
+            self.stats.gets += 1
+            self.stats.bytes_read += len(data)
+        return data
+
+    def exists(self, key: str) -> bool:
+        return self._object_path(key).exists()
+
+    def keys(self) -> Iterator[str]:
+        objects = self.root / "objects"
+        for shard in sorted(objects.iterdir()):
+            if shard.is_dir():
+                for obj in sorted(shard.iterdir()):
+                    yield shard.name + obj.name
+
+    # ------------------------------------------------------------------- refs
+    def _ref_path(self, namespace: str, name: str) -> Path:
+        safe = name.replace("/", "__")
+        return self.root / "refs" / namespace / safe
+
+    def set_ref(self, namespace: str, name: str, value: Dict) -> None:
+        path = self._ref_path(namespace, name)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(path.parent), prefix=".tmp-")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(value, f, sort_keys=True)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        with self._lock:
+            self.stats.ref_updates += 1
+
+    def get_ref(self, namespace: str, name: str) -> Optional[Dict]:
+        path = self._ref_path(namespace, name)
+        if not path.exists():
+            return None
+        return json.loads(path.read_text())
+
+    def delete_ref(self, namespace: str, name: str) -> None:
+        path = self._ref_path(namespace, name)
+        if path.exists():
+            path.unlink()
+
+    def list_refs(self, namespace: str) -> Dict[str, Dict]:
+        ns = self.root / "refs" / namespace
+        if not ns.exists():
+            return {}
+        out = {}
+        for p in sorted(ns.iterdir()):
+            if p.is_file() and not p.name.startswith(".tmp-"):
+                out[p.name.replace("__", "/")] = json.loads(p.read_text())
+        return out
+
+    def compare_and_set_ref(
+        self, namespace: str, name: str, expected: Optional[Dict], value: Dict
+    ) -> bool:
+        """Atomic CAS on a ref — the primitive behind safe branch updates."""
+        with self._lock:
+            current = self.get_ref(namespace, name)
+            if current != expected:
+                return False
+            self.set_ref(namespace, name, value)
+            return True

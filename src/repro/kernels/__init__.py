@@ -1,0 +1,22 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Three kernels, each a `<name>/` subpackage with:
+
+* ``kernel.py`` — the pl.pallas_call body with explicit BlockSpec VMEM tiling
+* ``ops.py``    — the jit'd public wrapper (padding, reshaping, GQA mapping)
+* ``ref.py``    — the pure-jnp oracle the tests sweep against
+
+1. ``fused_filter_agg`` — the paper's 4.4.2 optimization as a single VMEM
+   pass: predicate + masked grouped aggregation without materializing the
+   filtered intermediate.  TPU adaptation of a row-wise CPU pipeline:
+   one-hot compare against the group lane axis, block-accumulated over a
+   sequential grid (no scatter — dense MXU/VPU-friendly ops).
+2. ``flash_attention`` — blockwise online-softmax causal attention
+   (training + prefill), with optional sliding window (SWA archs).
+3. ``decode_attention`` — single-token attention against a long KV cache,
+   S-blocked with running-max/denominator accumulators (serving).
+
+Kernels are validated in interpret mode on CPU (the container has no TPU);
+the pure-JAX reference path is the default in the models so numerical
+behaviour is platform-independent, with kernels switchable via config.
+"""

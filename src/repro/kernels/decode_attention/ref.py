@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: one-token attention over a (possibly padded) KV cache."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,        # (B, H, D) — the single new token's queries
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    lengths: jax.Array,  # (B,) int32 — valid cache entries per sequence
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, h, d = q.shape
+    hkv, s = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    k = jnp.repeat(k_cache, group, axis=1)
+    v = jnp.repeat(v_cache, group, axis=1)
+    scores = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    valid = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", weights, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (None = full)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    weights = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", weights, v.astype(jnp.float32))
+    return out.astype(q.dtype)

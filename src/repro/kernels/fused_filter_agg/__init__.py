@@ -1,0 +1,4 @@
+from repro.kernels.fused_filter_agg.ops import fused_filter_agg
+from repro.kernels.fused_filter_agg.ref import fused_filter_agg_ref
+
+__all__ = ["fused_filter_agg", "fused_filter_agg_ref"]

@@ -1,0 +1,116 @@
+"""Pallas kernel: fused filter + grouped aggregation in one VMEM pass.
+
+TPU adaptation of the paper's 4.4.2 fusion (filter pushdown + in-place
+aggregation).  A CPU engine would stream rows through a predicate then a
+hash aggregate; on TPU we instead:
+
+* tile the row stream into ``(ROWS, 128)`` VMEM blocks (lane-aligned);
+* evaluate the predicate vectorized on the VPU;
+* aggregate WITHOUT scatters: compare keys against the group lane axis
+  (a dense one-hot over ``(rows, lanes, groups)``) and contract — this
+  maps onto dense vector/matrix units instead of random HBM updates;
+* exploit the TPU's *sequential* grid to accumulate partial (sums,
+  counts) into a revisited output block, initialised at grid step 0.
+
+VMEM budget per step (defaults ROWS=8, G=256):
+  keys/vals/filt blocks: 3 × 8×128×4B = 12 KB
+  one-hot intermediate:  8×128×256×4B = 1 MB
+  accumulators:          2 × 256×4B   = 2 KB          → ~1 MB « 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: sublane rows per grid step (block covers ROWS×128 elements)
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _predicate(filt: jax.Array, op: str, threshold: float) -> jax.Array:
+    t = jnp.asarray(threshold, filt.dtype)
+    return {
+        "ge": filt >= t,
+        "gt": filt > t,
+        "le": filt <= t,
+        "lt": filt < t,
+        "eq": filt == t,
+        "ne": filt != t,
+    }[op]
+
+
+def _kernel(
+    keys_ref,      # (ROWS, 128) int32
+    vals_ref,      # (ROWS, 128) f32
+    filt_ref,      # (ROWS, 128) f32
+    sums_ref,      # (1, G) f32 accumulator (revisited block)
+    counts_ref,    # (1, G) f32 accumulator
+    *,
+    op: str,
+    threshold: float,
+    num_groups: int,
+):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    keys = keys_ref[...]
+    mask = _predicate(filt_ref[...], op, threshold)
+    vals = jnp.where(mask, vals_ref[...].astype(jnp.float32), 0.0)
+    ones = mask.astype(jnp.float32)
+
+    # dense one-hot over the group axis: (ROWS, 128, G); padded rows carry
+    # key == -1 and match nothing.
+    group_iota = jax.lax.broadcasted_iota(jnp.int32, keys.shape + (num_groups,), 2)
+    onehot = (keys[..., None] == group_iota).astype(jnp.float32)
+
+    sums_ref[...] += jnp.einsum(
+        "rcg,rc->g", onehot, vals, preferred_element_type=jnp.float32
+    )[None, :]
+    counts_ref[...] += jnp.einsum(
+        "rcg,rc->g", onehot, ones, preferred_element_type=jnp.float32
+    )[None, :]
+
+
+def fused_filter_agg_kernel(
+    keys2d: jax.Array,   # (R, 128) int32, padded rows = -1
+    vals2d: jax.Array,   # (R, 128) f32
+    filt2d: jax.Array,   # (R, 128) f32
+    *,
+    op: str,
+    threshold: float,
+    num_groups: int,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    rows = keys2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert num_groups % 128 == 0, "group axis must be lane-aligned"
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, op=op, threshold=threshold, num_groups=num_groups
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, num_groups), lambda i: (0, 0)),
+            pl.BlockSpec((1, num_groups), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+            jax.ShapeDtypeStruct((1, num_groups), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys2d, vals2d, filt2d)
+    return out[0][0], out[1][0]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the fused filter + grouped aggregation."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_OPS = ("ge", "gt", "le", "lt", "eq", "ne")
+
+
+def _mask(filter_vals: jax.Array, op: str, threshold: float) -> jax.Array:
+    t = jnp.asarray(threshold, filter_vals.dtype)
+    if op == "ge":
+        return filter_vals >= t
+    if op == "gt":
+        return filter_vals > t
+    if op == "le":
+        return filter_vals <= t
+    if op == "lt":
+        return filter_vals < t
+    if op == "eq":
+        return filter_vals == t
+    if op == "ne":
+        return filter_vals != t
+    raise ValueError(f"op must be one of {_OPS}, got {op!r}")
+
+
+def fused_filter_agg_ref(
+    keys: jax.Array,       # int32[n] group ids in [0, num_groups)
+    values: jax.Array,     # float[n]
+    filter_vals: jax.Array,  # float[n] — predicate column
+    *,
+    op: str,
+    threshold: float,
+    num_groups: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sums f32[num_groups], counts f32[num_groups]) over rows
+    passing ``filter_vals <op> threshold`` — one logical pass, no
+    intermediate filtered table."""
+    mask = _mask(filter_vals, op, threshold)
+    vals = jnp.where(mask, values.astype(jnp.float32), 0.0)
+    ones = mask.astype(jnp.float32)
+    sums = jnp.zeros((num_groups,), jnp.float32).at[keys].add(vals, mode="drop")
+    counts = jnp.zeros((num_groups,), jnp.float32).at[keys].add(ones, mode="drop")
+    return sums, counts

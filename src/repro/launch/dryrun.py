@@ -1,0 +1,388 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The os.environ lines below MUST stay before any other import — jax locks
+the device count at first initialization, and the production meshes need
+512 placeholder devices.  Nothing here allocates real tensors:
+parameters, optimizer state, caches and batches are all
+ShapeDtypeStructs; ``.lower().compile()`` proves the sharding config is
+coherent (no mismatched collectives, fits per-device memory) and yields
+the cost/memory/HLO artifacts the roofline reads.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --force
+
+Results accumulate in results/dryrun.json (cells are skipped when already
+recorded — delete the file or pass --force to redo).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, WorkloadShape, input_specs, shape_applicable
+from repro.distribution.sharding import (
+    DEFAULT_RULES,
+    batch_shardings,
+    param_shardings,
+    state_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import LM, LMConfig
+from repro.train.optimizer import AdamWConfig
+from repro.train.step import TrainStepConfig, make_train_state, make_train_step
+from repro.utils.tree import tree_size_bytes
+
+RESULTS_PATH = Path(__file__).resolve().parents[3] / "results" / "dryrun.json"
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(?:f32|f16|bf16|f64|s32|s8|u32|u8|pred|s64)\[([\d,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+_RESULT_RE = re.compile(
+    r"=\s+(f64|s64|f32|s32|u32|bf16|f16|s8|u8|pred)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\("
+)
+_TUPLE_RESULT_RE = re.compile(
+    r"=\s+\(([^)]*)\)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)\("
+)
+_GROUP_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUP_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-type result bytes + wire bytes (per device).
+
+    Result shapes in post-SPMD HLO are per-device.  Ring-algorithm wire
+    bytes per device, from result bytes R and group size N:
+      all-gather          R (N-1)/N
+      all-reduce          2R (N-1)/N
+      reduce-scatter      R (N-1)        (operand is R*N per device)
+      all-to-all          R (N-1)/N
+      collective-permute  R
+    """
+    out: Dict[str, Dict[str, float]] = {
+        c: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0}
+        for c in _COLLECTIVES
+    }
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = _RESULT_RE.search(stripped)
+        op: Optional[str] = None
+        rbytes = 0.0
+        if m:
+            op = m.group(3)
+            rbytes = _shape_bytes(m.group(1), m.group(2))
+        else:
+            mt = _TUPLE_RESULT_RE.search(stripped)
+            if mt and any(f"{c}(" in stripped for c in _COLLECTIVES):
+                op = mt.group(2)
+                for dtm in re.finditer(
+                    r"(f64|s64|f32|s32|u32|bf16|f16|s8|u8|pred)\[([\d,]*)\]",
+                    mt.group(1),
+                ):
+                    rbytes += _shape_bytes(dtm.group(1), dtm.group(2))
+        if op is None:
+            continue
+        n = 1
+        g = _GROUP_RE.search(stripped)
+        if g:
+            n = int(g.group(2))
+        else:
+            ge = _GROUP_EXPL_RE.search(stripped)
+            if ge:
+                n = len(ge.group(1).split(","))
+        if op == "collective-permute":
+            wire = rbytes  # pairwise: always moves the result, no groups
+        elif n <= 1:
+            wire = 0.0
+        elif op == "all-gather":
+            wire = rbytes * (n - 1) / n
+        elif op == "all-reduce":
+            wire = 2 * rbytes * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = rbytes * (n - 1)
+        else:  # all-to-all
+            wire = rbytes * (n - 1) / n
+        rec = out[op]
+        rec["count"] += 1
+        rec["result_bytes"] += rbytes
+        rec["wire_bytes"] += wire
+    return out
+
+
+def _train_step_cfg(arch: str) -> TrainStepConfig:
+    if arch == "deepseek_v3_671b":
+        # factored second moment + bf16 first moment: the only optimizer
+        # state that fits 671B on 512 x 16GB (see config docstring)
+        return TrainStepConfig(optimizer="adafactor")
+    return TrainStepConfig(optimizer="adamw")
+
+
+def lower_cell(
+    arch: str,
+    shape: WorkloadShape,
+    mesh,
+    *,
+    rules=DEFAULT_RULES,
+    cfg_override: Optional[LMConfig] = None,
+) -> Dict[str, Any]:
+    """Lower+compile one cell; return the roofline-relevant artifacts."""
+    cfg = cfg_override or get_config(arch)
+    model = LM(cfg)
+    t0 = time.perf_counter()
+    # pin activations to the profile's layout for this trace (sharding.py)
+    from repro.distribution.sharding import set_activation_mesh
+
+    set_activation_mesh(
+        mesh,
+        batch_axes=rules.batch_axes,
+        tp_axis=rules.tp_axis,
+        seq_shard=rules.seq_shard,
+    )
+    key = jax.random.PRNGKey(0)
+    abstract_params = jax.eval_shape(model.init, key)
+    p_sh = param_shardings(rules, mesh, abstract_params)
+    specs = input_specs(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": dict(mesh.shape),
+        "param_bytes_global": tree_size_bytes(abstract_params),
+    }
+
+    if shape.kind == "train":
+        scfg = _train_step_cfg(arch)
+        abstract_state = jax.eval_shape(
+            lambda p: make_train_state(model, p, scfg), abstract_params
+        )
+        s_sh = state_shardings_like_params(rules, mesh, abstract_params, abstract_state)
+        b_sh = batch_shardings(rules, mesh, specs)
+        step_fn = make_train_step(model, scfg)
+        lowered = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, s_sh, b_sh),
+            donate_argnums=(0, 1),
+        ).lower(abstract_params, abstract_state, specs)
+        record["optimizer"] = scfg.optimizer
+        record["state_bytes_global"] = tree_size_bytes(abstract_state)
+    elif shape.kind == "prefill":
+        b_sh = batch_shardings(rules, mesh, specs)
+
+        def prefill_fn(params, batch):
+            logits = model.forward(
+                params, batch["tokens"],
+                patch_embeds=batch.get("patch_embeds"),
+            )
+            return logits[:, -1]  # serving prefill emits last-position only
+
+        lowered = jax.jit(
+            prefill_fn, in_shardings=(p_sh, b_sh)
+        ).lower(abstract_params, specs)
+    else:  # decode
+        abstract_state = jax.eval_shape(
+            lambda: model.init_decode_state(shape.global_batch, max_len=shape.seq_len)
+        )
+        st_sh = state_shardings(rules, mesh, abstract_state)
+        b_sh = batch_shardings(rules, mesh, specs)
+
+        def serve_step(params, state, batch):
+            return model.decode_step(
+                params, state, batch["tokens"], batch["lengths"]
+            )
+
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(p_sh, st_sh, b_sh),
+            donate_argnums=(1,),
+        ).lower(abstract_params, abstract_state, specs)
+        record["decode_state_bytes_global"] = tree_size_bytes(abstract_state)
+
+    t_lower = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter()
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    record.update(
+        {
+            "ok": True,
+            "lower_s": t_lower - t0,
+            "compile_s": t_compile - t_lower,
+            # cost_analysis numbers are PER-DEVICE (post-SPMD partition)
+            "flops_per_device": float(cost.get("flops", 0.0)),
+            "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None
+                ),
+            },
+            "hlo_bytes": len(hlo),
+        }
+    )
+    print(f"  memory_analysis: {mem}")
+    print(
+        f"  cost: flops/device={record['flops_per_device']:.3e} "
+        f"bytes/device={record['bytes_per_device']:.3e}"
+    )
+    return record
+
+
+def state_shardings_like_params(rules, mesh, abstract_params, abstract_state):
+    """Optimizer state: moments shard exactly like their parameters
+    (ZeRO via inheritance); factored/scalar leaves replicate."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.utils.tree import flatten_with_paths, tree_map_with_path_str
+
+    params_flat = flatten_with_paths(abstract_params)
+    p_specs = {
+        path: rules.spec_for(path, leaf.shape, mesh)
+        for path, leaf in params_flat.items()
+    }
+
+    def assign(path: str, leaf):
+        m = re.match(r"(?:opt/)?(?:m|v|ef)/(.*)", path)
+        if not m:
+            return NamedSharding(mesh, P())  # step counters
+        sub = m.group(1)
+        fact = re.match(r"(.*)/(row|col|full)$", sub)
+        base = fact.group(1) if fact else sub
+        if base not in p_specs:
+            return NamedSharding(mesh, P())
+        pshape = params_flat[base].shape
+        parts = list(p_specs[base])
+        parts += [None] * (len(pshape) - len(parts))
+        if fact is None or fact.group(2) == "full":
+            if tuple(leaf.shape) == tuple(pshape):
+                return NamedSharding(mesh, p_specs[base])
+            return NamedSharding(mesh, P())
+        # adafactor factored moments: inherit the parent spec on the
+        # dims they keep (row drops the last dim, col the 2nd-to-last)
+        spec = parts[:-1] if fact.group(2) == "row" else parts[:-2] + [parts[-1]]
+        return NamedSharding(mesh, P(*spec))
+
+    return tree_map_with_path_str(assign, abstract_state)
+
+
+# --------------------------------------------------------------------- main
+def load_results() -> Dict[str, Any]:
+    if RESULTS_PATH.exists():
+        return json.loads(RESULTS_PATH.read_text())
+    return {}
+
+
+def save_results(results: Dict[str, Any]) -> None:
+    RESULTS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS_PATH.write_text(json.dumps(results, indent=1, sort_keys=True))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES), help="one shape")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument(
+        "--rules", default="default", choices=["default", "fsdp"],
+        help="sharding profile (fsdp = no TP, batch over all axes)",
+    )
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch.replace("-", "_")] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = load_results()
+    mesh_cache = {}
+    for multi in meshes:
+        if multi not in mesh_cache:
+            mesh_cache[multi] = make_production_mesh(multi_pod=multi)
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape_name in shapes:
+            shape = SHAPES[shape_name]
+            skip = shape_applicable(cfg, shape)
+            for multi in meshes:
+                key = f"{arch}/{shape_name}/{'multi' if multi else 'single'}"
+                if skip:
+                    results[key] = {"skipped": skip}
+                    print(f"[skip] {key}: {skip}")
+                    continue
+                if args.rules != "default":
+                    key = f"{key}@{args.rules}"
+                if key in results and results[key].get("ok") and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                try:
+                    from repro.distribution.sharding import RULE_PROFILES
+
+                    rec = lower_cell(
+                        arch, shape, mesh_cache[multi],
+                        rules=RULE_PROFILES[args.rules],
+                    )
+                    results[key] = rec
+                    print(
+                        f"  OK lower {rec['lower_s']:.1f}s compile "
+                        f"{rec['compile_s']:.1f}s"
+                    )
+                except Exception as e:  # record failure, keep going
+                    tb = traceback.format_exc(limit=20)
+                    results[key] = {"ok": False, "error": str(e)[:2000]}
+                    failures.append((key, str(e)[:200]))
+                    print(f"  FAIL {e}")
+                    print(tb[-1500:])
+                save_results(results)
+    print("\n=== dry-run summary ===")
+    done = sum(1 for v in results.values() if v.get("ok"))
+    skipped = sum(1 for v in results.values() if "skipped" in v)
+    failed = [(k, v) for k, v in results.items() if v.get("ok") is False]
+    print(f"ok={done} skipped={skipped} failed={len(failed)}")
+    for k, v in failed:
+        print(f"  FAIL {k}: {v.get('error', '')[:160]}")
+
+
+if __name__ == "__main__":
+    main()

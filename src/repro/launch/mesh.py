@@ -1,0 +1,30 @@
+"""Production meshes.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets the 512-placeholder-device
+flag before any jax initialization, and tests import this module with a
+single real device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods).
+
+    Axis roles: "pod" × "data" carry data parallelism (gradients reduce
+    hierarchically: reduce-scatter intra-pod over ICI, all-reduce across
+    pods over DCN); "model" carries TP/EP/sequence sharding.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model: int = 1):
+    """Tiny mesh over however many devices this host actually has —
+    used by tests and the single-host examples."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

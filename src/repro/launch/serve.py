@@ -1,0 +1,54 @@
+"""Serving launcher: batched greedy generation for an assigned arch.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --smoke \
+      --prompts 3 --new-tokens 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import LM
+from repro.serve import Request, ServeConfig, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {[a.replace('_','-') for a in ARCH_IDS]}")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--prompts", type=int, default=3)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.n_codebooks > 1:
+        raise SystemExit("codebook serving demo not wired; see tests")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    recurrent = {"mlstm", "slstm", "rec"} & {
+        k for unit, _ in cfg.segments for k in unit
+    }
+    max_batch = 1 if recurrent else args.max_batch
+    engine = ServeEngine(
+        model, params, ServeConfig(max_batch=max_batch, max_len=64)
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(
+            prompt=rng.integers(1, cfg.vocab, rng.integers(1, 5)).astype(np.int32),
+            max_new_tokens=args.new_tokens,
+        )
+        for _ in range(args.prompts)
+    ]
+    engine.generate(reqs)
+    for i, r in enumerate(reqs):
+        print(f"req{i}: {r.prompt.tolist()} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

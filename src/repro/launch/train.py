@@ -1,0 +1,76 @@
+"""Training launcher: ``--arch`` selects an assigned architecture.
+
+Single-host entry point (the multi-pod path is exercised by dryrun.py —
+on real hardware the same code runs under `jax.distributed.initialize`):
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 50 \
+      --smoke            # reduced config, CPU-friendly
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.catalog import Catalog
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.tokens import TokenDataset, write_token_table
+from repro.io import ObjectStore
+from repro.models import LM
+from repro.table import TableFormat
+from repro.train import TrainLoop, TrainLoopConfig, TrainStepConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help=f"one of {[a.replace('_','-') for a in ARCH_IDS]}")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (required on CPU)")
+    ap.add_argument("--lake", default=None, help="lake root (default: tmp)")
+    ap.add_argument("--branch", default="train")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.n_codebooks > 1 or cfg.num_patches:
+        raise SystemExit(
+            f"{cfg.name}: the token-table trainer drives LM-token archs; "
+            "multimodal frontends are stubs (see examples/ for the "
+            "end-to-end LM driver)"
+        )
+    model = LM(cfg)
+
+    store = ObjectStore(args.lake or tempfile.mkdtemp())
+    catalog = Catalog(store)
+    fmt = TableFormat(store)
+    rng = np.random.default_rng(0)
+    corpus = rng.zipf(1.4, 500_000).clip(1, cfg.vocab - 1).astype(np.int32)
+    key = write_token_table(fmt, catalog, "corpus", corpus)
+    ds = TokenDataset(fmt, key, batch_size=args.batch, seq_len=args.seq, seed=0)
+
+    loop = TrainLoop(
+        model, ds, catalog, branch=args.branch,
+        config=TrainLoopConfig(
+            total_steps=args.steps,
+            checkpoint_every=max(args.steps // 5, 5),
+            log_every=max(args.steps // 10, 1),
+            step=TrainStepConfig(
+                peak_lr=3e-4, warmup_steps=max(args.steps // 10, 1),
+                total_steps=args.steps,
+            ),
+        ),
+    )
+    out = loop.run()
+    print(
+        f"{cfg.name}: {out['steps_run']} steps, final loss "
+        f"{out['final_loss']:.3f}, audit_ok={out['audit_ok']}, "
+        f"{out['wall_s']:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

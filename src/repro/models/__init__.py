@@ -1,0 +1,15 @@
+"""Model zoo substrate: composable pure-JAX decoder blocks.
+
+Everything is (init, apply) pairs over plain dict pytrees — no framework
+dependency.  ``lm.py`` assembles the ten assigned architectures from:
+
+* ``attention.py``  — GQA/MQA/MHA with RoPE, qk-norm, sliding window
+* ``mla.py``        — DeepSeek Multi-head Latent Attention
+* ``moe.py``        — shared + routed top-k experts, sort-based dispatch
+* ``xlstm.py``      — mLSTM (chunked-parallel) and sLSTM blocks
+* ``rglru.py``      — RecurrentGemma RG-LRU + conv block
+* ``common.py``     — norms, MLPs, embeddings, RoPE, losses
+"""
+from repro.models.lm import LM, LMConfig, ModelFamily
+
+__all__ = ["LM", "LMConfig", "ModelFamily"]

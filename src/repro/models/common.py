@@ -1,0 +1,130 @@
+"""Shared model components: norms, projections, RoPE, MLPs, losses.
+
+Conventions:
+* params are plain nested dicts of jnp arrays;
+* every ``init_*`` is pure in a PRNG key and config (usable under
+  ``jax.eval_shape`` — required by the allocation-free dry-run);
+* computation dtype vs parameter dtype are separated (bf16 compute,
+  f32 params by default for training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- inits
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def init_linear(
+    key, d_in: int, d_out: int, *, dtype=jnp.float32, scale: Optional[float] = None
+) -> Params:
+    scale = scale if scale is not None else d_in**-0.5
+    return {"w": _normal(key, (d_in, d_out), scale, dtype)}
+
+
+def linear(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+
+
+def init_embedding(key, vocab: int, d: int, *, dtype=jnp.float32) -> Params:
+    # d**-0.5 keeps the TIED readout (h @ table.T) at unit-scale logits;
+    # RMSNorm in the first block re-normalizes the small input embeddings.
+    return {"table": _normal(key, (vocab, d), d**-0.5, dtype)}
+
+
+def embed(p: Params, ids: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def init_rmsnorm(d: int, *, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_frequencies(d_head: int, *, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(
+    x: jax.Array,  # (B, H, S, D) — rotates (even, odd) halves
+    positions: jax.Array,  # (S,) shared, or (B, S) per-sequence (decode)
+    *,
+    theta: float = 10000.0,
+) -> jax.Array:
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta=theta)  # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if angles.ndim == 3:  # (B, S, D/2) → broadcast over the head axis
+        angles = angles[:, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1 = x[..., : d // 2].astype(jnp.float32)
+    x2 = x[..., d // 2 :].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- MLPs
+def init_swiglu(key, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d, d_ff, dtype=dtype),
+        "up": init_linear(k2, d, d_ff, dtype=dtype),
+        "down": init_linear(k3, d_ff, d, dtype=dtype, scale=d_ff**-0.5),
+    }
+
+
+def swiglu(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    g = linear(p["gate"], x, compute_dtype=compute_dtype)
+    u = linear(p["up"], x, compute_dtype=compute_dtype)
+    return linear(p["down"], jax.nn.silu(g) * u, compute_dtype=compute_dtype)
+
+
+def init_geglu(key, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    return init_swiglu(key, d, d_ff, dtype=dtype)
+
+
+def geglu(p: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16) -> jax.Array:
+    g = linear(p["gate"], x, compute_dtype=compute_dtype)
+    u = linear(p["up"], x, compute_dtype=compute_dtype)
+    return linear(p["down"], jax.nn.gelu(g) * u, compute_dtype=compute_dtype)
+
+
+# ------------------------------------------------------------------ losses
+def cross_entropy(
+    logits: jax.Array,  # (..., V) — any leading dims
+    labels: jax.Array,  # (...)
+    *,
+    mask: Optional[jax.Array] = None,  # (...) 1.0 = count this token
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def logits_head(
+    embedding: Params, x: jax.Array, *, compute_dtype=jnp.bfloat16
+) -> jax.Array:
+    """Tied-embedding readout (transpose of the input table)."""
+    table = embedding["table"].astype(compute_dtype)
+    return x.astype(compute_dtype) @ table.T

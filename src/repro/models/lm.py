@@ -1,0 +1,537 @@
+"""The unified decoder LM assembling all ten assigned architectures.
+
+A model is a sequence of *segments*; each segment is ``count`` repetitions
+of a *unit* (a short tuple of block kinds).  Homogeneous repetition is
+expressed as ``lax.scan`` over stacked parameters, so compile time and HLO
+size are ~independent of depth (critical for the 61/88-layer dry-runs).
+
+Block kinds:
+  attn        GQA/MQA/MHA attention (+ optional window/qk-norm) + SwiGLU
+  attn_geglu  same but GeGLU MLP (recurrentgemma's local attention layer)
+  moe_attn    attention + MoE FFN (qwen2-moe)
+  mla_dense   DeepSeek MLA attention + dense SwiGLU (first-k layers)
+  mla_moe     DeepSeek MLA attention + MoE FFN
+  mlstm       xLSTM matrix-memory block (no FFN)
+  slstm       xLSTM scalar-memory block (no FFN)
+  rec         RG-LRU recurrent block + GeGLU MLP
+
+Examples:
+  granite-34b        ((("attn",), 88),)
+  xlstm-350m         ((("mlstm", "slstm"), 12),)
+  recurrentgemma-9b  ((("rec", "rec", "attn_geglu"), 12), (("rec", "rec"), 1))
+  deepseek-v3        ((("mla_dense",), 3), (("mla_moe",), 58))
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import constrain_batch, constrain_logits
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.common import (
+    Params,
+    cross_entropy,
+    embed,
+    geglu,
+    init_embedding,
+    init_geglu,
+    init_linear,
+    init_rmsnorm,
+    init_swiglu,
+    linear,
+    logits_head,
+    rmsnorm,
+    swiglu,
+)
+
+
+class ModelFamily(str, enum.Enum):
+    DENSE = "dense"
+    MOE = "moe"
+    SSM = "ssm"
+    HYBRID = "hybrid"
+    VLM = "vlm"
+    AUDIO = "audio"
+
+
+Segments = Tuple[Tuple[Tuple[str, ...], int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: ModelFamily
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    segments: Segments
+    d_head: Optional[int] = None  # default d_model // n_heads
+    # attention options
+    qk_norm: bool = False
+    window: Optional[int] = None
+    rope_theta: float = 10000.0
+    attn_logit_soft_cap: Optional[float] = None
+    # MoE options
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0
+    dense_d_ff: int = 0  # FFN width of dense layers in hybrid-MoE stacks
+    # extras
+    mtp: bool = False  # DeepSeek multi-token prediction head
+    mtp_loss_weight: float = 0.1
+    n_codebooks: int = 1  # musicgen: parallel EnCodec codebooks
+    num_patches: int = 0  # vlm: prepended image patch embeddings
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    # execution
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    use_flash_kernel: bool = False
+    remat: str = "none"  # "none" | "full" | "dots"
+    # serving
+    max_decode_len: int = 4096
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def attention_config(self, *, window_override=-1) -> attn_mod.AttentionConfig:
+        return attn_mod.AttentionConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.head_dim,
+            rope_theta=self.rope_theta,
+            qk_norm=self.qk_norm,
+            window=self.window if window_override == -1 else window_override,
+            use_flash_kernel=self.use_flash_kernel,
+            compute_dtype=self.compute_dtype,
+        )
+
+    def mla_config(self) -> mla_mod.MLAConfig:
+        return mla_mod.MLAConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            compute_dtype=self.compute_dtype,
+        )
+
+    def moe_config(self) -> moe_mod.MoEConfig:
+        return moe_mod.MoEConfig(
+            d_model=self.d_model,
+            d_ff=self.moe_d_ff or self.d_ff,
+            num_experts=self.num_experts,
+            top_k=self.top_k,
+            num_shared=self.num_shared_experts,
+            compute_dtype=self.compute_dtype,
+        )
+
+    def xlstm_config(self) -> xlstm_mod.XLSTMConfig:
+        return xlstm_mod.XLSTMConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            compute_dtype=self.compute_dtype,
+        )
+
+    def rglru_config(self) -> rglru_mod.RGLRUConfig:
+        return rglru_mod.RGLRUConfig(
+            d_model=self.d_model,
+            d_rnn=self.d_model,
+            compute_dtype=self.compute_dtype,
+        )
+
+
+# ====================================================================== LM
+class LM:
+    """(init, loss, forward, prefill, decode_step) over an LMConfig."""
+
+    def __init__(self, cfg: LMConfig):
+        total = sum(len(unit) * count for unit, count in cfg.segments)
+        if total != cfg.n_layers:
+            raise ValueError(
+                f"{cfg.name}: segments sum to {total} layers, expected {cfg.n_layers}"
+            )
+        self.cfg = cfg
+
+    # -------------------------------------------------------------- blocks
+    def _init_block(self, kind: str, key) -> Params:
+        cfg = self.cfg
+        dt = cfg.param_dtype
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p: Params = {"norm1": init_rmsnorm(cfg.d_model, dtype=dt)}
+        if kind in ("attn", "attn_geglu", "moe_attn"):
+            p["attn"] = attn_mod.init_attention(k1, cfg.attention_config(), dtype=dt)
+            p["norm2"] = init_rmsnorm(cfg.d_model, dtype=dt)
+            if kind == "attn":
+                p["mlp"] = init_swiglu(k2, cfg.d_model, cfg.d_ff, dtype=dt)
+            elif kind == "attn_geglu":
+                p["mlp"] = init_geglu(k2, cfg.d_model, cfg.d_ff, dtype=dt)
+            else:
+                p["moe"] = moe_mod.init_moe(k2, cfg.moe_config(), dtype=dt)
+        elif kind in ("mla_dense", "mla_moe"):
+            p["attn"] = mla_mod.init_mla(k1, cfg.mla_config(), dtype=dt)
+            p["norm2"] = init_rmsnorm(cfg.d_model, dtype=dt)
+            if kind == "mla_dense":
+                p["mlp"] = init_swiglu(
+                    k2, cfg.d_model, cfg.dense_d_ff or cfg.d_ff, dtype=dt
+                )
+            else:
+                p["moe"] = moe_mod.init_moe(k2, cfg.moe_config(), dtype=dt)
+        elif kind == "mlstm":
+            p["mix"] = xlstm_mod.init_mlstm(k1, cfg.xlstm_config(), dtype=dt)
+        elif kind == "slstm":
+            p["mix"] = xlstm_mod.init_slstm(k1, cfg.xlstm_config(), dtype=dt)
+        elif kind == "rec":
+            p["mix"] = rglru_mod.init_rglru(k1, cfg.rglru_config(), dtype=dt)
+            p["norm2"] = init_rmsnorm(cfg.d_model, dtype=dt)
+            p["mlp"] = init_geglu(k2, cfg.d_model, cfg.d_ff, dtype=dt)
+        else:
+            raise ValueError(f"unknown block kind {kind!r}")
+        return p
+
+    def _apply_block(
+        self, kind: str, p: Params, h: jax.Array, positions: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Full-sequence path. Returns (h, aux_loss)."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        x = rmsnorm(p["norm1"], h, eps=cfg.norm_eps)
+        if kind in ("attn", "attn_geglu", "moe_attn"):
+            h = h + attn_mod.attend_train(p["attn"], cfg.attention_config(), x, positions)
+            y = rmsnorm(p["norm2"], h, eps=cfg.norm_eps)
+            if kind == "attn":
+                h = h + swiglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+            elif kind == "attn_geglu":
+                h = h + geglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+            else:
+                out, moe_aux = moe_mod.moe_apply(p["moe"], cfg.moe_config(), y)
+                h = h + out
+                aux = aux + moe_aux["balance_loss"] + moe_aux["z_loss"]
+        elif kind in ("mla_dense", "mla_moe"):
+            h = h + mla_mod.mla_train(p["attn"], cfg.mla_config(), x, positions)
+            y = rmsnorm(p["norm2"], h, eps=cfg.norm_eps)
+            if kind == "mla_dense":
+                h = h + swiglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+            else:
+                out, moe_aux = moe_mod.moe_apply(p["moe"], cfg.moe_config(), y)
+                h = h + out
+                aux = aux + moe_aux["balance_loss"] + moe_aux["z_loss"]
+        elif kind == "mlstm":
+            h = h + xlstm_mod.mlstm_block(p["mix"], cfg.xlstm_config(), x)
+        elif kind == "slstm":
+            h = h + xlstm_mod.slstm_block(p["mix"], cfg.xlstm_config(), x)
+        elif kind == "rec":
+            h = h + rglru_mod.rglru_block(p["mix"], cfg.rglru_config(), x)
+            y = rmsnorm(p["norm2"], h, eps=cfg.norm_eps)
+            h = h + geglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+        return h, aux
+
+    # --------------------------------------------------------------- init
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Params = {}
+        if cfg.n_codebooks > 1:
+            params["embed"] = {
+                f"cb{i}": init_embedding(
+                    jax.random.fold_in(keys[0], i), cfg.vocab, cfg.d_model,
+                    dtype=cfg.param_dtype,
+                )
+                for i in range(cfg.n_codebooks)
+            }
+        else:
+            params["embed"] = init_embedding(
+                keys[0], cfg.vocab, cfg.d_model, dtype=cfg.param_dtype
+            )
+        for si, (unit, count) in enumerate(cfg.segments):
+            seg_key = jax.random.fold_in(keys[1], si)
+
+            def init_unit(k, _unit=unit):
+                uks = jax.random.split(k, len(_unit))
+                return {
+                    f"b{i}": self._init_block(kind, uks[i])
+                    for i, kind in enumerate(_unit)
+                }
+
+            params[f"seg{si}"] = jax.vmap(init_unit)(
+                jax.random.split(seg_key, count)
+            )
+        params["final_norm"] = init_rmsnorm(cfg.d_model, dtype=cfg.param_dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = init_linear(
+                keys[2], cfg.d_model, cfg.vocab, dtype=cfg.param_dtype
+            )
+        if cfg.n_codebooks > 1:
+            params["heads"] = {
+                f"cb{i}": init_linear(
+                    jax.random.fold_in(keys[3], i), cfg.d_model, cfg.vocab,
+                    dtype=cfg.param_dtype,
+                )
+                for i in range(cfg.n_codebooks)
+            }
+        if cfg.mtp:
+            params["mtp"] = {
+                "proj": init_linear(
+                    keys[4], 2 * cfg.d_model, cfg.d_model, dtype=cfg.param_dtype
+                ),
+                "block": self._init_block(
+                    "mla_dense" if cfg.segments[0][0][0].startswith("mla") else "attn",
+                    keys[5],
+                ),
+                "norm": init_rmsnorm(cfg.d_model, dtype=cfg.param_dtype),
+            }
+        return params
+
+    # ------------------------------------------------------------ embedding
+    def _embed_tokens(self, params: Params, tokens: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.n_codebooks > 1:  # (B, S, K) summed codebook embeddings
+            return sum(
+                embed(params["embed"][f"cb{i}"], tokens[..., i],
+                      compute_dtype=cfg.compute_dtype)
+                for i in range(cfg.n_codebooks)
+            )
+        return embed(params["embed"], tokens, compute_dtype=cfg.compute_dtype)
+
+    def _read_out(self, params: Params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        if cfg.n_codebooks > 1:
+            outs = [
+                linear(params["heads"][f"cb{i}"], h, compute_dtype=cfg.compute_dtype)
+                for i in range(cfg.n_codebooks)
+            ]
+            return jnp.stack(outs, axis=-2)  # (B, S, K, V)
+        if cfg.tie_embeddings:
+            return logits_head(params["embed"], h, compute_dtype=cfg.compute_dtype)
+        return linear(params["lm_head"], h, compute_dtype=cfg.compute_dtype)
+
+    # -------------------------------------------------------------- forward
+    def _stack(self, params: Params, h: jax.Array, positions: jax.Array):
+        """Run all segments. Returns (h, aux_loss_sum)."""
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        for si, (unit, count) in enumerate(cfg.segments):
+
+            def unit_fn(carry, layer_params, _unit=unit):
+                h, aux = carry
+                for i, kind in enumerate(_unit):
+                    h = constrain_batch(h)  # pin batch-over-data (FSDP flow)
+                    h, a = self._apply_block(kind, layer_params[f"b{i}"], h, positions)
+                    aux = aux + a
+                return (constrain_batch(h), aux), None
+
+            if cfg.remat == "full":
+                unit_fn = jax.checkpoint(unit_fn)
+            elif cfg.remat == "dots":
+                unit_fn = jax.checkpoint(
+                    unit_fn,
+                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+                )
+            (h, aux_total), _ = jax.lax.scan(
+                unit_fn, (h, aux_total), params[f"seg{si}"]
+            )
+        return h, aux_total
+
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,
+        *,
+        patch_embeds: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Full-sequence logits (B, S[, K], V)."""
+        cfg = self.cfg
+        h = constrain_batch(self._embed_tokens(params, tokens))
+        n_prefix = 0
+        if cfg.num_patches and patch_embeds is not None:
+            h = jnp.concatenate([patch_embeds.astype(h.dtype), h], axis=1)
+            n_prefix = patch_embeds.shape[1]
+        positions = jnp.arange(h.shape[1])
+        h, _ = self._stack(params, h, positions)
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        if n_prefix:
+            h = h[:, n_prefix:]
+        return constrain_logits(self._read_out(params, h))
+
+    # ----------------------------------------------------------------- loss
+    def loss(
+        self,
+        params: Params,
+        batch: Dict[str, jax.Array],
+    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """batch: tokens (B,S[,K]) int32, optional loss_mask (B,S),
+        optional patch_embeds (B,P,d).  Next-token LM objective."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = constrain_batch(self._embed_tokens(params, tokens))
+        n_prefix = 0
+        if cfg.num_patches and "patch_embeds" in batch:
+            h = jnp.concatenate(
+                [batch["patch_embeds"].astype(h.dtype), h], axis=1
+            )
+            n_prefix = batch["patch_embeds"].shape[1]
+        positions = jnp.arange(h.shape[1])
+        h, aux = self._stack(params, h, positions)
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        if n_prefix:
+            h = h[:, n_prefix:]
+
+        inputs_h = constrain_batch(h[:, :-1])
+        labels = tokens[:, 1:]
+        logits = constrain_logits(self._read_out(params, inputs_h))
+        mask = batch.get("loss_mask")
+        mask = mask[:, 1:] if mask is not None else None
+        if cfg.n_codebooks > 1:
+            k_mask = None if mask is None else mask[..., None] * jnp.ones(
+                (1, 1, cfg.n_codebooks)
+            )
+            ce = cross_entropy(logits, labels, mask=k_mask)
+        else:
+            ce = cross_entropy(logits, labels, mask=mask)
+        metrics = {"ce": ce, "aux": aux}
+        total = ce + aux
+
+        if cfg.mtp:  # predict t+2 from (h_t, emb_{t+1})
+            emb_next = self._embed_tokens(params, tokens[:, 1:-1])
+            h_mtp = jnp.concatenate([h[:, :-2], emb_next], axis=-1)
+            h_mtp = constrain_batch(
+                linear(params["mtp"]["proj"], h_mtp, compute_dtype=cfg.compute_dtype)
+            )
+            kind = "mla_dense" if cfg.segments[0][0][0].startswith("mla") else "attn"
+            h_mtp, _ = self._apply_block(
+                kind, params["mtp"]["block"], h_mtp, positions[: h_mtp.shape[1]]
+            )
+            h_mtp = rmsnorm(params["mtp"]["norm"], h_mtp, eps=cfg.norm_eps)
+            mtp_logits = self._read_out(params, h_mtp)
+            mtp_ce = cross_entropy(
+                mtp_logits, tokens[:, 2:], mask=None if mask is None else mask[:, 1:]
+            )
+            metrics["mtp_ce"] = mtp_ce
+            total = total + cfg.mtp_loss_weight * mtp_ce
+
+        metrics["loss"] = total
+        return total, metrics
+
+    # -------------------------------------------------------------- serving
+    def _block_state(self, kind: str, batch: int, max_len: int):
+        cfg = self.cfg
+        if kind in ("attn", "attn_geglu", "moe_attn"):
+            # NOTE: windowed attention could use a ring buffer of size
+            # `window` — kept as a §Perf lever; full-length cache + masking
+            # is the correctness baseline.
+            return attn_mod.init_cache(
+                cfg.attention_config(), batch, max_len, dtype=cfg.compute_dtype
+            )
+        if kind in ("mla_dense", "mla_moe"):
+            return mla_mod.init_mla_cache(
+                self.cfg.mla_config(), batch, max_len, dtype=cfg.compute_dtype
+            )
+        if kind == "mlstm":
+            return xlstm_mod.init_mlstm_state(cfg.xlstm_config(), batch)
+        if kind == "slstm":
+            return xlstm_mod.init_slstm_state(cfg.xlstm_config(), batch)
+        if kind == "rec":
+            return rglru_mod.init_rglru_state(cfg.rglru_config(), batch)
+        raise ValueError(kind)
+
+    def init_decode_state(self, batch: int, max_len: Optional[int] = None) -> Params:
+        cfg = self.cfg
+        max_len = max_len or cfg.max_decode_len
+        state: Params = {}
+        for si, (unit, count) in enumerate(cfg.segments):
+            def one(_, _unit=unit):
+                return {
+                    f"b{i}": self._block_state(kind, batch, max_len)
+                    for i, kind in enumerate(_unit)
+                }
+            state[f"seg{si}"] = jax.vmap(one)(jnp.arange(count))
+        return state
+
+    def _apply_block_decode(
+        self, kind: str, p: Params, h: jax.Array, cache, lengths: jax.Array
+    ):
+        cfg = self.cfg
+        x = rmsnorm(p["norm1"], h, eps=cfg.norm_eps)
+        if kind in ("attn", "attn_geglu", "moe_attn"):
+            acfg = cfg.attention_config()
+            out, cache = attn_mod.decode_step(p["attn"], acfg, x, cache, lengths)
+            h = h + out
+            y = rmsnorm(p["norm2"], h, eps=cfg.norm_eps)
+            if kind == "attn":
+                h = h + swiglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+            elif kind == "attn_geglu":
+                h = h + geglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+            else:
+                out, _ = moe_mod.moe_apply(p["moe"], cfg.moe_config(), y)
+                h = h + out
+        elif kind in ("mla_dense", "mla_moe"):
+            out, cache = mla_mod.mla_decode_step(
+                p["attn"], cfg.mla_config(), x, cache, lengths
+            )
+            h = h + out
+            y = rmsnorm(p["norm2"], h, eps=cfg.norm_eps)
+            if kind == "mla_dense":
+                h = h + swiglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+            else:
+                out, _ = moe_mod.moe_apply(p["moe"], cfg.moe_config(), y)
+                h = h + out
+        elif kind == "mlstm":
+            out, cache = xlstm_mod.mlstm_decode_step(
+                p["mix"], cfg.xlstm_config(), x, cache
+            )
+            h = h + out
+        elif kind == "slstm":
+            out, cache = xlstm_mod.slstm_decode_step(
+                p["mix"], cfg.xlstm_config(), x, cache
+            )
+            h = h + out
+        elif kind == "rec":
+            out, cache = rglru_mod.rglru_decode_step(
+                p["mix"], cfg.rglru_config(), x, cache
+            )
+            h = h + out
+            y = rmsnorm(p["norm2"], h, eps=cfg.norm_eps)
+            h = h + geglu(p["mlp"], y, compute_dtype=cfg.compute_dtype)
+        return h, cache
+
+    def decode_step(
+        self,
+        params: Params,
+        state: Params,
+        tokens: jax.Array,   # (B, 1[, K])
+        lengths: jax.Array,  # (B,)
+    ):
+        """One decoding step. Returns (logits (B, 1[, K], V), new_state)."""
+        cfg = self.cfg
+        h = constrain_batch(self._embed_tokens(params, tokens))
+        new_state: Params = {}
+        for si, (unit, count) in enumerate(cfg.segments):
+
+            def unit_fn(h, xs, _unit=unit):
+                layer_params, layer_cache = xs
+                new_cache = {}
+                for i, kind in enumerate(_unit):
+                    h = constrain_batch(h)
+                    h, c = self._apply_block_decode(
+                        kind, layer_params[f"b{i}"], h, layer_cache[f"b{i}"], lengths
+                    )
+                    new_cache[f"b{i}"] = c
+                return h, new_cache
+
+            h, new_state[f"seg{si}"] = jax.lax.scan(
+                unit_fn, h, (params[f"seg{si}"], state[f"seg{si}"])
+            )
+        h = rmsnorm(params["final_norm"], h, eps=cfg.norm_eps)
+        return self._read_out(params, h), new_state

@@ -1,0 +1,262 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries and KV are low-rank-compressed; only the compressed latent
+``c_kv`` (rank 512) plus the small decoupled-RoPE key ``k_rope`` (64)
+need caching at decode time — an ~14x KV-cache reduction vs MHA at 128
+heads, which is exactly why the 500k-class serving shapes want it.
+
+Shapes follow the V3 paper: d_model 7168, q rank 1536, kv rank 512,
+per-head nope 128 + rope 64 query/key dims, v head 128.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Params,
+    apply_rope,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    rmsnorm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+    #: kv-chunked online softmax for the train path (see attention.py)
+    chunk: Optional[int] = 1024
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def qk_dim(self) -> int:
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def init_mla(key, cfg: MLAConfig, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    h, dq, dkv = cfg.n_heads, cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "wq_a": init_linear(ks[0], cfg.d_model, dq, dtype=dtype),
+        "q_norm": init_rmsnorm(dq, dtype=dtype),
+        "wq_b": init_linear(ks[1], dq, h * cfg.qk_dim, dtype=dtype),
+        "wkv_a": init_linear(
+            ks[2], cfg.d_model, dkv + cfg.qk_rope_dim, dtype=dtype
+        ),
+        "kv_norm": init_rmsnorm(dkv, dtype=dtype),
+        "wkv_b": init_linear(
+            ks[3], dkv, h * (cfg.qk_nope_dim + cfg.v_head_dim), dtype=dtype
+        ),
+        "wo": init_linear(
+            ks[4], h * cfg.v_head_dim, cfg.d_model, dtype=dtype,
+            scale=(h * cfg.v_head_dim) ** -0.5,
+        ),
+    }
+
+
+def _compress(p: Params, cfg: MLAConfig, x: jax.Array, positions: jax.Array):
+    """Shared Q/KV compression for train + serve paths."""
+    b, s, _ = x.shape
+    cd = cfg.compute_dtype
+    h = cfg.n_heads
+    # --- queries: down, norm, up, split nope/rope
+    cq = rmsnorm(p["q_norm"], linear(p["wq_a"], x, compute_dtype=cd))
+    q = linear(p["wq_b"], cq, compute_dtype=cd).reshape(b, s, h, cfg.qk_dim)
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = apply_rope(
+        q[..., cfg.qk_nope_dim :].swapaxes(1, 2), positions, theta=cfg.rope_theta
+    )  # (B,H,S,rope)
+    # --- kv latent + decoupled shared rope key
+    kv_a = linear(p["wkv_a"], x, compute_dtype=cd)
+    c_kv = rmsnorm(p["kv_norm"], kv_a[..., : cfg.kv_lora_rank])  # (B,S,dkv)
+    k_rope = apply_rope(
+        kv_a[..., cfg.kv_lora_rank :][:, None], positions, theta=cfg.rope_theta
+    )  # (B,1,S,rope) shared across heads
+    return q_nope.swapaxes(1, 2), q_rope, c_kv, k_rope
+
+
+def _expand_kv(p: Params, cfg: MLAConfig, c_kv: jax.Array):
+    b, t, _ = c_kv.shape
+    h = cfg.n_heads
+    kv = linear(p["wkv_b"], c_kv, compute_dtype=cfg.compute_dtype)
+    kv = kv.reshape(b, t, h, cfg.qk_nope_dim + cfg.v_head_dim)
+    k_nope = kv[..., : cfg.qk_nope_dim].swapaxes(1, 2)  # (B,H,T,nope)
+    v = kv[..., cfg.qk_nope_dim :].swapaxes(1, 2)  # (B,H,T,v)
+    return k_nope, v
+
+
+def _attend(cfg, q_nope, q_rope, k_nope, k_rope, v, *, causal_rows, visible_cols):
+    scale = cfg.qk_dim**-0.5
+    scores = (
+        jnp.einsum(
+            "bhqd,bhtd->bhqt", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32)
+        )
+        + jnp.einsum(
+            "bhqd,bxtd->bhqt", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32)
+        )
+    ) * scale
+    mask = visible_cols[None, :] <= causal_rows[:, None]
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqt,bhtd->bhqd", w, v.astype(jnp.float32))
+
+
+def _attend_chunked(cfg, q_nope, q_rope, k_nope, k_rope, v, *, chunk):
+    """Online-softmax over kv chunks (memory: S×chunk, not S×S).
+
+    Heads are pinned to the TP axis (constrain_heads) so per-device
+    score blocks are (B_loc, H/TP, S, chunk); score einsums run in the
+    compute dtype with f32 accumulation.
+    """
+    from repro.distribution.sharding import constrain_heads
+
+    cd = cfg.compute_dtype
+    q_nope = constrain_heads(q_nope)
+    q_rope = constrain_heads(q_rope)
+    k_nope = constrain_heads(k_nope)
+    v = constrain_heads(v)
+    b, h, s, dn = q_nope.shape
+    t = k_nope.shape[2]
+    pad = -t % chunk
+    if pad:  # padded keys are > all causal rows — masked for free
+        k_nope = jnp.pad(k_nope, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        t += pad
+    scale = cfg.qk_dim**-0.5
+    qn = (q_nope.astype(jnp.float32) * scale).astype(cd)
+    qr = (q_rope.astype(jnp.float32) * scale).astype(cd)
+    rows = jnp.arange(s)
+    neg = -1e30
+
+    def body(carry, kc):
+        acc, m, l = carry
+        kn = jax.lax.dynamic_slice_in_dim(k_nope, kc * chunk, chunk, 2).astype(cd)
+        kr = jax.lax.dynamic_slice_in_dim(k_rope, kc * chunk, chunk, 2).astype(cd)
+        vs = jax.lax.dynamic_slice_in_dim(v, kc * chunk, chunk, 2).astype(cd)
+        scores = jnp.einsum(
+            "bhqd,bhtd->bhqt", qn, kn, preferred_element_type=jnp.float32
+        ) + jnp.einsum(
+            "bhqd,bxtd->bhqt", qr, kr, preferred_element_type=jnp.float32
+        )
+        cols = kc * chunk + jnp.arange(chunk)
+        mask = cols[None, :] <= rows[:, None]
+        scores = jnp.where(mask[None, None], scores, neg)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        pw = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(pw, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqt,bhtd->bhqd", pw.astype(cd), vs,
+            preferred_element_type=jnp.float32,
+        )
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, h, s, cfg.v_head_dim), jnp.float32)
+    m0 = jnp.full((b, h, s), neg, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(t // chunk))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def mla_train(
+    p: Params, cfg: MLAConfig, x: jax.Array, positions: jax.Array
+) -> jax.Array:
+    b, s, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _compress(p, cfg, x, positions)
+    k_nope, v = _expand_kv(p, cfg, c_kv)
+    if cfg.chunk is not None and s > cfg.chunk:
+        out = _attend_chunked(
+            cfg, q_nope, q_rope, k_nope, k_rope, v, chunk=cfg.chunk
+        )
+    else:
+        out = _attend(
+            cfg, q_nope, q_rope, k_nope, k_rope, v,
+            causal_rows=jnp.arange(s), visible_cols=jnp.arange(s),
+        )
+    merged = out.swapaxes(1, 2).reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+    return linear(p["wo"], merged.astype(cfg.compute_dtype), compute_dtype=cfg.compute_dtype)
+
+
+# ------------------------------------------------------------------ serving
+def init_mla_cache(
+    cfg: MLAConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    """The MLA selling point: cache ONLY (c_kv, k_rope) — rank 512 + 64
+    per token instead of 128 heads × 256 dims."""
+    return {
+        "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, 1, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode_step(
+    p: Params,
+    cfg: MLAConfig,
+    x: jax.Array,        # (B, 1, d_model)
+    cache: Dict[str, jax.Array],
+    lengths: jax.Array,  # (B,)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Weight-absorbed decode (the MLA inference trick).
+
+    Instead of expanding the compressed cache into per-head K/V —
+    a (B, H, T, d) materialization that dominates decode memory — the
+    up-projections are absorbed into the attention math:
+
+      scores_nope = (q_nope · W_uk) @ c_kv^T      (q in latent space)
+      out         = (softmax @ c_kv) · W_uv       (context in latent space)
+
+    so the only T-sized tensors are the latent cache itself and the
+    (B, H, T) score matrix.  §Perf iteration for deepseek decode.
+    """
+    b = x.shape[0]
+    cd = cfg.compute_dtype
+    h, dn, dv, dkv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = lengths[:, None]
+    q_nope, q_rope, c_new, kr_new = _compress(p, cfg, x, positions)
+    s_max = cache["c_kv"].shape[1]
+    onehot = (jnp.arange(s_max)[None, :] == lengths[:, None]).astype(
+        cache["c_kv"].dtype
+    )
+    oh2, oh4 = onehot[..., None], onehot[:, None, :, None]
+    # REPLACE semantics — see attention.decode_step
+    c_kv = cache["c_kv"] * (1 - oh2) + oh2 * c_new.astype(cache["c_kv"].dtype)
+    k_rope = cache["k_rope"] * (1 - oh4) + oh4 * kr_new.astype(
+        cache["k_rope"].dtype
+    )
+    new_lengths = lengths + 1
+
+    wkv = p["wkv_b"]["w"].astype(cd).reshape(dkv, h, dn + dv)
+    w_uk, w_uv = wkv[..., :dn], wkv[..., dn:]
+    # absorb: q into latent space (B, H, dkv)
+    q_eff = jnp.einsum("bhqd,khd->bhk", q_nope.astype(cd), w_uk)
+    scale = cfg.qk_dim**-0.5
+    scores = (
+        jnp.einsum("bhk,btk->bht", q_eff, c_kv, preferred_element_type=jnp.float32)
+        + jnp.einsum(
+            "bhqd,bxtd->bht", q_rope.astype(cd), k_rope,
+            preferred_element_type=jnp.float32,
+        )
+    ) * scale
+    visible = jnp.arange(s_max)[None, :] < new_lengths[:, None]  # (B,T)
+    scores = jnp.where(visible[:, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum(
+        "bht,btk->bhk", w.astype(cd), c_kv, preferred_element_type=jnp.float32
+    )  # (B, H, dkv) — context still in latent space
+    out = jnp.einsum("bhk,khd->bhd", ctx.astype(cd), w_uv)
+    merged = out.reshape(b, 1, h * dv)
+    attn = linear(p["wo"], merged.astype(cd), compute_dtype=cd)
+    return attn, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,177 @@
+"""Mixture-of-Experts: shared + routed top-k, expert-parallel dispatch.
+
+Production-grade dispatch that stays O(tokens·d) in memory and keeps the
+expert dimension shardable (EP over the "model" mesh axis):
+
+1. routing is computed per *group* (= one sequence), with a per-group
+   expert capacity ``C = S·k/E·factor`` — GShard-style locality dropping;
+2. slot assignment uses a sort-based position-in-expert (no one-hot
+   cumsum blowup);
+3. the dispatch **scatters int32 token indices only** into the
+   ``(groups, E, C)`` routing table, then materializes expert inputs with
+   one batched gather — the (tokens·k, d) vector scatter/gather that
+   dominates naive implementations never exists;
+4. expert FFN is one einsum over (groups, E, C, d) × (E, d, f) with E
+   sharded over "model" (the EP all-to-all appears at the constraint
+   boundary under pjit);
+5. combine gathers back per-k (k sequential (g, S, d) gathers), weighted
+   by router probs; dropped assignments contribute zero.
+
+Aux losses: switch-style load balance + router z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distribution.sharding import constrain_batch, constrain_moe_buffer
+from repro.models.common import Params, init_linear, init_swiglu, linear, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                  # per-expert hidden width
+    num_experts: int
+    top_k: int
+    num_shared: int = 0        # shared experts (always-on), same d_ff each
+    capacity_factor: float = 1.25
+    balance_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+    #: normalize the top-k router probs to sum to 1 (deepseek/qwen style)
+    norm_topk: bool = True
+    compute_dtype: Any = jnp.bfloat16
+
+
+def init_moe(key, cfg: MoEConfig, *, dtype=jnp.float32) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    kg, ku, kd = jax.random.split(ke, 3)
+    scale_in, scale_out = d**-0.5, f**-0.5
+    p: Params = {
+        "router": init_linear(kr, d, e, dtype=dtype, scale=scale_in),
+        "experts": {
+            "gate": (jax.random.normal(kg, (e, d, f)) * scale_in).astype(dtype),
+            "up": (jax.random.normal(ku, (e, d, f)) * scale_in).astype(dtype),
+            "down": (jax.random.normal(kd, (e, f, d)) * scale_out).astype(dtype),
+        },
+    }
+    if cfg.num_shared:
+        p["shared"] = init_swiglu(ks, d, f * cfg.num_shared, dtype=dtype)
+    return p
+
+
+def _positions_in_expert(e_flat: jax.Array, num_experts: int) -> jax.Array:
+    """Slot index of each assignment within its expert (one group).
+
+    Sort-based: after sorting assignments by expert id, an assignment's
+    slot is its rank minus its expert segment's first rank. O(N log N),
+    no (N, E) one-hot.
+    """
+    n = e_flat.shape[0]
+    order = jnp.argsort(e_flat)
+    sorted_ids = e_flat[order]
+    seg_start = jnp.searchsorted(sorted_ids, jnp.arange(num_experts))
+    pos_sorted = jnp.arange(n) - seg_start[sorted_ids]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+
+def moe_apply(
+    p: Params, cfg: MoEConfig, x: jax.Array
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) → (B, S, d), plus aux-loss dict. Groups = sequences.
+
+    Decode special case (S == 1): per-sequence groups would give every
+    group capacity max(k/E·f, 4) ≈ 4 slots × E — 100×+ padding for 1-token
+    groups.  Fold the whole batch into ONE dispatch group instead
+    (capacity scales with B·k/E) — §Perf iteration for MoE decode.
+    """
+    if x.shape[1] == 1 and x.shape[0] > 1:
+        out, aux = moe_apply(p, cfg, x.reshape(1, x.shape[0], x.shape[2]))
+        return out.reshape(x.shape), aux
+    b, s, d = x.shape
+    k = cfg.top_k
+    e = cfg.num_experts
+    cd = cfg.compute_dtype
+    capacity = max(int(s * k / e * cfg.capacity_factor), 4)
+
+    # ---- routing (f32 numerics)
+    logits = linear(p["router"], x, compute_dtype=cd).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    top_p, top_e = jax.lax.top_k(probs, k)                      # (B,S,K)
+    if cfg.norm_topk:
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (scatter-count density, no blowup)
+    density = (
+        jnp.zeros((b, e), jnp.float32)
+        .at[jnp.arange(b)[:, None, None], top_e]
+        .add(1.0)
+        .mean(axis=0)
+        / s
+    )
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    balance_loss = e * jnp.sum(density * mean_prob) * cfg.balance_loss_weight
+    z = jax.nn.logsumexp(logits, axis=-1)
+    z_loss = jnp.mean(z * z) * cfg.z_loss_weight
+
+    # ---- per-group slotting (vmapped sort-based positions)
+    e_flat = top_e.reshape(b, s * k)                            # (B, S*K)
+    slot = jax.vmap(lambda ef: _positions_in_expert(ef, e))(e_flat)
+    keep = slot < capacity                                      # (B, S*K)
+    buf_pos = jnp.where(keep, e_flat * capacity + slot, e * capacity)
+
+    # ---- dispatch: scatter TOKEN INDICES + router weights (no vectors).
+    # All gathers/scatters are vmapped over the batch dim — vmap emits
+    # true gather/scatter batch dims, which is what lets GSPMD keep them
+    # batch-sharded (explicit iota indexing would force an all-gather).
+    tok_idx = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :]  # (1,S*K)
+    tok_idx = jnp.broadcast_to(tok_idx, (b, s * k))
+    table = jax.vmap(
+        lambda pos, tok: jnp.full((e * capacity + 1,), s, jnp.int32)
+        .at[pos]
+        .set(tok, mode="drop")
+    )(buf_pos, tok_idx)
+    w_table = jax.vmap(
+        lambda pos, w: jnp.zeros((e * capacity + 1,), cd)
+        .at[pos]
+        .set(w, mode="drop")
+    )(buf_pos, top_p.reshape(b, s * k).astype(cd))
+    # constrain the small routing tables to the EP layout FIRST so every
+    # downstream gather/scatter is born expert-sharded
+    routing = constrain_moe_buffer(table[:, :-1].reshape(b, e, capacity))
+    w_slot = constrain_moe_buffer(w_table[:, :-1].reshape(b, e, capacity))
+
+    # ---- expert inputs: batched gather with EP-sharded indices
+    x_pad = jnp.concatenate([x.astype(cd), jnp.zeros((b, 1, d), cd)], axis=1)
+    grouped = jax.vmap(lambda xp, r: xp[r])(x_pad, routing)     # (B,E,C,d)
+    grouped = constrain_moe_buffer(grouped)
+
+    # ---- expert FFN (E shardable everywhere)
+    we = p["experts"]
+    g = jnp.einsum("becd,edf->becf", grouped, we["gate"].astype(cd))
+    u = jnp.einsum("becd,edf->becf", grouped, we["up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    out_e = jnp.einsum("becf,efd->becd", h, we["down"].astype(cd))
+    out_e = constrain_moe_buffer(out_e)
+
+    # ---- combine: weighted SCATTER-ADD back to token positions.
+    # Each expert shard scatters its slots into a partial (B,S,d) and the
+    # compiler reduces partials over the EP axis (add is commutative) —
+    # no all-gather of the (B, E·C, d) buffer ever materializes.
+    weighted = out_e * w_slot[..., None]                        # (B,E,C,d)
+    combined = jax.vmap(
+        lambda r, w: jnp.zeros((s, d), cd)
+        .at[r.reshape(-1)]
+        .add(w.reshape(-1, d), mode="drop")                     # sentinel drops
+    )(routing, weighted)
+    combined = constrain_batch(combined)
+
+    if cfg.num_shared:
+        combined = combined + swiglu(p["shared"], x, compute_dtype=cd)
+
+    aux = {"balance_loss": balance_loss, "z_loss": z_loss}
+    return combined, aux

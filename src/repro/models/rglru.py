@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t)                      (input gate)
+    log a_t = c * r_t * log(sigmoid(Lambda))    (elementwise decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+A *linear* recurrence, so training/prefill use ``lax.associative_scan``
+(log-depth over sequence — this is why the arch runs ``long_500k``), and
+decode is a single O(1) elementwise update.  The block wraps the LRU with
+the Griffin structure: linear in → causal depthwise conv (width 4) → LRU,
+times a GeLU gate branch, then linear out.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, init_linear, linear
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int  # recurrence width (== d_model for recurrentgemma)
+    conv_width: int = 4
+    compute_dtype: Any = jnp.bfloat16
+
+
+def init_rglru(key, cfg: RGLRUConfig, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 7)
+    d, dr = cfg.d_model, cfg.d_rnn
+    # Lambda init so that a = sigmoid(Lambda)^c is spread in (0.9, 0.999)
+    u = jax.random.uniform(ks[4], (dr,), minval=0.9, maxval=0.999)
+    lam = jnp.log(u ** (1.0 / _C) / (1 - u ** (1.0 / _C)))
+    return {
+        "w_in": init_linear(ks[0], d, dr, dtype=dtype),
+        "w_gate": init_linear(ks[1], d, dr, dtype=dtype),
+        "conv": (jax.random.normal(ks[5], (cfg.conv_width, dr)) * 0.1).astype(dtype),
+        "w_a": init_linear(ks[2], dr, dr, dtype=dtype),
+        "w_x": init_linear(ks[3], dr, dr, dtype=dtype),
+        "lam": lam.astype(dtype),
+        "w_out": init_linear(ks[6], dr, d, dtype=dtype, scale=dr**-0.5),
+    }
+
+
+def _causal_conv(p: Params, cfg: RGLRUConfig, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv along time. x: (B, S, dr)."""
+    w = p["conv"].astype(jnp.float32)  # (W, dr)
+    pad = cfg.conv_width - 1
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (pad, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i] for i in range(cfg.conv_width)
+    )
+    return out.astype(x.dtype)
+
+
+def _lru_gates(p: Params, x: jax.Array):
+    """x: (..., dr) f32 → (log_a, scaled input) f32."""
+    r = jax.nn.sigmoid(linear(p["w_a"], x, compute_dtype=jnp.float32))
+    i = jax.nn.sigmoid(linear(p["w_x"], x, compute_dtype=jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-8)) * (i * x)
+    return a, gated
+
+
+def rglru_block(p: Params, cfg: RGLRUConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence path (training/prefill). x: (B, S, d_model)."""
+    cd = cfg.compute_dtype
+    inner = linear(p["w_in"], x, compute_dtype=cd)
+    gate = jax.nn.gelu(linear(p["w_gate"], x, compute_dtype=cd))
+    conv = _causal_conv(p, cfg, inner).astype(jnp.float32)
+    a, gated = _lru_gates(p, conv)
+
+    # associative linear recurrence h_t = a_t h_{t-1} + b_t
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    out = (h.astype(cd) * gate)
+    return linear(p["w_out"], out, compute_dtype=cd)
+
+
+def init_rglru_state(cfg: RGLRUConfig, batch: int) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), jnp.float32),
+    }
+
+
+def rglru_decode_step(
+    p: Params, cfg: RGLRUConfig, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token path. x: (B, 1, d_model)."""
+    cd = cfg.compute_dtype
+    inner = linear(p["w_in"], x, compute_dtype=cd)  # (B,1,dr)
+    gate = jax.nn.gelu(linear(p["w_gate"], x, compute_dtype=cd))
+    w = p["conv"].astype(jnp.float32)
+    hist = jnp.concatenate(
+        [state["conv"], inner[:, 0:1].astype(jnp.float32)], axis=1
+    )  # (B, W, dr)
+    conv = jnp.einsum("bwd,wd->bd", hist, w)
+    a, gated = _lru_gates(p, conv)
+    h = a * state["h"] + gated
+    out = (h[:, None].astype(cd) * gate)
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return linear(p["w_out"], out, compute_dtype=cd), new_state

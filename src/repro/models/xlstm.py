@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM — the parallelizable variant — is implemented in *chunked* form:
+within a chunk the quadratic gate-matrix formulation runs on the MXU;
+across chunks a ``lax.scan`` carries the (d_k × d_v) matrix state.  This
+is O(S·chunk) not O(S²), which is what makes the ``long_500k`` shape
+admissible for this architecture (DESIGN.md 4).
+
+sLSTM keeps exponential-gate scalar memories with a per-step recurrence
+(``lax.scan`` over time); decode for both is a single O(1) state update.
+
+Both blocks follow the paper's pre-norm residual structure with
+up/down projections (xLSTM has no separate FFN — d_ff=0 in the assigned
+config): mLSTM projects up 2x, sLSTM uses a 4/3 GLU after mixing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Params,
+    init_linear,
+    init_rmsnorm,
+    linear,
+    rmsnorm,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int
+    proj_factor_m: float = 2.0
+    proj_factor_s: float = 4.0 / 3.0
+    chunk: int = 64
+    compute_dtype: Any = jnp.bfloat16
+
+    @property
+    def d_inner_m(self) -> int:
+        return int(self.d_model * self.proj_factor_m)
+
+    @property
+    def d_head_m(self) -> int:
+        return self.d_inner_m // self.n_heads
+
+
+# ===================================================================== mLSTM
+def init_mlstm(key, cfg: XLSTMConfig, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 8)
+    d, di = cfg.d_model, cfg.d_inner_m
+    return {
+        "up": init_linear(ks[0], d, 2 * di, dtype=dtype),  # x and gate halves
+        "wq": init_linear(ks[1], di, di, dtype=dtype),
+        "wk": init_linear(ks[2], di, di, dtype=dtype),
+        "wv": init_linear(ks[3], di, di, dtype=dtype),
+        "wi": init_linear(ks[4], di, cfg.n_heads, dtype=dtype),
+        "wf": init_linear(ks[5], di, cfg.n_heads, dtype=dtype),
+        "down": init_linear(ks[6], di, d, dtype=dtype, scale=di**-0.5),
+        "norm": init_rmsnorm(di, dtype=dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i):
+    """Chunked linear-attention-with-gates.
+
+    q,k,v: (B, H, S, D); log_f/log_i: (B, H, S).  Returns (B, H, S, D).
+    Stabilized with per-chunk running max (as in the xLSTM paper's m_t).
+    """
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    c = min(64, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    qc = q.reshape(b, h, nc, c, dk)
+    kc = k.reshape(b, h, nc, c, dk)
+    vc = v.reshape(b, h, nc, c, dv)
+    fc = log_f.reshape(b, h, nc, c)
+    ic = log_i.reshape(b, h, nc, c)
+
+    # cumulative forget within chunk: L[t] = sum_{u<=t} log_f[u]
+    csum_f = jnp.cumsum(fc, axis=-1)  # (B,H,nc,c)
+    total_f = csum_f[..., -1]  # (B,H,nc)
+
+    # move chunk axis first for scan
+    def prep(x):
+        return jnp.moveaxis(x, 2, 0)
+
+    qs, ks_, vs, cf, ci, tf = map(prep, (qc, kc, vc, csum_f, ic, total_f))
+
+    def body(carry, inp):
+        state, norm, m_prev = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qb, kb, vb, cfb, cib, tfb = inp
+        # decay for each in-chunk key position to the end of the chunk
+        # log weight for key u -> state: total_f - csum_f[u] + log_i[u]
+        key_decay = tfb[..., None] - cfb + cib  # (B,H,c)
+        # intra-chunk pairwise: log D[t,u] = csum_f[t] - csum_f[u] + log_i[u], u<=t
+        pair = cfb[..., :, None] - cfb[..., None, :] + cib[..., None, :]
+        tri = jnp.tril(jnp.ones((pair.shape[-1], pair.shape[-1]), bool))
+        pair = jnp.where(tri, pair, -jnp.inf)
+        # query decay from previous state: csum_f[t] (+ m_prev carried)
+        q_decay = cfb + m_prev[..., None]  # (B,H,c)
+        m_new = jnp.maximum(
+            jnp.max(pair, axis=-1), q_decay
+        )  # (B,H,c) running stabilizer per row
+        intra_w = jnp.exp(pair - m_new[..., None])  # (B,H,c,c)
+        inter_w = jnp.exp(q_decay - m_new)  # (B,H,c)
+
+        scores = jnp.einsum("bhtd,bhud->bhtu", qb, kb) * (qb.shape[-1] ** -0.5)
+        intra = jnp.einsum("bhtu,bhud->bhtd", scores * intra_w, vb)
+        inter = jnp.einsum("bhtd,bhdv->bhtv", qb, state) * inter_w[..., None] * (
+            qb.shape[-1] ** -0.5
+        )
+        # normalizer (denominator) — xLSTM uses max(|n·q|, 1)
+        norm_intra = jnp.einsum("bhtu,bhu->bht", scores * intra_w, jnp.ones_like(cib))
+        norm_inter = jnp.einsum("bhtd,bhd->bht", qb, norm) * inter_w * (
+            qb.shape[-1] ** -0.5
+        )
+        denom = jnp.maximum(jnp.abs(norm_intra + norm_inter), jnp.exp(-m_new))
+        out = (intra + inter) / denom[..., None]
+
+        # carry to next chunk: new stabilizer is max over chunk end decay
+        m_chunk = m_prev + tfb  # decayed previous max
+        m_carry = jnp.maximum(m_chunk, jnp.max(key_decay, axis=-1))
+        state_new = state * jnp.exp(m_chunk - m_carry)[..., None, None] + jnp.einsum(
+            "bhud,bhuv->bhdv", kb * jnp.exp(key_decay - m_carry[..., None])[..., None], vb
+        )
+        norm_new = norm * jnp.exp(m_chunk - m_carry)[..., None] + jnp.einsum(
+            "bhud,bhu->bhd", kb, jnp.exp(key_decay - m_carry[..., None])
+        )
+        return (state_new, norm_new, m_carry), out
+
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    norm0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    (_, _, _), outs = jax.lax.scan(body, (state0, norm0, m0), (qs, ks_, vs, cf, ci, tf))
+    return jnp.moveaxis(outs, 0, 2).reshape(b, h, s, dv)
+
+
+def mlstm_block(
+    p: Params, cfg: XLSTMConfig, x: jax.Array
+) -> jax.Array:
+    """x: (B, S, d_model) → (B, S, d_model), full-sequence (train)."""
+    b, s, _ = x.shape
+    cd = cfg.compute_dtype
+    h, dh = cfg.n_heads, cfg.d_head_m
+    up = linear(p["up"], x, compute_dtype=cd)
+    inner, gate = jnp.split(up, 2, axis=-1)  # (B,S,di) each
+    q = linear(p["wq"], inner, compute_dtype=cd).reshape(b, s, h, dh).swapaxes(1, 2)
+    k = linear(p["wk"], inner, compute_dtype=cd).reshape(b, s, h, dh).swapaxes(1, 2)
+    v = linear(p["wv"], inner, compute_dtype=cd).reshape(b, s, h, dh).swapaxes(1, 2)
+    log_i = linear(p["wi"], inner, compute_dtype=cd).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        linear(p["wf"], inner, compute_dtype=cd).astype(jnp.float32)
+    )
+    log_i = jnp.moveaxis(log_i, -1, 1)  # (B,H,S)
+    log_f = jnp.moveaxis(log_f, -1, 1)
+    out = _mlstm_chunk_scan(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        log_f, log_i,
+    )  # (B,H,S,dh)
+    merged = out.swapaxes(1, 2).reshape(b, s, h * dh).astype(cd)
+    merged = rmsnorm(p["norm"], merged) * jax.nn.silu(gate)
+    return linear(p["down"], merged, compute_dtype=cd)
+
+
+def init_mlstm_state(cfg: XLSTMConfig, batch: int) -> Dict[str, jax.Array]:
+    h, dh = cfg.n_heads, cfg.d_head_m
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+def mlstm_decode_step(
+    p: Params, cfg: XLSTMConfig, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, 1, d) one token; O(1) recurrent update."""
+    b = x.shape[0]
+    cd = cfg.compute_dtype
+    h, dh = cfg.n_heads, cfg.d_head_m
+    up = linear(p["up"], x, compute_dtype=cd)
+    inner, gate = jnp.split(up, 2, axis=-1)
+    q = linear(p["wq"], inner, compute_dtype=cd).reshape(b, h, dh).astype(jnp.float32)
+    k = linear(p["wk"], inner, compute_dtype=cd).reshape(b, h, dh).astype(jnp.float32)
+    v = linear(p["wv"], inner, compute_dtype=cd).reshape(b, h, dh).astype(jnp.float32)
+    log_i = linear(p["wi"], inner, compute_dtype=cd).astype(jnp.float32).reshape(b, h)
+    log_f = jax.nn.log_sigmoid(
+        linear(p["wf"], inner, compute_dtype=cd).astype(jnp.float32)
+    ).reshape(b, h)
+    m_new = jnp.maximum(state["m"] + log_f, log_i)
+    f_w = jnp.exp(state["m"] + log_f - m_new)
+    i_w = jnp.exp(log_i - m_new)
+    C = state["C"] * f_w[..., None, None] + jnp.einsum("bhd,bhv->bhdv", k * i_w[..., None], v)
+    nvec = state["n"] * f_w[..., None] + k * i_w[..., None]
+    num = jnp.einsum("bhd,bhdv->bhv", q, C) * (dh**-0.5)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q, nvec)) * (dh**-0.5), jnp.exp(-m_new)
+    )
+    out = (num / den[..., None]).reshape(b, 1, h * dh).astype(cd)
+    out = rmsnorm(p["norm"], out) * jax.nn.silu(gate)
+    return linear(p["down"], out, compute_dtype=cd), {"C": C, "n": nvec, "m": m_new}
+
+
+# ===================================================================== sLSTM
+def init_slstm(key, cfg: XLSTMConfig, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    dg = int(d * cfg.proj_factor_s)
+    return {
+        # i, f, z, o gates from input (recurrent weights folded into a
+        # block-diagonal-by-head matrix, simplified to per-head dense)
+        "wx": init_linear(ks[0], d, 4 * d, dtype=dtype),
+        "wr": init_linear(ks[1], d, 4 * d, dtype=dtype, scale=d**-0.5),
+        "norm": init_rmsnorm(d, dtype=dtype),
+        "up_gate": init_linear(ks[2], d, dg, dtype=dtype),
+        "up": init_linear(ks[3], d, dg, dtype=dtype),
+        "down": init_linear(ks[4], dg, d, dtype=dtype, scale=dg**-0.5),
+    }
+
+
+def init_slstm_state(cfg: XLSTMConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, cfg, state, xt):
+    """One sLSTM step. xt: (B, d) f32."""
+    cd = cfg.compute_dtype
+    gates_x = linear(p["wx"], xt.astype(cd), compute_dtype=cd).astype(jnp.float32)
+    gates_r = linear(p["wr"], state["h"].astype(cd), compute_dtype=cd).astype(jnp.float32)
+    gi, gf, gz, go = jnp.split(gates_x + gates_r, 4, axis=-1)
+    log_i = gi  # exponential input gate (log-space)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(state["m"] + log_f, log_i)
+    i_w = jnp.exp(log_i - m_new)
+    f_w = jnp.exp(state["m"] + log_f - m_new)
+    z = jnp.tanh(gz)
+    o = jax.nn.sigmoid(go)
+    c = f_w * state["c"] + i_w * z
+    n = f_w * state["n"] + i_w
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_block(p: Params, cfg: XLSTMConfig, x: jax.Array) -> jax.Array:
+    """Sequential scan over time (B, S, d) → (B, S, d)."""
+    b, s, d = x.shape
+    cd = cfg.compute_dtype
+    x32 = x.astype(jnp.float32)
+
+    def step(state, xt):
+        new = _slstm_cell(p, cfg, state, xt)
+        return new, new["h"]
+
+    state0 = init_slstm_state(cfg, b)
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(x32, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(cd)  # (B,S,d)
+    h = rmsnorm(p["norm"], h)
+    u = linear(p["up"], h, compute_dtype=cd)
+    g = linear(p["up_gate"], h, compute_dtype=cd)
+    return linear(p["down"], u * jax.nn.gelu(g), compute_dtype=cd)
+
+
+def slstm_decode_step(
+    p: Params, cfg: XLSTMConfig, x: jax.Array, state: Dict[str, jax.Array]
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    cd = cfg.compute_dtype
+    new = _slstm_cell(p, cfg, state, x[:, 0].astype(jnp.float32))
+    h = new["h"][:, None].astype(cd)
+    h = rmsnorm(p["norm"], h)
+    u = linear(p["up"], h, compute_dtype=cd)
+    g = linear(p["up_gate"], h, compute_dtype=cd)
+    return linear(p["down"], u * jax.nn.gelu(g), compute_dtype=cd), new

@@ -1,0 +1,37 @@
+"""Serverless runtime (paper 4.5) — functions, warm starts, elasticity, faults.
+
+The paper's differentiating investment: an orchestration + memory-management
+layer where *vertical elasticity* and data locality matter more than
+horizontal scale-out.  TPU adaptation:
+
+* container freeze/thaw (their 300 ms trick)  →  warm compiled-executable
+  cache keyed by function fingerprint × abstract input shapes;
+* per-function memory sizing                  →  cost-model-driven memory
+  tiers and submesh allocation;
+* function isolation + shared artifacts       →  stateless pure functions
+  passing device arrays inside a run (object store only at run boundaries);
+* reliability (async mode)                    →  retries, heartbeat timeouts,
+  straggler speculation, failure injection for tests.
+"""
+from repro.runtime.function import FunctionSpec
+from repro.runtime.warm import WarmFunctionCache, StartupStats
+from repro.runtime.resources import ResourceRequest, CostModel, MEMORY_TIERS_GB
+from repro.runtime.executor import (
+    ServerlessExecutor,
+    ExecutorConfig,
+    TaskFailure,
+    FaultInjector,
+)
+
+__all__ = [
+    "FunctionSpec",
+    "WarmFunctionCache",
+    "StartupStats",
+    "ResourceRequest",
+    "CostModel",
+    "MEMORY_TIERS_GB",
+    "ServerlessExecutor",
+    "ExecutorConfig",
+    "TaskFailure",
+    "FaultInjector",
+]

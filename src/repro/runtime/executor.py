@@ -1,0 +1,213 @@
+"""The serverless executor: isolation, retries, stragglers, fault injection.
+
+Each submitted task is conceptually one ephemeral container.  On this
+single-host build, containers are worker threads; the *semantics* carried
+to a real deployment are what matter and are what the tests pin down:
+
+* **at-least-once with idempotence** — tasks are pure functions of their
+  inputs, so retries and speculative duplicates are safe by construction
+  (this is why the paper insists on functional pipelines);
+* **bounded retries** on worker failure, with exponential backoff;
+* **straggler speculation** — if a task exceeds ``speculation_factor`` ×
+  the median duration of its completed siblings, a duplicate launches and
+  the first finisher wins (standard backup-request trick, scaled down);
+* **failure injection** — tests wrap task functions with a FaultInjector
+  that kills the first N attempts to prove the retry path.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.runtime.function import FunctionSpec
+from repro.runtime.warm import WarmFunctionCache
+from repro.utils.logging import get_logger
+
+log = get_logger("runtime.executor")
+
+
+class TaskFailure(RuntimeError):
+    """A task exhausted its retries."""
+
+
+@dataclass
+class ExecutorConfig:
+    max_workers: int = 4
+    max_retries: int = 3
+    retry_backoff_s: float = 0.01
+    #: speculate a duplicate when runtime > factor × median sibling time
+    speculation_factor: float = 3.0
+    #: minimum completed siblings before speculation kicks in
+    speculation_min_samples: int = 3
+    #: hard per-attempt timeout (None = no timeout); a timed-out attempt
+    #: counts as a failure and is retried
+    attempt_timeout_s: Optional[float] = None
+
+
+@dataclass
+class TaskRecord:
+    name: str
+    attempts: int = 0
+    speculated: bool = False
+    duration_s: float = 0.0
+    worker: str = ""
+
+
+@dataclass
+class FaultInjector:
+    """Deterministically fail the first ``failures`` attempts of a task."""
+
+    failures: Dict[str, int] = field(default_factory=dict)
+    seen: Dict[str, int] = field(default_factory=dict)
+
+    def maybe_fail(self, task_name: str) -> None:
+        remaining = self.failures.get(task_name, 0)
+        count = self.seen.get(task_name, 0)
+        self.seen[task_name] = count + 1
+        if count < remaining:
+            raise RuntimeError(
+                f"[fault-injection] simulated container crash for {task_name!r} "
+                f"(attempt {count + 1}/{remaining})"
+            )
+
+
+class ServerlessExecutor:
+    """Thread-pool "container fleet" with the semantics described above."""
+
+    def __init__(
+        self,
+        config: Optional[ExecutorConfig] = None,
+        *,
+        warm_cache: Optional[WarmFunctionCache] = None,
+        fault_injector: Optional[FaultInjector] = None,
+    ) -> None:
+        self.config = config or ExecutorConfig()
+        self.warm_cache = warm_cache or WarmFunctionCache()
+        self.fault_injector = fault_injector
+        self.records: List[TaskRecord] = []
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.config.max_workers, thread_name_prefix="container"
+        )
+        self._durations: List[float] = []
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------- lifecycle
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "ServerlessExecutor":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------- running
+    def _attempt(self, spec: FunctionSpec, args: Tuple[Any, ...]) -> Any:
+        if self.fault_injector is not None:
+            self.fault_injector.maybe_fail(spec.name)
+        fn = self.warm_cache.get_or_compile(spec, *args)
+        return fn(*args)
+
+    def _run_with_retries(self, spec: FunctionSpec, args: Tuple[Any, ...]) -> Any:
+        record = TaskRecord(name=spec.name, worker=threading.current_thread().name)
+        last_err: Optional[BaseException] = None
+        for attempt in range(self.config.max_retries + 1):
+            record.attempts = attempt + 1
+            t0 = time.perf_counter()
+            try:
+                result = self._attempt(spec, args)
+                record.duration_s = time.perf_counter() - t0
+                with self._lock:
+                    self.records.append(record)
+                    self._durations.append(record.duration_s)
+                return result
+            except Exception as e:  # container crash → retry
+                last_err = e
+                log.warning(
+                    "task %s attempt %d failed: %s", spec.name, attempt + 1, e
+                )
+                time.sleep(self.config.retry_backoff_s * (2**attempt))
+        with self._lock:
+            self.records.append(record)
+        raise TaskFailure(
+            f"task {spec.name!r} failed after {self.config.max_retries + 1} attempts"
+        ) from last_err
+
+    def submit(self, spec: FunctionSpec, *args: Any) -> "Future[Any]":
+        return self._pool.submit(self._run_with_retries, spec, args)
+
+    def run(self, spec: FunctionSpec, *args: Any) -> Any:
+        return self.submit(spec, *args).result()
+
+    # -------------------------------------------------- bulk + speculation
+    def map_with_speculation(
+        self, specs_and_args: Sequence[Tuple[FunctionSpec, Tuple[Any, ...]]]
+    ) -> List[Any]:
+        """Run a batch of sibling tasks; duplicate stragglers.
+
+        Used for fan-out stages (per-shard transforms, eval shards).  The
+        duplicate races the original; first result wins — pure functions
+        make the race benign.
+        """
+        cfg = self.config
+        futures: List[Future] = [
+            self._pool.submit(self._run_with_retries, spec, args)
+            for spec, args in specs_and_args
+        ]
+        start = [time.perf_counter()] * len(futures)
+        results: List[Any] = [None] * len(futures)
+        done = [False] * len(futures)
+        speculated: Dict[int, Future] = {}
+        while not all(done):
+            completed_times = [
+                time.perf_counter() - start[i] for i, d in enumerate(done) if d
+            ]
+            median = (
+                sorted(completed_times)[len(completed_times) // 2]
+                if len(completed_times) >= cfg.speculation_min_samples
+                else None
+            )
+            for i, fut in enumerate(futures):
+                if done[i]:
+                    continue
+                spec, args = specs_and_args[i]
+                winner: Optional[Future] = None
+                if fut.done():
+                    winner = fut
+                elif i in speculated and speculated[i].done():
+                    winner = speculated[i]
+                if winner is not None:
+                    results[i] = winner.result()
+                    done[i] = True
+                    continue
+                elapsed = time.perf_counter() - start[i]
+                if (
+                    median is not None
+                    and i not in speculated
+                    and elapsed > cfg.speculation_factor * max(median, 1e-4)
+                ):
+                    log.info("speculating straggler task %s", spec.name)
+                    with self._lock:
+                        for r in self.records:
+                            if r.name == spec.name:
+                                r.speculated = True
+                    speculated[i] = self._pool.submit(
+                        self._run_with_retries, spec, args
+                    )
+            time.sleep(0.002)
+        return results
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "tasks": len(self.records),
+                "retries": sum(r.attempts - 1 for r in self.records),
+                "speculated": sum(r.speculated for r in self.records),
+                "cold_starts": self.warm_cache.stats.cold_starts,
+                "warm_hits": self.warm_cache.stats.warm_hits,
+            }

@@ -1,0 +1,146 @@
+"""Serving engine: batched prefill + decode over catalog checkpoints.
+
+The Query+Wrangle interaction mode (paper Table 1) applied to models: a
+synchronous request against an artifact checked out from a branch.  The
+engine batches concurrent requests (static max_batch slots, ragged
+lengths), prefills each prompt, then steps all live slots together —
+a compact continuous-batching core:
+
+* slots: fixed-capacity request table (ragged ``lengths`` mask);
+* admission: new requests claim free slots between decode steps;
+* the decode step is one jitted call for the whole slot table (the warm
+  compiled-fn cache makes admission cheap — shapes never change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+from repro.utils.logging import get_logger
+
+log = get_logger("serve.engine")
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    max_len: int = 256
+    temperature: float = 0.0  # 0 = greedy
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 16
+    # filled by the engine:
+    slot: int = -1
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params: Any, cfg: ServeConfig):
+        if model.cfg.n_codebooks > 1:
+            raise NotImplementedError(
+                "the reference engine serves single-codebook LMs"
+            )
+        recurrent = {"mlstm", "slstm", "rec"}
+        kinds = {k for unit, _ in model.cfg.segments for k in unit}
+        if kinds & recurrent:
+            # recurrent state updates are not lengths-gated: concurrent
+            # slot batching would cross-contaminate; serve these archs
+            # with max_batch==1 (decode_step itself is fine — it's what
+            # the dry-run lowers)
+            if cfg.max_batch != 1:
+                raise NotImplementedError(
+                    "recurrent-state archs: use max_batch=1 in the "
+                    "reference engine"
+                )
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.state = model.init_decode_state(cfg.max_batch, max_len=cfg.max_len)
+        self.lengths = jnp.zeros((cfg.max_batch,), jnp.int32)
+        self.free = list(range(cfg.max_batch))
+        self._decode = jax.jit(model.decode_step)
+
+    def _reset_slot(self, slot: int) -> None:
+        """Zero a slot's cache/state and length before reuse."""
+        self.state = jax.tree_util.tree_map(
+            lambda s: s.at[:, slot].set(0) if s.ndim >= 2 else s, self.state
+        )
+        self.lengths = self.lengths.at[slot].set(0)
+
+    # ------------------------------------------------------------ admission
+    def admit(self, req: Request) -> bool:
+        if not self.free:
+            return False
+        req.slot = self.free.pop(0)
+        self._reset_slot(req.slot)
+        # prefill: feed prompt tokens one step at a time through the same
+        # decode path (keeps a single compiled executable; a blocked
+        # prefill kernel is the §Perf upgrade path)
+        for tok in req.prompt:
+            logits, self.state = self._decode(
+                self.params,
+                self.state,
+                self._slot_tokens(req.slot, int(tok)),
+                self.lengths,
+            )
+            self.lengths = self.lengths.at[req.slot].add(1)
+        req._next_logits = logits[req.slot, 0]
+        return True
+
+    def _slot_tokens(self, slot: int, token: int) -> jax.Array:
+        toks = jnp.zeros((self.cfg.max_batch, 1), jnp.int32)
+        return toks.at[slot, 0].set(token)
+
+    # --------------------------------------------------------------- decode
+    def _sample(self, logits: jax.Array, rng: np.random.Generator) -> int:
+        if self.cfg.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        p = np.asarray(
+            jax.nn.softmax(logits.astype(jnp.float32) / self.cfg.temperature)
+        )
+        return int(rng.choice(len(p), p=p / p.sum()))
+
+    def step(self, live: List[Request], rng: np.random.Generator) -> None:
+        """One synchronized decode step over all live requests."""
+        if not live:
+            return
+        toks = jnp.zeros((self.cfg.max_batch, 1), jnp.int32)
+        for req in live:
+            nxt = self._sample(req._next_logits, rng)
+            req.generated.append(nxt)
+            toks = toks.at[req.slot, 0].set(nxt)
+        logits, self.state = self._decode(
+            self.params, self.state, toks, self.lengths
+        )
+        for req in live:
+            req._next_logits = logits[req.slot, 0]
+            self.lengths = self.lengths.at[req.slot].add(1)
+            if (
+                len(req.generated) >= req.max_new_tokens
+                or int(self.lengths[req.slot]) >= self.cfg.max_len - 1
+            ):
+                req.done = True
+                self.free.append(req.slot)
+
+    # ------------------------------------------------------------------ run
+    def generate(self, requests: List[Request], *, seed: int = 0) -> List[Request]:
+        rng = np.random.default_rng(seed)
+        queue = list(requests)
+        live: List[Request] = []
+        while queue or live:
+            while queue and self.free:
+                req = queue.pop(0)
+                if self.admit(req):
+                    live.append(req)
+            self.step(live, rng)
+            live = [r for r in live if not r.done]
+        return requests

@@ -1,0 +1,169 @@
+"""TensorTable physical format: shards, manifests, snapshots.
+
+Responsibility split (mirrors Parquet vs Iceberg):
+
+* a **shard** is one immutable columnar blob per column (content-addressed),
+  plus per-column min/max stats captured at write time;
+* a **manifest** lists the shards of one table version;
+* a **snapshot** is (schema, manifest, lineage) — the unit the catalog
+  commits.  Appends create a new snapshot sharing parent shards
+  (structural sharing = cheap time travel, paper 4.2/4.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.io.objectstore import ObjectStore
+from repro.io.serialization import array_to_bytes, bytes_to_array, dumps_json, loads_json
+from repro.table.schema import Schema
+from repro.utils.hashing import stable_hash
+
+#: default rows per shard — small enough that predicate pushdown has
+#: something to prune, big enough to amortize per-shard overheads.
+DEFAULT_SHARD_ROWS = 65536
+
+
+@dataclass(frozen=True)
+class ShardMeta:
+    """Metadata for one shard: blob keys + per-column stats."""
+
+    num_rows: int
+    column_blobs: Dict[str, str]  # column name -> object-store key
+    column_stats: Dict[str, Dict[str, float]]  # column name -> {min, max}
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "num_rows": self.num_rows,
+            "column_blobs": self.column_blobs,
+            "column_stats": self.column_stats,
+        }
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "ShardMeta":
+        return ShardMeta(d["num_rows"], d["column_blobs"], d["column_stats"])
+
+
+@dataclass(frozen=True)
+class Snapshot:
+    """One immutable table version."""
+
+    table: str
+    snapshot_id: str
+    schema: Schema
+    shards: Sequence[ShardMeta]
+    parent_id: Optional[str]  # lineage for time travel
+
+    @property
+    def num_rows(self) -> int:
+        return sum(s.num_rows for s in self.shards)
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "table": self.table,
+            "snapshot_id": self.snapshot_id,
+            "schema": self.schema.to_json_dict(),
+            "shards": [s.to_json_dict() for s in self.shards],
+            "parent_id": self.parent_id,
+        }
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "Snapshot":
+        return Snapshot(
+            table=d["table"],
+            snapshot_id=d["snapshot_id"],
+            schema=Schema.from_json_dict(d["schema"]),
+            shards=tuple(ShardMeta.from_json_dict(s) for s in d["shards"]),
+            parent_id=d.get("parent_id"),
+        )
+
+
+#: A fully-materialized columnar table in memory: {column: 1-D array}.
+TableData = Dict[str, np.ndarray]
+
+
+@dataclass
+class TableFormat:
+    """Reader/writer for TensorTables over an ObjectStore."""
+
+    store: ObjectStore
+    shard_rows: int = DEFAULT_SHARD_ROWS
+
+    # ----------------------------------------------------------------- write
+    def write(
+        self,
+        table: str,
+        schema: Schema,
+        data: TableData,
+        *,
+        parent: Optional[Snapshot] = None,
+        append: bool = False,
+    ) -> Snapshot:
+        """Write a new snapshot. ``append=True`` keeps the parent's shards."""
+        nrows = schema.validate_batch(data)
+        shards: List[ShardMeta] = []
+        if append and parent is not None:
+            if parent.schema != schema:
+                raise TypeError(
+                    f"append schema mismatch for {table}: "
+                    f"{schema.names} vs {parent.schema.names}"
+                )
+            shards.extend(parent.shards)
+        for start in range(0, max(nrows, 1), self.shard_rows):
+            stop = min(start + self.shard_rows, nrows)
+            if stop <= start:
+                break
+            blobs: Dict[str, str] = {}
+            stats: Dict[str, Dict[str, float]] = {}
+            for col in schema.columns:
+                chunk = np.ascontiguousarray(data[col.name][start:stop])
+                blobs[col.name] = self.store.put(array_to_bytes(chunk))
+                if chunk.size and chunk.dtype.kind in "iuf":
+                    stats[col.name] = {
+                        "min": float(np.min(chunk)),
+                        "max": float(np.max(chunk)),
+                    }
+                else:
+                    stats[col.name] = {"min": float("-inf"), "max": float("inf")}
+            shards.append(ShardMeta(stop - start, blobs, stats))
+        snapshot_id = stable_hash(
+            {
+                "table": table,
+                "schema": schema.to_json_dict(),
+                "shards": [s.to_json_dict() for s in shards],
+                "parent": parent.snapshot_id if parent else None,
+            }
+        )
+        snap = Snapshot(table, snapshot_id, schema, tuple(shards),
+                        parent.snapshot_id if parent else None)
+        # persist the snapshot manifest itself so catalogs only hold keys
+        self.store.put(dumps_json(snap.to_json_dict()))
+        return snap
+
+    # ------------------------------------------------------------------ read
+    def read_shard(
+        self, shard: ShardMeta, columns: Optional[Sequence[str]] = None
+    ) -> TableData:
+        cols = columns if columns is not None else list(shard.column_blobs)
+        return {c: bytes_to_array(self.store.get(shard.column_blobs[c])) for c in cols}
+
+    def read(
+        self, snapshot: Snapshot, columns: Optional[Sequence[str]] = None
+    ) -> TableData:
+        """Materialize (selected columns of) a snapshot into memory."""
+        cols = list(columns) if columns is not None else snapshot.schema.names
+        if not snapshot.shards:
+            return {
+                c: np.empty((0,), dtype=snapshot.schema.dtype_of(c)) for c in cols
+            }
+        parts = [self.read_shard(s, cols) for s in snapshot.shards]
+        return {c: np.concatenate([p[c] for p in parts]) for c in cols}
+
+    def load_snapshot(self, manifest_key: str) -> Snapshot:
+        return Snapshot.from_json_dict(loads_json(self.store.get(manifest_key)))
+
+    def manifest_key(self, snapshot: Snapshot) -> str:
+        """Content address of a snapshot manifest (what catalogs store)."""
+        return self.store.put(dumps_json(snapshot.to_json_dict()))

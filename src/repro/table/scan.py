@@ -1,0 +1,129 @@
+"""Scan planning: column pruning + predicate pushdown over shard stats.
+
+This is the metadata half of the paper's 4.4.2 optimization: before any
+bytes move, the planner uses per-shard min/max statistics to drop shards
+that cannot contain matching rows, and reads only referenced columns.
+``execute_scan`` then applies the residual predicate row-wise, so downstream
+fused stages see an already-small in-memory table.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.table.format import ShardMeta, Snapshot, TableData, TableFormat
+
+_OPS = {"<", "<=", ">", ">=", "==", "!="}
+
+
+@dataclass(frozen=True)
+class Predicate:
+    """A conjunct: ``column <op> literal``."""
+
+    column: str
+    op: str
+    value: float
+
+    def __post_init__(self) -> None:
+        if self.op not in _OPS:
+            raise ValueError(f"unsupported predicate op {self.op!r}")
+
+    def to_json_dict(self) -> Dict:
+        return {"column": self.column, "op": self.op, "value": self.value}
+
+    # --- shard-level: can this shard possibly contain a matching row? ------
+    def may_match(self, stats: Dict[str, Dict[str, float]]) -> bool:
+        st = stats.get(self.column)
+        if st is None:
+            return True
+        lo, hi = st["min"], st["max"]
+        v = self.value
+        if self.op == "<":
+            return lo < v
+        if self.op == "<=":
+            return lo <= v
+        if self.op == ">":
+            return hi > v
+        if self.op == ">=":
+            return hi >= v
+        if self.op == "==":
+            return lo <= v <= hi
+        return not (lo == hi == v)  # "!=": only prunable if constant shard
+
+    # --- row-level ----------------------------------------------------------
+    def mask(self, col: np.ndarray) -> np.ndarray:
+        v = col.dtype.type(self.value) if col.dtype.kind in "iuf" else self.value
+        if self.op == "<":
+            return col < v
+        if self.op == "<=":
+            return col <= v
+        if self.op == ">":
+            return col > v
+        if self.op == ">=":
+            return col >= v
+        if self.op == "==":
+            return col == v
+        return col != v
+
+
+@dataclass
+class ScanPlan:
+    """Output of planning: which shards survive, which columns to read."""
+
+    snapshot: Snapshot
+    columns: List[str]
+    predicates: Tuple[Predicate, ...]
+    shards: List[ShardMeta]
+    pruned_shards: int = 0
+    pruned_columns: int = 0
+
+    @property
+    def rows_to_read(self) -> int:
+        return sum(s.num_rows for s in self.shards)
+
+
+def plan_scan(
+    snapshot: Snapshot,
+    *,
+    columns: Optional[Sequence[str]] = None,
+    predicates: Sequence[Predicate] = (),
+) -> ScanPlan:
+    all_cols = snapshot.schema.names
+    needed = list(columns) if columns is not None else list(all_cols)
+    # predicate columns must be read even if not projected
+    read_cols = list(dict.fromkeys(needed + [p.column for p in predicates]))
+    snapshot.schema.select(read_cols)  # validates existence
+    keep: List[ShardMeta] = []
+    for shard in snapshot.shards:
+        if all(p.may_match(shard.column_stats) for p in predicates):
+            keep.append(shard)
+    return ScanPlan(
+        snapshot=snapshot,
+        columns=read_cols,
+        predicates=tuple(predicates),
+        shards=keep,
+        pruned_shards=len(snapshot.shards) - len(keep),
+        pruned_columns=len(all_cols) - len(read_cols),
+    )
+
+
+def execute_scan(fmt: TableFormat, plan: ScanPlan) -> TableData:
+    """Read surviving shards, apply the residual row-level predicate."""
+    if not plan.shards:
+        return {
+            c: np.empty((0,), dtype=plan.snapshot.schema.dtype_of(c))
+            for c in plan.columns
+        }
+    parts: List[TableData] = []
+    for shard in plan.shards:
+        part = fmt.read_shard(shard, plan.columns)
+        if plan.predicates:
+            mask = np.ones(shard.num_rows, dtype=bool)
+            for p in plan.predicates:
+                mask &= p.mask(part[p.column])
+            if not mask.all():
+                part = {c: v[mask] for c, v in part.items()}
+        parts.append(part)
+    return {c: np.concatenate([p[c] for p in parts]) for c in plan.columns}

@@ -1,0 +1,26 @@
+"""Training substrate: optimizers, schedules, steps, checkpoints, loop."""
+from repro.train.optimizer import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    adafactor_init,
+    adafactor_update,
+)
+from repro.train.schedule import warmup_cosine
+from repro.train.step import TrainStepConfig, make_train_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "warmup_cosine",
+    "TrainStepConfig",
+    "make_train_step",
+    "CheckpointManager",
+    "TrainLoop",
+    "TrainLoopConfig",
+]

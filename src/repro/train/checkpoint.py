@@ -1,0 +1,166 @@
+"""Checkpointing INTO the lakehouse catalog — transform-audit-write for
+model state (DESIGN.md §2).
+
+A checkpoint is a content-addressed manifest {param_path: blob_key}
+committed to a catalog branch like any table.  Properties inherited from
+the data layer for free:
+
+* **atomicity** — the commit lands only after every blob is durably in
+  the store (a crashed save can never leave a half-checkpoint visible);
+* **dedup** — unchanged leaves (frozen embeddings, optimizer count)
+  re-use their blobs across checkpoints (content addressing);
+* **mesh-agnostic restore** — leaves are stored as host numpy and
+  re-placed with whatever shardings the restoring mesh wants: restart on
+  a different topology = elastic scaling;
+* **lineage/time travel** — every checkpoint is a commit; rollback is a
+  branch reset; runs record which commit they started from.
+
+Saves can run asynchronously (serialize + upload on a background thread),
+overlapping the next training steps — the async path is the default in
+the training loop.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.catalog.nessie import Catalog
+from repro.io.objectstore import ObjectStore
+from repro.io.serialization import array_to_bytes, bytes_to_array, dumps_json, loads_json
+from repro.utils.logging import get_logger
+from repro.utils.tree import flatten_with_paths
+
+log = get_logger("train.checkpoint")
+
+
+@dataclass
+class CheckpointManager:
+    catalog: Catalog
+    prefix: str = "models/default"
+
+    def _artifact(self) -> str:
+        return f"{self.prefix}/checkpoint"
+
+    # ----------------------------------------------------------------- save
+    def save(
+        self,
+        tree: Any,
+        *,
+        branch: str,
+        step: int,
+        extra_meta: Optional[Dict[str, Any]] = None,
+    ) -> str:
+        """Synchronous save: blobs → manifest → catalog commit."""
+        store = self.catalog.store
+        flat = flatten_with_paths(tree)
+        manifest: Dict[str, Any] = {"leaves": {}, "step": step,
+                                    "saved_at": time.time(),
+                                    "meta": extra_meta or {}}
+        for path, leaf in flat.items():
+            host = np.asarray(jax.device_get(leaf))
+            manifest["leaves"][path] = store.put(array_to_bytes(host))
+        key = store.put(dumps_json(manifest))
+        self.catalog.commit(
+            branch,
+            {self._artifact(): key},
+            message=f"checkpoint step={step}",
+            author="trainer",
+        )
+        return key
+
+    def save_async(
+        self,
+        tree: Any,
+        *,
+        branch: str,
+        step: int,
+        extra_meta: Optional[Dict[str, Any]] = None,
+    ) -> threading.Thread:
+        """Fetch to host now (cheap), serialize+upload in the background."""
+        flat = {
+            path: np.asarray(jax.device_get(leaf))
+            for path, leaf in flatten_with_paths(tree).items()
+        }
+
+        def work():
+            store = self.catalog.store
+            manifest: Dict[str, Any] = {"leaves": {}, "step": step,
+                                        "saved_at": time.time(),
+                                        "meta": extra_meta or {}}
+            for path, host in flat.items():
+                manifest["leaves"][path] = store.put(array_to_bytes(host))
+            key = store.put(dumps_json(manifest))
+            self.catalog.commit(
+                branch, {self._artifact(): key},
+                message=f"checkpoint step={step} (async)", author="trainer",
+            )
+            log.info("async checkpoint step=%d committed on %r", step, branch)
+
+        t = threading.Thread(target=work, name=f"ckpt-{step}", daemon=True)
+        t.start()
+        return t
+
+    # -------------------------------------------------------------- restore
+    def latest_step(self, *, branch: str) -> Optional[int]:
+        try:
+            key = self.catalog.table_key(self._artifact(), branch=branch)
+        except Exception:
+            return None
+        manifest = loads_json(self.catalog.store.get(key))
+        return int(manifest["step"])
+
+    def restore(
+        self,
+        tree_like: Any,
+        *,
+        branch: str,
+        commit_id: Optional[str] = None,
+        shardings: Optional[Any] = None,
+    ) -> Tuple[Any, int]:
+        """Restore into the structure of ``tree_like`` (shapes validated).
+
+        ``shardings``: optional matching tree of NamedShardings — leaves
+        are device_put with them (elastic restore onto any mesh).
+        """
+        store = self.catalog.store
+        key = self.catalog.table_key(
+            self._artifact(), branch=branch, commit_id=commit_id
+        )
+        manifest = loads_json(store.get(key))
+        flat_like = flatten_with_paths(tree_like)
+        flat_sh = flatten_with_paths(shardings) if shardings is not None else {}
+        missing = set(flat_like) - set(manifest["leaves"])
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {sorted(missing)[:5]} ...")
+        out: Dict[str, Any] = {}
+        for path, like in flat_like.items():
+            host = bytes_to_array(store.get(manifest["leaves"][path]))
+            if tuple(host.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"shape mismatch at {path}: ckpt {host.shape} vs "
+                    f"expected {like.shape} — incompatible architecture"
+                )
+            host = host.astype(like.dtype)
+            if path in flat_sh:
+                out[path] = jax.device_put(host, flat_sh[path])
+            else:
+                out[path] = jax.device_put(host)
+        rebuilt = _unflatten_like(tree_like, out)
+        return rebuilt, int(manifest["step"])
+
+
+def _unflatten_like(tree_like: Any, flat: Dict[str, Any]) -> Any:
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(tree_like)
+    treedef = paths_and_leaves[1]
+    from repro.utils.tree import _path_elem
+
+    leaves = []
+    for path, _ in paths_and_leaves[0]:
+        key = "/".join(_path_elem(p) for p in path)
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)

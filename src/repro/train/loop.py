@@ -1,0 +1,140 @@
+"""The restartable training loop — training as a lakehouse pipeline.
+
+Fault-tolerance contract (tested in tests/test_train_loop.py):
+
+* state = (params, opt) checkpoints into the catalog (async, atomic);
+* data sampling is stateless in (seed, step);
+* → killing the process at ANY step and calling ``TrainLoop.run`` again
+  resumes from the last committed checkpoint and produces the same
+  parameters as an uninterrupted run (modulo the steps re-done since the
+  last checkpoint — bit-exact because batches are step-keyed).
+
+Audit-before-write: the loop trains on a working branch; eval
+"expectations" (loss finite, ≤ threshold) gate the merge of the final
+checkpoint into the target branch — the paper's transform-audit-write
+applied to model artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.catalog.nessie import Catalog
+from repro.data.tokens import TokenDataset
+from repro.models.lm import LM
+from repro.train.checkpoint import CheckpointManager
+from repro.train.step import TrainStepConfig, make_train_state, make_train_step
+from repro.utils.logging import get_logger
+
+log = get_logger("train.loop")
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    log_every: int = 10
+    async_checkpoint: bool = True
+    #: audit gates for the final merge
+    max_final_loss: float = float("inf")
+    step: TrainStepConfig = dataclasses.field(default_factory=TrainStepConfig)
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        model: LM,
+        dataset: TokenDataset,
+        catalog: Catalog,
+        *,
+        branch: str,
+        config: TrainLoopConfig,
+        ckpt_prefix: Optional[str] = None,
+    ) -> None:
+        self.model = model
+        self.dataset = dataset
+        self.catalog = catalog
+        self.branch = branch
+        self.config = config
+        self.ckpt = CheckpointManager(
+            catalog, prefix=ckpt_prefix or f"models/{model.cfg.name}"
+        )
+        self._train_step = jax.jit(
+            make_train_step(model, config.step), donate_argnums=(0, 1)
+        )
+
+    def run(self, *, init_key: int = 0) -> Dict[str, Any]:
+        cfg = self.config
+        if not self.catalog.has_branch(self.branch):
+            self.catalog.create_branch(self.branch)
+
+        # ---- restore or init (elastic restart point)
+        params = self.model.init(jax.random.PRNGKey(init_key))
+        state = make_train_state(self.model, params, cfg.step)
+        start_step = 0
+        latest = self.ckpt.latest_step(branch=self.branch)
+        if latest is not None:
+            (params, state), start_step = self.ckpt.restore(
+                (params, state), branch=self.branch
+            )
+            log.info("resumed from checkpoint at step %d", start_step)
+
+        losses: List[float] = []
+        pending: List[Any] = []
+        t0 = time.perf_counter()
+        for step in range(start_step, cfg.total_steps):
+            batch = {
+                k: jnp.asarray(v) for k, v in self.dataset.batch_at(step).items()
+            }
+            params, state, metrics = self._train_step(params, state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % cfg.log_every == 0:
+                log.info(
+                    "step %d loss %.4f lr %.2e gnorm %.2f",
+                    step, loss, float(metrics["lr"]), float(metrics["grad_norm"]),
+                )
+            if (step + 1) % cfg.checkpoint_every == 0:
+                if cfg.async_checkpoint:
+                    pending.append(
+                        self.ckpt.save_async(
+                            (params, state), branch=self.branch, step=step + 1
+                        )
+                    )
+                else:
+                    self.ckpt.save((params, state), branch=self.branch, step=step + 1)
+        for t in pending:
+            t.join()
+
+        # ---- audit: final expectations gate the terminal checkpoint
+        final_loss = float(np.mean(losses[-5:])) if losses else float("inf")
+        audit_ok = np.isfinite(final_loss) and final_loss <= cfg.max_final_loss
+        if losses:  # may be empty when fully resumed at total_steps
+            self.ckpt.save(
+                (params, state),
+                branch=self.branch,
+                step=cfg.total_steps,
+                extra_meta={"final_loss": final_loss, "audit_ok": bool(audit_ok)},
+            )
+        wall = time.perf_counter() - t0
+        return {
+            "params": params,
+            "state": state,
+            "losses": losses,
+            "final_loss": final_loss,
+            "audit_ok": audit_ok,
+            "steps_run": len(losses),
+            "wall_s": wall,
+        }
+
+    def promote(self, target_branch: str) -> None:
+        """Merge the audited checkpoint into the target branch (write)."""
+        self.catalog.merge(
+            self.branch, target_branch,
+            message=f"promote {self.ckpt.prefix}", author="trainer",
+        )

@@ -1,0 +1,152 @@
+"""Optimizers, built from scratch (no optax): AdamW + low-memory Adafactor.
+
+State layout mirrors param sharding (ZeRO: because each moment tensor has
+the same shape/sharding as its parameter, sharding params over "data"
+automatically shards optimizer state the same way — no separate machinery).
+
+Adafactor (factored second moment, bf16 first moment) exists for the
+671B-class dry-runs where full f32 Adam moments would not fit HBM; the
+choice is a config knob surfaced in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    #: moment dtypes — bf16 moments halve optimizer memory
+    m_dtype: Any = jnp.float32
+    v_dtype: Any = jnp.float32
+
+
+# -------------------------------------------------------------------- AdamW
+def adamw_init(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, cfg.m_dtype), params
+        ),
+        "v": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, cfg.v_dtype), params
+        ),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params: Any, grads: Any, state: Dict[str, Any], cfg: AdamWConfig, lr: jax.Array
+) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**c
+    bc2 = 1.0 - cfg.b2**c
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * (g32 * g32)
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, cgrp = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(cgrp)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {
+            "m": jax.tree_util.tree_unflatten(treedef, new_m),
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+            "count": count,
+        },
+    )
+
+
+# ---------------------------------------------------------------- Adafactor
+def adafactor_init(params: Any, cfg: AdamWConfig) -> Dict[str, Any]:
+    """Factored v for rank>=2 leaves (rows+cols vectors), bf16 m."""
+
+    def v_like(p):
+        if p.ndim >= 2:
+            return {
+                "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "m": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.bfloat16), params
+        ),
+        "v": jax.tree_util.tree_map(v_like, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    params: Any, grads: Any, state: Dict[str, Any], cfg: AdamWConfig, lr: jax.Array
+) -> Tuple[Any, Dict[str, Any]]:
+    count = state["count"] + 1
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + 1e-30
+        if p.ndim >= 2:
+            row = cfg.b2 * v["row"] + (1 - cfg.b2) * jnp.mean(g2, axis=-1)
+            col = cfg.b2 * v["col"] + (1 - cfg.b2) * jnp.mean(g2, axis=-2)
+            v_new = {"row": row, "col": col}
+            denom_r = row / jnp.maximum(
+                jnp.mean(row, axis=-1, keepdims=True), 1e-30
+            )
+            vhat = denom_r[..., None] * col[..., None, :]
+        else:
+            full = cfg.b2 * v["full"] + (1 - cfg.b2) * g2
+            v_new = {"full": full}
+            vhat = full
+        update = g32 / jnp.sqrt(vhat + cfg.eps)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * update
+        step = m_new + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new.astype(jnp.bfloat16), v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        a, b, c = upd(p, g, m, v)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (
+        jax.tree_util.tree_unflatten(treedef, new_p),
+        {
+            "m": jax.tree_util.tree_unflatten(treedef, new_m),
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+            "count": count,
+        },
+    )
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+}

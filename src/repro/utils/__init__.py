@@ -1,0 +1,13 @@
+"""Shared utilities: hashing, pytree helpers, logging, timing."""
+from repro.utils.hashing import stable_hash, content_hash, fingerprint_fn
+from repro.utils.timing import Timer, timed
+from repro.utils.logging import get_logger
+
+__all__ = [
+    "stable_hash",
+    "content_hash",
+    "fingerprint_fn",
+    "Timer",
+    "timed",
+    "get_logger",
+]

@@ -1,0 +1,52 @@
+"""Pytree helpers shared by train/serve/checkpoint layers."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total bytes of all array leaves (works on ShapeDtypeStruct too)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_param_count(tree: Any) -> int:
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape, dtype=np.int64))
+    return total
+
+
+def flatten_with_paths(tree: Any) -> Dict[str, Any]:
+    """Flatten a pytree into {'a/b/0': leaf} path-keyed dict."""
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_elem(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_elem(p: Any) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def tree_map_with_path_str(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    """Map ``fn(path_str, leaf)`` over a pytree preserving structure."""
+
+    def _wrap(path: Tuple, leaf: Any) -> Any:
+        return fn("/".join(_path_elem(p) for p in path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_wrap, tree)

@@ -1,0 +1,32 @@
+import os
+
+# Smoke tests and benches must see ONE device. Only launch/dryrun.py sets
+# xla_force_host_platform_device_count (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+from repro.catalog import Catalog
+from repro.io import ObjectStore
+from repro.table import TableFormat
+
+
+@pytest.fixture
+def store(tmp_path):
+    return ObjectStore(tmp_path / "lake")
+
+
+@pytest.fixture
+def fmt(store):
+    return TableFormat(store, shard_rows=128)
+
+
+@pytest.fixture
+def catalog(store):
+    return Catalog(store)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,106 @@
+"""Catalog: branches, commits, merges, time travel, conflicts (paper 4.3)."""
+import numpy as np
+import pytest
+
+from repro.catalog import Catalog, CatalogError, MergeConflict
+from repro.table import Schema
+
+
+def test_init_creates_main(catalog):
+    assert catalog.branches() == ["main"]
+    assert catalog.head("main").tables == {}
+
+
+def test_commit_and_read(catalog):
+    catalog.commit("main", {"taxi_table": "key1"}, message="add taxi")
+    assert catalog.table_key("taxi_table") == "key1"
+    catalog.commit("main", {"taxi_table": "key2"})
+    assert catalog.table_key("taxi_table") == "key2"
+
+
+def test_branch_isolation(catalog):
+    catalog.commit("main", {"t": "k0"})
+    catalog.create_branch("feat_1")
+    catalog.commit("feat_1", {"t": "k1", "new": "k2"})
+    # production untouched (the paper's sandbox guarantee)
+    assert catalog.table_key("t", branch="main") == "k0"
+    with pytest.raises(CatalogError):
+        catalog.table_key("new", branch="main")
+    assert catalog.table_key("t", branch="feat_1") == "k1"
+
+
+def test_time_travel_by_commit(catalog):
+    c1 = catalog.commit("main", {"t": "v1"})
+    c2 = catalog.commit("main", {"t": "v2"})
+    assert catalog.table_key("t", commit_id=c1.commit_id) == "v1"
+    assert catalog.table_key("t", commit_id=c2.commit_id) == "v2"
+
+
+def test_merge_fast_forward_like(catalog):
+    catalog.commit("main", {"t": "base"})
+    catalog.create_branch("feat_1")
+    catalog.commit("feat_1", {"t": "feat", "extra": "e1"})
+    catalog.merge("feat_1", "main", delete_source=True)
+    assert catalog.table_key("t") == "feat"
+    assert catalog.table_key("extra") == "e1"
+    assert "feat_1" not in catalog.branches()
+
+
+def test_merge_conflict_detected(catalog):
+    catalog.commit("main", {"t": "base"})
+    catalog.create_branch("feat_1")
+    catalog.commit("feat_1", {"t": "from_feat"})
+    catalog.commit("main", {"t": "from_main"})
+    with pytest.raises(MergeConflict):
+        catalog.merge("feat_1", "main")
+
+
+def test_merge_disjoint_tables_no_conflict(catalog):
+    catalog.commit("main", {"a": "base_a"})
+    catalog.create_branch("feat_1")
+    catalog.commit("feat_1", {"b": "feat_b"})
+    catalog.commit("main", {"a": "new_a"})
+    catalog.merge("feat_1", "main")
+    assert catalog.table_key("a") == "new_a"
+    assert catalog.table_key("b") == "feat_b"
+
+
+def test_delete_table_via_none(catalog):
+    catalog.commit("main", {"t": "k"})
+    catalog.commit("main", {"t": None})
+    with pytest.raises(CatalogError):
+        catalog.table_key("t")
+
+
+def test_log_lineage(catalog):
+    catalog.commit("main", {"t": "1"}, message="one")
+    catalog.commit("main", {"t": "2"}, message="two")
+    log = catalog.log("main")
+    assert [c.message for c in log] == ["two", "one", "init"]
+
+
+def test_tags(catalog):
+    c = catalog.commit("main", {"t": "v"})
+    catalog.tag("release-1", c.commit_id)
+    assert catalog.resolve_tag("release-1") == c.commit_id
+
+
+def test_cannot_delete_default_branch(catalog):
+    with pytest.raises(CatalogError):
+        catalog.delete_branch("main")
+
+
+def test_ephemeral_run_branch_pattern(catalog, fmt, rng):
+    """End-to-end of Fig. 4: fork, write, merge-on-success, delete."""
+    schema = Schema.of(x="float32")
+    base = fmt.write("t", schema, {"x": np.ones(10, np.float32)})
+    catalog.commit("main", {"t": fmt.manifest_key(base)})
+    catalog.create_branch("feat_1")
+    catalog.create_branch("run_12", from_branch="feat_1")
+    new = fmt.write("pickups", schema, {"x": np.zeros(5, np.float32)})
+    catalog.commit("run_12", {"pickups": fmt.manifest_key(new)})
+    # audit passes -> merge; production visibility is atomic
+    catalog.merge("run_12", "feat_1", delete_source=True)
+    assert "run_12" not in catalog.branches()
+    assert "pickups" in catalog.tables(branch="feat_1")
+    assert "pickups" not in catalog.tables(branch="main")

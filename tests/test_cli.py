@@ -1,0 +1,82 @@
+"""The bauplan-style CLI (paper 4.6)."""
+import numpy as np
+import pytest
+
+from repro.catalog import Catalog
+from repro.cli import main
+from repro.io import ObjectStore
+from repro.table import TableFormat
+from tests.helpers_taxi import TAXI_SCHEMA, make_taxi_data
+
+PIPELINE_SRC = '''
+from repro.core import Pipeline
+
+PIPELINE = Pipeline("cli_demo")
+PIPELINE.sql(
+    "trips",
+    "SELECT pickup_location_id, passenger_count as count FROM taxi_table "
+    "WHERE pickup_at >= '2019-04-01'",
+)
+
+@PIPELINE.python
+def trips_expectation(ctx, trips):
+    return trips.mean("count") > 1.0
+
+PIPELINE.sql(
+    "pickups",
+    "SELECT pickup_location_id, COUNT(*) AS counts FROM trips "
+    "GROUP BY pickup_location_id ORDER BY counts DESC",
+)
+'''
+
+
+@pytest.fixture
+def lake(tmp_path, rng):
+    root = tmp_path / "lake"
+    store = ObjectStore(root)
+    catalog = Catalog(store)
+    fmt = TableFormat(store)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(500, rng))
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    pipeline_file = tmp_path / "pipeline.py"
+    pipeline_file.write_text(PIPELINE_SRC)
+    return root, pipeline_file
+
+
+def test_cli_query(lake, capsys):
+    root, _ = lake
+    main(["--lake", str(root), "query", "-q",
+          "SELECT COUNT(*) AS n FROM taxi_table"])
+    out = capsys.readouterr().out
+    assert "500" in out
+
+
+def test_cli_run_then_query_and_log(lake, capsys):
+    root, pipeline_file = lake
+    main(["--lake", str(root), "run", str(pipeline_file), "-b", "feat_1"])
+    out = capsys.readouterr().out
+    assert "merged to 'feat_1'" in out
+    main(["--lake", str(root), "query", "-q",
+          "SELECT pickup_location_id, counts FROM pickups LIMIT 3",
+          "-b", "feat_1"])
+    out = capsys.readouterr().out
+    assert "counts" in out
+    main(["--lake", str(root), "log", "-b", "feat_1"])
+    out = capsys.readouterr().out
+    assert "run 1" in out
+    main(["--lake", str(root), "branch"])
+    out = capsys.readouterr().out
+    assert "feat_1" in out and "main" in out
+
+
+def test_cli_tables_and_replay(lake, capsys):
+    root, pipeline_file = lake
+    main(["--lake", str(root), "run", str(pipeline_file), "-b", "dev"])
+    capsys.readouterr()
+    main(["--lake", str(root), "tables", "-b", "dev"])
+    out = capsys.readouterr().out
+    assert "pickups" in out and "taxi_table" in out
+    main(["--lake", str(root), "run", str(pipeline_file), "--replay",
+          "--run-id", "1"])
+    out = capsys.readouterr().out
+    assert "replayed run 1" in out

@@ -1,0 +1,157 @@
+"""End-to-end: the paper's working example through the full system.
+
+Covers Fig. 3 (three abstraction layers), Fig. 4 (branch semantics),
+4.4.2 (fusion + pushdown), 4.4.1/4.6 (replay), and the audit rollback.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ExpectationFailed, Runner
+from repro.runtime import ExecutorConfig, ServerlessExecutor
+from tests.helpers_taxi import (
+    APRIL_1,
+    TAXI_SCHEMA,
+    build_taxi_pipeline,
+    make_taxi_data,
+)
+
+
+@pytest.fixture
+def runner(catalog, fmt):
+    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
+        yield Runner(catalog, fmt, ex)
+
+
+@pytest.fixture
+def seeded(catalog, fmt, rng):
+    data = make_taxi_data(2000, rng)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, data)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)}, message="seed")
+    return data
+
+
+def _expected_pickups(data):
+    mask = data["pickup_at"] >= APRIL_1
+    src = data["pickup_location_id"][mask]
+    dst = data["dropoff_location_id"][mask]
+    pairs, counts = np.unique(np.stack([src, dst]), axis=1, return_counts=True)
+    return pairs, counts
+
+
+def test_full_run_on_feature_branch(runner, catalog, fmt, seeded):
+    pipeline = build_taxi_pipeline()
+    result = runner.run(pipeline, branch="feat_1")
+    assert result.ok
+    assert result.checks == {"trips_expectation": True}
+    # pickups visible on feat_1, absent from main (sandboxing)
+    assert "pickups" in catalog.tables(branch="feat_1")
+    assert "pickups" not in catalog.tables(branch="main")
+    # ephemeral branch cleaned up
+    assert all(not b.startswith("run_") for b in catalog.branches())
+    # correctness vs numpy oracle
+    out = fmt.read(fmt.load_snapshot(result.artifacts["pickups"]))
+    pairs, counts = _expected_pickups(seeded)
+    assert len(out["counts"]) == pairs.shape[1]
+    assert (np.sort(out["counts"])[::-1] == out["counts"]).all()  # ORDER BY DESC
+    got = {
+        (int(a), int(b)): int(c)
+        for a, b, c in zip(
+            out["pickup_location_id"], out["dropoff_location_id"], out["counts"]
+        )
+    }
+    expect = {
+        (int(pairs[0, i]), int(pairs[1, i])): int(counts[i])
+        for i in range(pairs.shape[1])
+    }
+    assert got == expect
+
+
+def test_fused_plan_is_single_stage(runner, seeded):
+    result = runner.run(build_taxi_pipeline(), branch="f2")
+    assert len(result.plan.stages) == 1  # trips+expectation+pickups fused
+    stage = result.plan.stages[0]
+    assert set(stage.node_names) == {"trips", "trips_expectation", "pickups"}
+    # only the terminal artifact materializes; trips stays in memory...
+    assert stage.outputs == ("trips",) or "pickups" in stage.outputs
+
+
+def test_pushdown_prunes_shards(runner, seeded):
+    result = runner.run(build_taxi_pipeline(), branch="f3")
+    scan = result.plan.stages[0].scans["taxi_table"]
+    assert scan.predicates  # pickup_at >= '2019-04-01' was pushed
+    assert scan.plan.pruned_shards > 0  # date-sorted shards pruned
+    assert scan.plan.rows_to_read < 2000
+
+
+def test_isomorphic_equals_fused_results(catalog, fmt, seeded):
+    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
+        runner = Runner(catalog, fmt, ex)
+        fused = runner.run(build_taxi_pipeline(), branch="fa", fusion=True)
+        naive = runner.run(
+            build_taxi_pipeline(), branch="fb", fusion=False, pushdown=False
+        )
+    assert len(naive.plan.stages) == 3  # the "three separate executions"
+    assert len(fused.plan.stages) == 1
+    a = fmt.read(fmt.load_snapshot(fused.artifacts["pickups"]))
+    b = fmt.read(fmt.load_snapshot(naive.artifacts["pickups"]))
+    for col in a:
+        np.testing.assert_array_equal(a[col], b[col])
+    # fusion avoids spillover: fewer bytes through the object store
+    assert fused.stats["io"]["bytes_written"] < naive.stats["io"]["bytes_written"]
+
+
+def test_expectation_failure_rolls_back(runner, catalog, fmt, rng):
+    # passenger_count mean ~2 < threshold 10 -> audit must fail
+    data = make_taxi_data(500, rng, mean_count=2.0)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, data)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    before = catalog.head("main").commit_id
+    with pytest.raises(ExpectationFailed):
+        runner.run(build_taxi_pipeline(), branch="main")
+    # nothing merged, no ephemeral branches left behind
+    assert catalog.head("main").commit_id == before
+    assert "pickups" not in catalog.tables(branch="main")
+    assert all(not b.startswith("run_") for b in catalog.branches())
+
+
+def test_replay_is_bit_identical(runner, catalog, fmt, seeded):
+    pipeline = build_taxi_pipeline()
+    first = runner.run(pipeline, branch="feat_r")
+    # new data lands on the branch after the run...
+    rng2 = np.random.default_rng(99)
+    newer = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(100, rng2))
+    catalog.commit("feat_r", {"taxi_table": fmt.manifest_key(newer)})
+    # ...but replay pins the ORIGINAL base commit: identical snapshot ids
+    again = runner.replay(pipeline, first.run_id)
+    assert again.artifacts == first.artifacts  # content-addressed equality
+    assert again.merged_commit is None  # replay never moves branches
+
+
+def test_replay_rejects_changed_code(runner, catalog, fmt, seeded):
+    first = runner.run(build_taxi_pipeline(), branch="feat_c")
+    changed = build_taxi_pipeline(threshold=25.0)  # different expectation
+    with pytest.raises(ValueError):
+        runner.replay(changed, first.run_id)
+
+
+def test_sync_query_interface(runner, catalog, fmt, seeded):
+    out = runner.query(
+        "SELECT pickup_location_id, COUNT(*) AS n FROM taxi_table "
+        "GROUP BY pickup_location_id ORDER BY n DESC LIMIT 3"
+    )
+    keys, counts = np.unique(seeded["pickup_location_id"], return_counts=True)
+    np.testing.assert_array_equal(out["n"], np.sort(counts)[::-1][:3])
+
+
+def test_query_time_travel(runner, catalog, fmt, rng):
+    d1 = make_taxi_data(100, rng)
+    s1 = fmt.write("taxi_table", TAXI_SCHEMA, d1)
+    c1 = catalog.commit("main", {"taxi_table": fmt.manifest_key(s1)})
+    d2 = make_taxi_data(300, rng)
+    s2 = fmt.write("taxi_table", TAXI_SCHEMA, d2)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(s2)})
+    now = runner.query("SELECT COUNT(*) AS n FROM taxi_table")
+    then = runner.query(
+        "SELECT COUNT(*) AS n FROM taxi_table", commit_id=c1.commit_id
+    )
+    assert now["n"][0] == 300 and then["n"][0] == 100

@@ -1,0 +1,94 @@
+"""Launch-layer utilities: HLO collective parsing, extrapolation, shapes."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, resolve
+from repro.configs.shapes import SHAPES, cells, input_specs, shape_applicable
+from repro.launch.dryrun import parse_collectives
+from repro.launch.roofline import extrapolate, model_flops
+
+
+def test_parse_collectives_basic():
+    hlo = """
+  %ag = f32[4096,256]{1,0} all-gather(%x), channel_id=1, replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%y), replica_groups=[16,32]<=[512], to_apply=%sum
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), replica_groups={{0,1,2,3},{4,5,6,7}}, dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%w), source_target_pairs={{0,1}}
+  %other = f32[10]{0} add(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    ag = out["all-gather"]
+    assert ag["count"] == 1
+    assert ag["result_bytes"] == 4096 * 256 * 4
+    np.testing.assert_allclose(ag["wire_bytes"], 4096 * 256 * 4 * 15 / 16)
+    ar = out["all-reduce"]
+    assert ar["result_bytes"] == 1024 * 2
+    np.testing.assert_allclose(ar["wire_bytes"], 2 * 1024 * 2 * 31 / 32)
+    rs = out["reduce-scatter"]
+    assert rs["count"] == 1
+    np.testing.assert_allclose(rs["wire_bytes"], 64 * 64 * 4 * 3)
+    assert out["collective-permute"]["wire_bytes"] == 8 * 8 * 2
+    assert out["all-to-all"]["count"] == 0
+
+
+def test_extrapolate_linear_depth():
+    var = {
+        "counts": [10, 3],
+        "v0": {"flops": 100.0},
+        "v1": {"flops": 130.0},  # +30 per unit of segment 0
+        "v2": {"flops": 120.0},  # +20 per unit of segment 1
+    }
+    # 100 + 9*30 + 2*20 = 410
+    assert extrapolate(var, "flops") == pytest.approx(410.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("yi_6b")
+    train = model_flops(cfg, SHAPES["train_4k"], "train")
+    decode = model_flops(cfg, SHAPES["decode_32k"], "decode")
+    # train: 6*N*B*S ; decode: 2*N*B
+    assert train / decode == pytest.approx(
+        3 * SHAPES["train_4k"].global_batch * SHAPES["train_4k"].seq_len
+        / SHAPES["decode_32k"].global_batch
+    )
+
+
+def test_moe_active_params_fraction():
+    from repro.launch.roofline import active_params
+
+    total, active = active_params(get_config("deepseek_v3_671b"))
+    assert 600e9 < total < 750e9  # ~671B
+    assert 30e9 < active < 60e9  # ~37B active
+    t2, a2 = active_params(get_config("yi_6b"))
+    assert t2 == a2  # dense: all params active
+
+
+def test_cells_and_skips():
+    live, skipped = cells(all_configs())
+    assert len(live) == 33  # 10*3 + 3 long_500k
+    assert len(skipped) == 7
+    skipped_archs = {a for a, s, _ in skipped}
+    assert "h2o_danube_3_4b" not in skipped_archs  # SWA runs long_500k
+    assert "xlstm_350m" not in skipped_archs
+    assert "recurrentgemma_9b" not in skipped_archs
+
+
+def test_input_specs_shapes():
+    cfg = get_config("musicgen_medium")
+    spec = input_specs(cfg, SHAPES["train_4k"])
+    assert spec["tokens"].shape == (256, 4096, 4)  # codebooks
+    vlm = get_config("internvl2_2b")
+    spec = input_specs(vlm, SHAPES["train_4k"])
+    assert spec["tokens"].shape == (256, 4096 - 256)
+    assert spec["patch_embeds"].shape == (256, 256, 2048)
+    dec = input_specs(cfg, SHAPES["decode_32k"])
+    assert dec["tokens"].shape == (128, 1, 4)
+    assert dec["lengths"].shape == (128,)
+
+
+def test_registry_aliases():
+    assert resolve("yi-6b") == "yi_6b"
+    assert resolve("deepseek-v3-671b") == "deepseek_v3_671b"
+    with pytest.raises(KeyError):
+        resolve("gpt-5")
+    assert len(ARCH_IDS) == 10

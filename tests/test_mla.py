@@ -1,0 +1,67 @@
+"""MLA: cache compression ratio + weight-absorbed decode correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.mla import (
+    MLAConfig,
+    init_mla,
+    init_mla_cache,
+    mla_decode_step,
+    mla_train,
+)
+
+CFG = MLAConfig(
+    d_model=64, n_heads=4, q_lora_rank=32, kv_lora_rank=16,
+    qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, chunk=None,
+    compute_dtype=jnp.float32,
+)
+
+
+def test_absorbed_decode_matches_train_attention(rng):
+    """Stepping token-by-token through the absorbed decode reproduces the
+    train-path attention outputs exactly (pure MLA, no MoE drops)."""
+    p = init_mla(jax.random.PRNGKey(0), CFG)
+    b, s = 2, 7
+    x = jnp.asarray(rng.standard_normal((b, s, 64)).astype(np.float32))
+    full = mla_train(p, CFG, x, jnp.arange(s))
+    cache = init_mla_cache(CFG, b, 16, dtype=jnp.float32)
+    for t in range(s):
+        out, cache = mla_decode_step(
+            p, CFG, x[:, t : t + 1], cache, jnp.full((b,), t, jnp.int32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[:, 0]), np.asarray(full[:, t]), rtol=2e-4, atol=2e-5
+        )
+
+
+def test_cache_is_compressed():
+    """The decode cache stores rank-(dkv + rope) per token, NOT per-head
+    K/V — the MLA selling point (~14x at the deepseek config)."""
+    cache = init_mla_cache(CFG, batch=1, max_len=10, dtype=jnp.float32)
+    latent = cache["c_kv"].size + cache["k_rope"].size
+    per_head_kv = 2 * CFG.n_heads * 10 * (CFG.qk_nope_dim + CFG.qk_rope_dim)
+    assert latent < per_head_kv / 2
+    # deepseek-scale ratio: (512+64) vs 2*128*(128+64) -> 85x
+    ds = MLAConfig(d_model=7168, n_heads=128)
+    ds_latent = ds.kv_lora_rank + ds.qk_rope_dim
+    ds_mha = 2 * ds.n_heads * (ds.qk_nope_dim + ds.qk_rope_dim)
+    assert ds_mha / ds_latent > 50
+
+
+def test_decode_ragged_lengths(rng):
+    """Different sequences at different lengths stay independent."""
+    p = init_mla(jax.random.PRNGKey(1), CFG)
+    x = jnp.asarray(rng.standard_normal((2, 1, 64)).astype(np.float32))
+    cache = init_mla_cache(CFG, 2, 8, dtype=jnp.float32)
+    lengths = jnp.array([0, 3], jnp.int32)
+    out, cache2 = mla_decode_step(p, CFG, x, cache, lengths)
+    assert bool(jnp.isfinite(out).all())
+    # row 0 wrote at position 0; row 1 at position 3
+    assert float(jnp.abs(cache2["c_kv"][0, 0]).sum()) > 0
+    assert float(jnp.abs(cache2["c_kv"][0, 3]).sum()) == 0
+    assert float(jnp.abs(cache2["c_kv"][1, 3]).sum()) > 0
+    assert float(jnp.abs(cache2["c_kv"][1, 0]).sum()) == 0

@@ -1,0 +1,212 @@
+"""Optimizers, train step, compression, checkpointing, restartable loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.tokens import TokenDataset, write_token_table
+from repro.distribution.compression import compress_decompress, init_compression
+from repro.models import LM
+from repro.train import (
+    AdamWConfig,
+    CheckpointManager,
+    TrainLoop,
+    TrainLoopConfig,
+    TrainStepConfig,
+    adamw_init,
+    adamw_update,
+    make_train_step,
+    warmup_cosine,
+)
+from repro.train.step import make_train_state
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}  # d/dw w^2
+        params, state = adamw_update(params, grads, state, cfg, jnp.float32(0.05))
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adafactor_minimizes_quadratic():
+    from repro.train.optimizer import adafactor_init, adafactor_update
+
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.full((4, 3), 3.0)}
+    state = adafactor_init(params, cfg)
+    for _ in range(300):
+        grads = {"w": 2 * params["w"]}
+        params, state = adafactor_update(params, grads, state, cfg, jnp.float32(0.05))
+    assert float(jnp.abs(params["w"]).max()) < 5e-2
+
+
+def test_warmup_cosine_shape():
+    lrs = [
+        float(warmup_cosine(jnp.int32(s), peak_lr=1.0, warmup_steps=10, total_steps=100))
+        for s in [0, 5, 10, 50, 100]
+    ]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1, abs=1e-6)
+
+
+def test_compression_error_feedback_unbiased():
+    """Sum of dequantized grads + final residual == sum of true grads."""
+    rng = np.random.default_rng(0)
+    grads_seq = [
+        {"w": jnp.asarray(rng.standard_normal(64).astype(np.float32))}
+        for _ in range(20)
+    ]
+    state = init_compression(grads_seq[0])
+    total_deq = jnp.zeros(64)
+    for g in grads_seq:
+        dq, state = compress_decompress(g, state)
+        total_deq = total_deq + dq["w"]
+    total_true = sum(g["w"] for g in grads_seq)
+    # EF: residual bounded by one quantization step, not accumulated
+    np.testing.assert_allclose(
+        np.asarray(total_deq + state["w"]), np.asarray(total_true), rtol=1e-5, atol=1e-5
+    )
+    err = float(jnp.abs(total_deq - total_true).max())
+    assert err < 0.1  # residual stays small, independent of sequence length
+
+
+def test_train_step_reduces_loss_tiny_lm():
+    cfg = get_smoke_config("yi_6b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    scfg = TrainStepConfig(peak_lr=3e-3, warmup_steps=5, total_steps=60)
+    state = make_train_state(model, params, scfg)
+    step_fn = jax.jit(make_train_step(model, scfg))
+    rng = np.random.default_rng(0)
+    # tiny repetitive corpus → loss must drop fast
+    base = rng.integers(0, 64, 128).astype(np.int32)
+    tokens = np.tile(base, 20)
+    first = last = None
+    for step in range(40):
+        start = rng.integers(0, len(tokens) - 33, 4)
+        batch = {
+            "tokens": jnp.asarray(
+                np.stack([tokens[s : s + 33] for s in start]).astype(np.int32)
+            )
+        }
+        params, state, metrics = step_fn(params, state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.5, (first, last)
+
+
+def test_grad_accumulation_matches_big_batch():
+    cfg = get_smoke_config("yi_6b")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, 256, (8, 17)).astype(np.int32))
+
+    one = TrainStepConfig(accum_steps=1, peak_lr=1e-3, grad_clip=1e9)
+    acc = TrainStepConfig(accum_steps=4, peak_lr=1e-3, grad_clip=1e9)
+    s1 = make_train_state(model, params, one)
+    s2 = make_train_state(model, params, acc)
+    p1, _, m1 = jax.jit(make_train_step(model, one))(params, s1, {"tokens": tokens})
+    p2, _, m2 = jax.jit(make_train_step(model, acc))(
+        params, s2, {"tokens": tokens.reshape(4, 2, 17)}
+    )
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), rtol=2e-3, atol=2e-5
+        )
+
+
+def test_checkpoint_roundtrip_and_atomicity(catalog, fmt):
+    model = LM(get_smoke_config("yi_6b"))
+    params = model.init(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(catalog, prefix="models/test")
+    mgr.save(params, branch="main", step=7)
+    like = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params
+    )
+    restored, step = mgr.restore(like, branch="main")
+    assert step == 7
+    for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(restored)
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected(catalog, fmt):
+    model = LM(get_smoke_config("yi_6b"))
+    params = model.init(jax.random.PRNGKey(0))
+    mgr = CheckpointManager(catalog, prefix="models/test")
+    mgr.save(params, branch="main", step=1)
+    other = LM(get_smoke_config("granite_34b")).init(jax.random.PRNGKey(0))
+    with pytest.raises((ValueError, KeyError)):
+        mgr.restore(other, branch="main")
+
+
+def _setup_loop(catalog, fmt, total_steps, ckpt_every=5, sched_steps=15):
+    rng = np.random.default_rng(0)
+    tokens = np.tile(rng.integers(0, 64, 256), 10)
+    key = write_token_table(fmt, catalog, "corpus", tokens)
+    cfg = get_smoke_config("yi_6b")
+    model = LM(cfg)
+    ds = TokenDataset(fmt, key, batch_size=2, seq_len=16, seed=0)
+    loop = TrainLoop(
+        model, ds, catalog,
+        branch="train_branch",
+        config=TrainLoopConfig(
+            total_steps=total_steps,
+            checkpoint_every=ckpt_every,
+            log_every=100,
+            async_checkpoint=False,
+            # schedule horizon pinned independently of how far this
+            # invocation runs — an interrupted run must see the same LR
+            step=TrainStepConfig(peak_lr=1e-3, warmup_steps=2, total_steps=sched_steps),
+        ),
+    )
+    return loop
+
+
+def test_loop_restart_is_exact(catalog, fmt):
+    """Uninterrupted run == run killed at step 10 and resumed."""
+    loop_a = _setup_loop(catalog, fmt, total_steps=15, ckpt_every=5)
+    full = loop_a.run()
+
+    # fresh catalog for the interrupted version
+    import tempfile
+
+    from repro.catalog import Catalog
+    from repro.io import ObjectStore
+    from repro.table import TableFormat
+
+    store2 = ObjectStore(tempfile.mkdtemp())
+    catalog2 = Catalog(store2)
+    fmt2 = TableFormat(store2, shard_rows=128)
+    loop_b = _setup_loop(catalog2, fmt2, total_steps=10, ckpt_every=5)
+    loop_b.run()  # "crashes" after 10 steps (checkpoint at 10 exists)
+    loop_c = _setup_loop(catalog2, fmt2, total_steps=15, ckpt_every=5)
+    resumed = loop_c.run()
+    assert resumed["steps_run"] == 5  # resumed from step 10
+    for a, b in zip(
+        jax.tree_util.tree_leaves(full["params"]),
+        jax.tree_util.tree_leaves(resumed["params"]),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=1e-5, atol=1e-6,
+        )
+
+
+def test_loop_async_checkpoint(catalog, fmt):
+    loop = _setup_loop(catalog, fmt, total_steps=6, ckpt_every=3)
+    loop.config.async_checkpoint = True
+    out = loop.run()
+    assert out["steps_run"] == 6
+    assert loop.ckpt.latest_step(branch="train_branch") == 6
