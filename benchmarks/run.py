@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_reasonable_scale  paper 3.1 / Fig. 1 (power-law workloads)
   bench_engine            query engine + fused_filter_agg kernel
   bench_catalog           paper 4.3 (branch/commit/merge, checkpoints)
+  bench_differential_cache  warm re-runs skip clean stages (arXiv 2411.08203)
   bench_dryrun_summary    deliverables (e)+(g): dry-run + roofline headlines
 
 Run: ``PYTHONPATH=src:. python -m benchmarks.run [--only NAME]``
@@ -21,6 +22,7 @@ SUITES = [
     "bench_catalog",
     "bench_engine",
     "bench_fusion",
+    "bench_differential_cache",
     "bench_dryrun_summary",
 ]
 

@@ -69,6 +69,13 @@ def main(argv=None) -> None:
     r.add_argument("--no-fusion", action="store_true")
     r.add_argument("--replay", action="store_true")
     r.add_argument("--run-id", type=int, default=None)
+    r.add_argument(
+        "--cache",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="restore unchanged stages from the differential cache "
+        "(--no-cache forces a full recompute and persists nothing)",
+    )
 
     b = sub.add_parser("branch", help="list/create branches")
     b.add_argument("--create", default=None)
@@ -122,7 +129,7 @@ def main(argv=None) -> None:
         try:
             res = runner.run(
                 pipeline, branch=args.branch, fusion=not args.no_fusion,
-                pushdown=not args.no_fusion,
+                pushdown=not args.no_fusion, cache=args.cache,
             )
         except ExpectationFailed as e:
             raise SystemExit(f"AUDIT FAILED: {e}")
@@ -130,6 +137,13 @@ def main(argv=None) -> None:
               f"@ {res.merged_commit[:12]}")
         print(f"artifacts: {sorted(res.artifacts)}  checks: {res.checks}")
         print(f"wall: {res.stats['wall_s']:.2f}s  io: {res.stats['io']}")
+        cache = res.stats.get("cache", {})
+        if cache.get("enabled"):
+            total = cache["hits"] + cache["stages_executed"]
+            print(
+                f"cache: {cache['hits']}/{total} stages restored, "
+                f"{cache['bytes_saved']} bytes saved"
+            )
 
 
 if __name__ == "__main__":

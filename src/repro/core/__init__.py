@@ -5,6 +5,8 @@
 ``PhysicalPlan``  — fused stages with scan pushdown (paper 4.4.2)
 ``Runner``        — transform-audit-write over ephemeral branches (4.3)
 ``RunRegistry``   — snapshotting, fingerprints, replay (4.4.1, 4.6)
+``StageCacheRegistry`` — cross-run differential artifact cache (FaaS &
+                    Furious-style: clean stages restore, dirty cones rerun)
 """
 from repro.core.pipeline import Pipeline, Node, PipelineError, requirements
 from repro.core.logical import LogicalPlan, build_logical_plan
@@ -16,9 +18,16 @@ from repro.core.physical import (
     build_physical_plan,
 )
 from repro.core.runner import Runner, RunResult, ExpectationFailed
-from repro.core.snapshot import RunRecord, RunRegistry
+from repro.core.snapshot import (
+    RunRecord,
+    RunRegistry,
+    StageCacheEntry,
+    StageCacheRegistry,
+)
 
 __all__ = [
+    "StageCacheEntry",
+    "StageCacheRegistry",
     "Pipeline",
     "Node",
     "PipelineError",

@@ -29,6 +29,7 @@ from repro.engine.query import Query
 from repro.runtime.resources import CostModel, ResourceRequest
 from repro.table.format import Snapshot
 from repro.table.scan import Predicate, ScanPlan, plan_scan
+from repro.utils.hashing import stable_hash
 
 
 @dataclass(frozen=True)
@@ -64,6 +65,11 @@ class Stage:
     fn: Callable[..., Tuple[Dict[str, Columnar], Dict[str, Any]]]
     resources: ResourceRequest
     fingerprint: str
+    #: transitive identity: node code + upstream stage fingerprints + input
+    #: table snapshot ids + run params — the differential-cache key.  Two
+    #: stages with equal transitive fingerprints produce bit-identical
+    #: outputs, so a cached result can be substituted for execution.
+    transitive_fingerprint: str = ""
 
     @property
     def input_order(self) -> Tuple[str, ...]:
@@ -186,6 +192,10 @@ def build_physical_plan(
                 needed_later.setdefault(p, []).append(node_stage[name])
 
     stages: List[Stage] = []
+    # run params feed python nodes through ctx, so they are part of every
+    # stage's cache identity (a param change must invalidate everything)
+    run_params = dict(getattr(ctx, "params", None) or {})
+    transitive: Dict[int, str] = {}
     for sid, names in enumerate(stage_nodes):
         nodes = [logical.nodes[n] for n in names]
         artifact_names = {n.name for n in nodes if not n.is_expectation}
@@ -249,6 +259,18 @@ def build_physical_plan(
         input_order = tuple(sorted(scans)) + internal_inputs
         fn = _make_stage_fn(nodes, rewrites, input_order, outputs, ctx)
         total_bytes = sum(s.estimated_bytes for s in scans.values())
+        # transitive fingerprint: parents are topologically earlier stages,
+        # so their fingerprints are already in ``transitive``
+        parent_stages = sorted({produced_in[p] for p in internal_inputs})
+        transitive[sid] = stable_hash(
+            {
+                "nodes": [logical.nodes[n].fingerprint for n in names],
+                "outputs": sorted(outputs),
+                "parents": [transitive[p] for p in parent_stages],
+                "scans": {t: snapshots[t].snapshot_id for t in scans},
+                "params": run_params,
+            }
+        )
         stages.append(
             Stage(
                 stage_id=sid,
@@ -260,6 +282,7 @@ def build_physical_plan(
                 fn=fn,
                 resources=cost_model.request_for_scan(total_bytes),
                 fingerprint="-".join(logical.nodes[n].fingerprint for n in names),
+                transitive_fingerprint=transitive[sid],
             )
         )
     return PhysicalPlan(logical=logical, config=config, stages=stages)

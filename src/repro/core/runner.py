@@ -32,7 +32,12 @@ from repro.core.physical import (
     build_physical_plan,
 )
 from repro.core.pipeline import Pipeline
-from repro.core.snapshot import RunRecord, RunRegistry
+from repro.core.snapshot import (
+    RunRecord,
+    RunRegistry,
+    StageCacheEntry,
+    StageCacheRegistry,
+)
 from repro.engine.columnar import Columnar
 from repro.runtime.executor import ServerlessExecutor
 from repro.runtime.function import FunctionSpec
@@ -89,10 +94,13 @@ class Runner:
     fmt: TableFormat
     executor: ServerlessExecutor
     registry: RunRegistry = None  # type: ignore[assignment]
+    cache_registry: StageCacheRegistry = None  # type: ignore[assignment]
 
     def __post_init__(self) -> None:
         if self.registry is None:
             self.registry = RunRegistry(self.catalog.store)
+        if self.cache_registry is None:
+            self.cache_registry = StageCacheRegistry(self.catalog.store)
 
     # ------------------------------------------------------------ queries
     def query(
@@ -148,7 +156,17 @@ class Runner:
         pushdown: bool = True,
         base_commit: Optional[str] = None,
         author: str = "user",
+        cache: bool = False,
     ) -> RunResult:
+        """Execute ``pipeline`` with transform-audit-write semantics.
+
+        ``cache=True`` enables the cross-run differential cache: stages
+        whose transitive fingerprint matches a previous audited run are
+        skipped, their outputs restored from the object store; after this
+        run's audit passes, its own stage outputs are registered for
+        future runs.  ``cache=False`` bypasses the cache in both
+        directions (full recompute, nothing persisted).
+        """
         t_start = time.perf_counter()
         params = dict(params or {})
 
@@ -170,13 +188,16 @@ class Runner:
             result = self._execute(
                 pipeline, branch, ephemeral, base.commit_id, params,
                 PlannerConfig(fusion=fusion, pushdown=pushdown), run_id,
+                use_cache=cache,
             )
         except Exception:
             # any failure: discard the ephemeral branch — prod stays clean
             self.catalog.delete_branch(ephemeral)
             raise
 
-        # 4. audit
+        # 4. audit — a failed expectation also rolls back this run's
+        # candidate cache entries (they are only persisted below, after
+        # the audit), so the cache can never serve unaudited artifacts
         failed = [k for k, v in result["checks"].items() if not v]
         if failed:
             self.catalog.delete_branch(ephemeral)
@@ -192,6 +213,10 @@ class Runner:
             message=f"run {run_id}: {pipeline.name}",
             author=author, delete_source=True,
         )
+        # 6. publish this run's stage outputs to the differential cache
+        if cache:
+            for entry in result["cache"]["entries"].values():
+                self.cache_registry.put(entry)
         rec = self._record(
             run_id, pipeline, branch, base.commit_id, params,
             result, merged=merged.commit_id, t_start=t_start,
@@ -230,9 +255,12 @@ class Runner:
         ephemeral = f"run_{replay_id}"
         self.catalog.create_branch(ephemeral, at_commit=rec.base_commit)
         try:
+            # replay must genuinely re-execute — the differential cache is
+            # bypassed so the reproducibility claim is tested, not assumed
             result = self._execute(
                 pipeline, rec.branch, ephemeral, rec.base_commit,
                 dict(rec.params), PlannerConfig(fusion=rec.fused), replay_id,
+                use_cache=False,
             )
         finally:
             self.catalog.delete_branch(ephemeral)
@@ -256,6 +284,8 @@ class Runner:
         params: Dict[str, Any],
         config: PlannerConfig,
         run_id: int,
+        *,
+        use_cache: bool = False,
     ) -> Dict[str, Any]:
         # 2. code intelligence: logical plan pinned to the base commit
         tables_at_base = self.catalog.get_commit(base_commit).tables
@@ -275,12 +305,52 @@ class Runner:
         plan = build_physical_plan(logical, snapshots, config=config, ctx=ctx)
         log.info("\n%s", plan.describe())
 
-        # 3. transform: execute stages through the serverless executor
+        # 3. transform: execute stages through the serverless executor —
+        # unless the differential cache already holds a stage's outputs
         env: Dict[str, Columnar] = {}  # in-memory artifact cache (locality)
         artifacts: Dict[str, str] = {}
         checks: Dict[str, bool] = {}
+        cache_hits = 0
+        stages_executed = 0
+        bytes_saved = 0
+        new_entries: Dict[str, StageCacheEntry] = {}
         bytes_before = self.fmt.store.stats.snapshot()
         for stage in plan.stages:
+            entry = (
+                self.cache_registry.get(stage.transitive_fingerprint)
+                if use_cache
+                else None
+            )
+            if (
+                entry is not None
+                and set(stage.outputs) <= set(entry.outputs)
+                and all(entry.checks.get(c, False) for c in stage.checks)
+            ):
+                # cache hit: skip the task entirely.  Outputs rehydrate from
+                # the store lazily (committed to the ephemeral branch here;
+                # a downstream executing stage reads them back on demand).
+                # Expectations in this stage were audited when the entry
+                # was created — same code, same data, same verdict (4.4.1).
+                updates = {}
+                for name in stage.outputs:
+                    artifacts[name] = entry.outputs[name]
+                    updates[name] = entry.outputs[name]
+                for cname in stage.checks:
+                    checks[cname] = True
+                if updates:
+                    self.catalog.commit(
+                        ephemeral, updates,
+                        message=f"run {run_id} stage {stage.stage_id} (cached)",
+                        author="runner",
+                    )
+                cache_hits += 1
+                bytes_saved += entry.output_bytes
+                self.fmt.store.record_cache_hit(entry.output_bytes)
+                log.info(
+                    "stage %d restored from cache (%s)",
+                    stage.stage_id, stage.transitive_fingerprint[:12],
+                )
+                continue
             inputs: List[Columnar] = []
             for table in sorted(stage.scans):
                 data = execute_scan(self.fmt, stage.scans[table].plan)
@@ -300,12 +370,18 @@ class Runner:
                 resources=stage.resources,
             )
             outputs, stage_checks = self.executor.run(spec, *inputs)
+            stages_executed += 1
+            this_stage_checks: Dict[str, bool] = {}
             for cname, val in stage_checks.items():
-                checks[cname] = bool(np.asarray(val))
+                verdict = bool(np.asarray(val))
+                checks[cname] = verdict
+                this_stage_checks[cname] = verdict
             updates: Dict[str, Optional[str]] = {}
+            output_bytes = 0
             for name, rel in outputs.items():
                 env[name] = rel
                 compact = rel.to_numpy(compact=True)
+                output_bytes += sum(arr.nbytes for arr in compact.values())
                 schema = Schema(
                     tuple(
                         Column(c, str(compact[c].dtype)) for c in sorted(compact)
@@ -321,15 +397,37 @@ class Runner:
                     message=f"run {run_id} stage {stage.stage_id}",
                     author="runner",
                 )
+            if use_cache:
+                # candidate entry — persisted by run() only if the audit
+                # passes (failed audits must not poison future runs)
+                new_entries[stage.transitive_fingerprint] = StageCacheEntry(
+                    fingerprint=stage.transitive_fingerprint,
+                    outputs={n: artifacts[n] for n in stage.outputs},
+                    checks=this_stage_checks,
+                    output_bytes=output_bytes,
+                    run_id=run_id,
+                    created_at=time.time(),
+                )
         bytes_after = self.fmt.store.stats.snapshot()
+        # cache_* counters are run-level telemetry (reported under "cache"),
+        # not bytes moved — keep the io dict strictly I/O
         io_delta = {
-            k: bytes_after[k] - bytes_before[k] for k in bytes_after
+            k: bytes_after[k] - bytes_before[k]
+            for k in bytes_after
+            if not k.startswith("cache_")
         }
         return {
             "plan": plan,
             "artifacts": artifacts,
             "checks": checks,
             "io": io_delta,
+            "cache": {
+                "enabled": use_cache,
+                "hits": cache_hits,
+                "stages_executed": stages_executed,
+                "bytes_saved": bytes_saved,
+                "entries": new_entries,
+            },
         }
 
     def _record(
@@ -344,6 +442,7 @@ class Runner:
         merged: Optional[str],
         t_start: float,
     ) -> RunRecord:
+        cache = result["cache"]
         rec = RunRecord(
             run_id=run_id,
             pipeline_name=pipeline.name,
@@ -358,10 +457,21 @@ class Runner:
             stats={
                 "wall_s": time.perf_counter() - t_start,
                 "stages": len(result["plan"].stages),
+                "stages_executed": cache["stages_executed"],
                 "io": result["io"],
                 "executor": self.executor.stats(),
+                "cache": {
+                    "enabled": cache["enabled"],
+                    "hits": cache["hits"],
+                    "stages_executed": cache["stages_executed"],
+                    "bytes_saved": cache["bytes_saved"],
+                },
             },
             created_at=time.time(),
+            # only audited (merged) runs publish entries; record what we did
+            stage_cache={
+                fp: dict(e.outputs) for fp, e in cache["entries"].items()
+            } if merged is not None else {},
         )
         self.registry.record(rec)
         return rec

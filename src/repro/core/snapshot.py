@@ -1,10 +1,18 @@
-"""Run snapshotting + replay (paper 4.4.1, 4.6).
+"""Run snapshotting + replay (paper 4.4.1, 4.6) and the differential cache.
 
 Every run is assigned an id and an immutable record: pipeline fingerprint,
 base data commit, parameters, produced artifact keys, and execution stats.
 "The same code on the same data version will produce identical results" —
 ``Runner.replay`` re-executes a recorded run against its pinned commit and
 the tests assert snapshot-id equality (bit-for-bit reproducibility).
+
+That same determinism, read forward, is a performance win (the follow-up
+paper's differential caching): if a stage's *transitive* fingerprint —
+node code + upstream fingerprints + input snapshot ids + params — matches
+a previous successful run, its outputs can be restored from the object
+store instead of recomputed.  ``StageCacheRegistry`` is the fingerprint →
+outputs index; entries are written only after a run's audit passes, so a
+failed expectation can never leave poisoned cache entries behind.
 """
 from __future__ import annotations
 
@@ -16,6 +24,7 @@ from repro.io.objectstore import ObjectStore
 
 _RUN_NS = "runs"
 _COUNTER = "run_counter"
+_CACHE_NS = "stagecache"
 
 
 @dataclass(frozen=True)
@@ -33,6 +42,9 @@ class RunRecord:
     fused: bool
     stats: Dict[str, Any]
     created_at: float
+    #: transitive stage fingerprint -> artifact manifest keys persisted to
+    #: the differential cache by this run (empty for cache-off / failed runs)
+    stage_cache: Dict[str, Dict[str, str]] = field(default_factory=dict)
 
     def to_json_dict(self) -> Dict:
         return {
@@ -48,6 +60,7 @@ class RunRecord:
             "fused": self.fused,
             "stats": self.stats,
             "created_at": self.created_at,
+            "stage_cache": self.stage_cache,
         }
 
     @staticmethod
@@ -84,3 +97,71 @@ class RunRegistry:
             if name.startswith("run_"):
                 out.append(RunRecord.from_json_dict(raw))
         return sorted(out, key=lambda r: r.run_id)
+
+
+@dataclass(frozen=True)
+class StageCacheEntry:
+    """Everything needed to substitute a cached stage for execution.
+
+    ``outputs`` maps artifact name -> snapshot manifest key (the blobs are
+    content-addressed and immortal in the object store, so the keys stay
+    dereferenceable forever).  ``checks`` records the stage's expectation
+    verdicts at creation time; since entries are only persisted after a
+    fully-audited run, every recorded verdict is True — downstream audit
+    can therefore be skipped for cache-restored stages.
+    """
+
+    fingerprint: str
+    outputs: Dict[str, str]
+    checks: Dict[str, bool]
+    #: decompressed bytes the cached outputs represent (what a recompute
+    #: would have re-written) — feeds StoreStats.cache_bytes_saved
+    output_bytes: int
+    run_id: int
+    created_at: float
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "fingerprint": self.fingerprint,
+            "outputs": self.outputs,
+            "checks": self.checks,
+            "output_bytes": self.output_bytes,
+            "run_id": self.run_id,
+            "created_at": self.created_at,
+        }
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "StageCacheEntry":
+        return StageCacheEntry(**d)
+
+
+@dataclass
+class StageCacheRegistry:
+    """Differential-cache index: transitive stage fingerprint -> entry.
+
+    Entries live in the same ref namespace machinery as branches and run
+    records, so the cache shares the store's durability and atomic-swap
+    semantics without any new storage layer.
+    """
+
+    store: ObjectStore
+
+    def get(self, fingerprint: str) -> Optional[StageCacheEntry]:
+        raw = self.store.get_ref(_CACHE_NS, fingerprint)
+        return None if raw is None else StageCacheEntry.from_json_dict(raw)
+
+    def put(self, entry: StageCacheEntry) -> None:
+        self.store.set_ref(_CACHE_NS, entry.fingerprint, entry.to_json_dict())
+
+    def invalidate(self, fingerprint: str) -> None:
+        self.store.delete_ref(_CACHE_NS, fingerprint)
+
+    def entries(self) -> Dict[str, StageCacheEntry]:
+        return {
+            fp: StageCacheEntry.from_json_dict(raw)
+            for fp, raw in self.store.list_refs(_CACHE_NS).items()
+        }
+
+    def clear(self) -> None:
+        for fp in list(self.entries()):
+            self.invalidate(fp)

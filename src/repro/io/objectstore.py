@@ -34,6 +34,10 @@ class StoreStats:
     bytes_written: int = 0
     bytes_read: int = 0
     ref_updates: int = 0
+    #: differential cache: stages restored from the store instead of
+    #: recomputed, and the output bytes that were NOT re-written as a result
+    cache_hits: int = 0
+    cache_bytes_saved: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         return {
@@ -42,6 +46,8 @@ class StoreStats:
             "bytes_written": self.bytes_written,
             "bytes_read": self.bytes_read,
             "ref_updates": self.ref_updates,
+            "cache_hits": self.cache_hits,
+            "cache_bytes_saved": self.cache_bytes_saved,
         }
 
 
@@ -106,6 +112,13 @@ class ObjectStore:
 
     def exists(self, key: str) -> bool:
         return self._object_path(key).exists()
+
+    def record_cache_hit(self, bytes_saved: int) -> None:
+        """Count a differential-cache restore: one stage skipped,
+        ``bytes_saved`` output bytes NOT re-written to the store."""
+        with self._lock:
+            self.stats.cache_hits += 1
+            self.stats.cache_bytes_saved += bytes_saved
 
     def keys(self) -> Iterator[str]:
         objects = self.root / "objects"

@@ -59,16 +59,31 @@ class TaskRecord:
 
 @dataclass
 class FaultInjector:
-    """Deterministically fail the first ``failures`` attempts of a task."""
+    """Deterministically fail the first ``failures`` attempts of a task.
+
+    ``seen`` counts attempts by task *name*, so a speculated duplicate and
+    its original share one attempt ledger — exactly the cross-container
+    accounting the retry tests pin down.  ``crash_delay_s`` simulates a
+    container that hangs before crashing (slow failure), which is what
+    triggers straggler speculation on a doomed task.
+    """
 
     failures: Dict[str, int] = field(default_factory=dict)
     seen: Dict[str, int] = field(default_factory=dict)
+    crash_delay_s: Dict[str, float] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
 
     def maybe_fail(self, task_name: str) -> None:
-        remaining = self.failures.get(task_name, 0)
-        count = self.seen.get(task_name, 0)
-        self.seen[task_name] = count + 1
+        with self._lock:
+            remaining = self.failures.get(task_name, 0)
+            count = self.seen.get(task_name, 0)
+            self.seen[task_name] = count + 1
         if count < remaining:
+            delay = self.crash_delay_s.get(task_name, 0.0)
+            if delay:
+                time.sleep(delay)
             raise RuntimeError(
                 f"[fault-injection] simulated container crash for {task_name!r} "
                 f"(attempt {count + 1}/{remaining})"
@@ -93,6 +108,7 @@ class ServerlessExecutor:
             max_workers=self.config.max_workers, thread_name_prefix="container"
         )
         self._durations: List[float] = []
+        self._speculations = 0  # duplicates launched, lifetime of the pool
         self._lock = threading.Lock()
 
     # ----------------------------------------------------------- lifecycle
@@ -112,8 +128,14 @@ class ServerlessExecutor:
         fn = self.warm_cache.get_or_compile(spec, *args)
         return fn(*args)
 
-    def _run_with_retries(self, spec: FunctionSpec, args: Tuple[Any, ...]) -> Any:
-        record = TaskRecord(name=spec.name, worker=threading.current_thread().name)
+    def _run_with_retries(
+        self, spec: FunctionSpec, args: Tuple[Any, ...], speculated: bool = False
+    ) -> Any:
+        record = TaskRecord(
+            name=spec.name,
+            speculated=speculated,
+            worker=threading.current_thread().name,
+        )
         last_err: Optional[BaseException] = None
         for attempt in range(self.config.max_retries + 1):
             record.attempts = attempt + 1
@@ -150,8 +172,11 @@ class ServerlessExecutor:
         """Run a batch of sibling tasks; duplicate stragglers.
 
         Used for fan-out stages (per-shard transforms, eval shards).  The
-        duplicate races the original; first result wins — pure functions
-        make the race benign.
+        duplicate races the original; the first *successful* finisher wins —
+        pure functions make the race benign.  A racer that exhausts its
+        retries does not sink the task while its twin is still running: the
+        task fails (one ``TaskFailure``) only once every racer has failed,
+        with attempts accounted across the duplicates.
         """
         cfg = self.config
         futures: List[Future] = [
@@ -161,10 +186,16 @@ class ServerlessExecutor:
         start = [time.perf_counter()] * len(futures)
         results: List[Any] = [None] * len(futures)
         done = [False] * len(futures)
+        # duration at *completion* (not now-start: measuring completed
+        # siblings against the wall clock would grow the median in lockstep
+        # with the straggler's elapsed time and speculation could never fire)
+        finish: List[Optional[float]] = [None] * len(futures)
         speculated: Dict[int, Future] = {}
         while not all(done):
             completed_times = [
-                time.perf_counter() - start[i] for i, d in enumerate(done) if d
+                finish[i] - start[i]
+                for i, d in enumerate(done)
+                if d and finish[i] is not None
             ]
             median = (
                 sorted(completed_times)[len(completed_times) // 2]
@@ -175,31 +206,49 @@ class ServerlessExecutor:
                 if done[i]:
                     continue
                 spec, args = specs_and_args[i]
-                winner: Optional[Future] = None
-                if fut.done():
-                    winner = fut
-                elif i in speculated and speculated[i].done():
-                    winner = speculated[i]
-                if winner is not None:
-                    results[i] = winner.result()
+                racers: List[Future] = [fut]
+                if i in speculated:
+                    racers.append(speculated[i])
+                finished = [f for f in racers if f.done()]
+                success = next(
+                    (f for f in finished if f.exception() is None), None
+                )
+                if success is not None:
+                    results[i] = success.result()
                     done[i] = True
+                    finish[i] = time.perf_counter()
                     continue
+                if finished and len(finished) == len(racers):
+                    # every racer failed — surface exactly one TaskFailure
+                    # carrying the attempt count across all duplicates
+                    done[i] = True
+                    attempts = self._attempts_for(spec.name)
+                    raise TaskFailure(
+                        f"task {spec.name!r} failed on all {len(racers)} "
+                        f"container(s) after {attempts} total attempts"
+                    ) from finished[-1].exception()
+                # at least one racer in flight: maybe launch a duplicate
                 elapsed = time.perf_counter() - start[i]
                 if (
                     median is not None
                     and i not in speculated
+                    and not finished  # don't duplicate an already-failed task
                     and elapsed > cfg.speculation_factor * max(median, 1e-4)
                 ):
                     log.info("speculating straggler task %s", spec.name)
                     with self._lock:
-                        for r in self.records:
-                            if r.name == spec.name:
-                                r.speculated = True
+                        self._speculations += 1
                     speculated[i] = self._pool.submit(
-                        self._run_with_retries, spec, args
+                        self._run_with_retries, spec, args, True
                     )
             time.sleep(0.002)
         return results
+
+    def _attempts_for(self, name: str) -> int:
+        """Attempts recorded for ``name`` across the original and any
+        speculated duplicates (the cross-container retry ledger)."""
+        with self._lock:
+            return sum(r.attempts for r in self.records if r.name == name)
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> Dict[str, Any]:
@@ -207,7 +256,7 @@ class ServerlessExecutor:
             return {
                 "tasks": len(self.records),
                 "retries": sum(r.attempts - 1 for r in self.records),
-                "speculated": sum(r.speculated for r in self.records),
+                "speculated": self._speculations,
                 "cold_starts": self.warm_cache.stats.cold_starts,
                 "warm_hits": self.warm_cache.stats.warm_hits,
             }

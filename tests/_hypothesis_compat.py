@@ -1,0 +1,196 @@
+"""Minimal deterministic stand-in for ``hypothesis`` in offline CI.
+
+The real hypothesis package is an optional ``[test]`` extra (see
+pyproject.toml) and is not installable in the air-gapped CI image, but 7
+test modules are property-based.  This module implements exactly the
+surface those modules use — ``given`` (keyword strategies only),
+``settings(max_examples=..., deadline=...)`` and the ``strategies``
+namespace (``integers``, ``floats``, ``sampled_from``, ``binary``,
+``lists``, ``tuples``) — with two deliberate simplifications:
+
+* **deterministic**: every test draws from a ``random.Random`` seeded by
+  the test's qualified name, so failures are reproducible run-to-run;
+* **boundary-first**: the first examples are the strategy's boundary
+  values (min/max, empty collections) before random draws, which is where
+  most of hypothesis's bug-finding power for this codebase lives (n=0
+  tables, empty blobs, min/max thresholds).
+
+No shrinking, no database, no stateful testing — modules import it only
+when ``import hypothesis`` fails, so installing the real package
+transparently upgrades the suite.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+from typing import Any, Callable, List, Optional, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A value generator: fixed boundary examples, then seeded random draws."""
+
+    def __init__(
+        self,
+        draw: Callable[[random.Random], Any],
+        boundaries: Sequence[Any] = (),
+        label: str = "strategy",
+    ):
+        self._draw = draw
+        self._boundaries = tuple(boundaries)
+        self._label = label
+
+    @property
+    def boundaries(self) -> tuple:
+        return self._boundaries
+
+    def example_at(self, index: int, rng: random.Random) -> Any:
+        if index < len(self._boundaries):
+            return self._boundaries[index]
+        return self._draw(rng)
+
+    def example(self, rng: Optional[random.Random] = None) -> Any:
+        return self._draw(rng or random.Random(0))
+
+    def __repr__(self) -> str:
+        return f"<{self._label}>"
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.randint(min_value, max_value),
+        boundaries=(min_value, max_value),
+        label=f"integers({min_value}, {max_value})",
+    )
+
+
+def floats(
+    min_value: float, max_value: float, *, allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> SearchStrategy:
+    # NaN/inf are never produced — callers here always pass allow_nan=False.
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(
+        lambda rng: rng.uniform(lo, hi),
+        boundaries=(lo, hi),
+        label=f"floats({lo}, {hi})",
+    )
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    opts = list(options)
+    if not opts:
+        raise ValueError("sampled_from requires a non-empty sequence")
+    return SearchStrategy(
+        lambda rng: opts[rng.randrange(len(opts))],
+        boundaries=(opts[0],),
+        label=f"sampled_from({opts!r})",
+    )
+
+
+def binary(*, min_size: int = 0, max_size: int = 64) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: rng.randbytes(rng.randint(min_size, max_size)),
+        boundaries=(bytes(min_size), bytes(max_size)),
+        label=f"binary({min_size}, {max_size})",
+    )
+
+
+def lists(
+    elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10
+) -> SearchStrategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.example_at(len(elements.boundaries), rng) for _ in range(n)]
+
+    boundaries = []
+    if elements.boundaries:
+        boundaries.append([elements.boundaries[0]] * min_size)
+        boundaries.append([elements.boundaries[-1]] * max_size)
+    return SearchStrategy(
+        draw, boundaries=boundaries, label=f"lists({elements!r})"
+    )
+
+
+def tuples(*elements: SearchStrategy) -> SearchStrategy:
+    def draw(rng: random.Random) -> tuple:
+        return tuple(
+            e.example_at(len(e.boundaries), rng) for e in elements
+        )
+
+    boundaries = []
+    if all(e.boundaries for e in elements):
+        boundaries.append(tuple(e.boundaries[0] for e in elements))
+    return SearchStrategy(draw, boundaries=boundaries, label="tuples(...)")
+
+
+class settings:
+    """Decorator mirroring ``hypothesis.settings`` — only ``max_examples``
+    matters here; ``deadline`` and anything else is accepted and ignored."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline: Any = None, **_ignored: Any):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn: Callable) -> Callable:
+        fn._compat_settings = self  # read by the given() wrapper
+        return fn
+
+
+def given(**strategy_kwargs: SearchStrategy) -> Callable:
+    """Keyword-strategy ``@given`` that stays pytest-fixture friendly.
+
+    The wrapper's signature drops the strategy-supplied parameters so
+    pytest injects only the remaining fixtures (e.g. tmp_path_factory).
+    """
+    if not strategy_kwargs:
+        raise TypeError("given() requires at least one keyword strategy")
+
+    def deco(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        unknown = set(strategy_kwargs) - set(sig.parameters)
+        if unknown:
+            raise TypeError(f"given() got unexpected arguments {sorted(unknown)}")
+        fixture_params = [
+            p for name, p in sig.parameters.items() if name not in strategy_kwargs
+        ]
+
+        @functools.wraps(fn)
+        def wrapper(**fixture_args: Any):
+            cfg = getattr(wrapper, "_compat_settings", None)
+            max_examples = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode("utf-8")))
+            for i in range(max_examples):
+                drawn = {
+                    name: strat.example_at(i, rng)
+                    for name, strat in strategy_kwargs.items()
+                }
+                try:
+                    fn(**fixture_args, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__qualname__}: {drawn!r}"
+                    ) from e
+
+        wrapper.__signature__ = sig.replace(parameters=fixture_params)
+        wrapper._property_test = True  # conftest marks these as slow
+        return wrapper
+
+    return deco
+
+
+#: importable as ``from tests._hypothesis_compat import strategies as st``
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    sampled_from=sampled_from,
+    binary=binary,
+    lists=lists,
+    tuples=tuples,
+    SearchStrategy=SearchStrategy,
+)

@@ -30,3 +30,22 @@ def catalog(store):
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    # registered in pyproject.toml too; duplicated here so the marker
+    # exists even when pytest runs without that config file (e.g. pytest
+    # invoked on a single test file from another rootdir)
+    config.addinivalue_line(
+        "markers", "slow: slow property-based tests (deselect with -m 'not slow')"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-mark property-based tests as slow so `-m 'not slow'` gives a
+    quick signal pass.  Real hypothesis sets ``fn.hypothesis``; the offline
+    fallback (tests/_hypothesis_compat.py) sets ``fn._property_test``."""
+    for item in items:
+        fn = getattr(item, "function", None)
+        if hasattr(fn, "hypothesis") or getattr(fn, "_property_test", False):
+            item.add_marker(pytest.mark.slow)

@@ -1,8 +1,12 @@
 """Property-based catalog invariants (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline CI: deterministic fallback shim
+    from tests._hypothesis_compat import given, settings
+    from tests._hypothesis_compat import strategies as st
 
 from repro.catalog import Catalog, MergeConflict
 from repro.io import ObjectStore

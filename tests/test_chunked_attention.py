@@ -3,8 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline CI: deterministic fallback shim
+    from tests._hypothesis_compat import given, settings
+    from tests._hypothesis_compat import strategies as st
 
 from repro.models.attention import _sdpa, _sdpa_chunked
 

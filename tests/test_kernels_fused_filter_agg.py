@@ -2,8 +2,12 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline CI: deterministic fallback shim
+    from tests._hypothesis_compat import given, settings
+    from tests._hypothesis_compat import strategies as st
 
 from repro.kernels.fused_filter_agg import fused_filter_agg, fused_filter_agg_ref
 

@@ -1,8 +1,12 @@
 """Unit + property tests for the content-addressed object store."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # offline CI: deterministic fallback shim
+    from tests._hypothesis_compat import given, settings
+    from tests._hypothesis_compat import strategies as st
 
 from repro.io import ObjectStore, array_to_bytes, bytes_to_array
 

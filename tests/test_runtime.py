@@ -101,6 +101,66 @@ def test_straggler_speculation_first_result_wins():
         assert len(results) == 6
 
 
+def test_speculation_duplicate_and_original_both_fail():
+    """Regression: when a speculated duplicate AND the original both exhaust
+    retries, exactly one TaskFailure surfaces and the attempt ledger counts
+    attempts across both containers (no double-retry, no lost failure)."""
+    # generous crash delay: speculation must launch within the original's
+    # first attempt (2 x 0.3s window) even on a loaded CI machine
+    inj = FaultInjector(
+        failures={"doomed": 99}, crash_delay_s={"doomed": 0.3}
+    )
+    cfg = ExecutorConfig(
+        max_workers=4,
+        max_retries=1,  # 2 attempts per racer
+        retry_backoff_s=0.001,
+        speculation_factor=1.5,
+        speculation_min_samples=2,
+    )
+    ok = FunctionSpec(name="ok", fn=lambda x: np.asarray(x) + 1, jit=False)
+    with ServerlessExecutor(cfg, fault_injector=inj) as ex:
+        specs = [
+            (FunctionSpec(name="doomed", fn=lambda x: x, jit=False), (np.ones(2),))
+        ] + [(ok, (np.ones(2),)) for _ in range(4)]
+        with pytest.raises(TaskFailure):
+            ex.map_with_speculation(specs)
+        doomed_records = [r for r in ex.records if r.name == "doomed"]
+        # the doomed task was speculated: original + duplicate both recorded
+        assert len(doomed_records) == 2
+        assert ex.stats()["speculated"] == 1
+        # attempts accounted across duplicates: 2 racers x 2 attempts each,
+        # and the injector's shared per-name ledger agrees
+        assert sum(r.attempts for r in doomed_records) == 4
+        assert inj.seen["doomed"] == 4
+
+
+def test_speculation_duplicate_succeeds_after_original_fails():
+    """Regression: a racer failing must not sink the task while its twin can
+    still succeed — first *successful* finisher wins."""
+    # generous crash delay: the duplicate must launch + succeed within the
+    # original's single slow failure even on a loaded CI machine
+    inj = FaultInjector(
+        failures={"flaky": 1}, crash_delay_s={"flaky": 0.5}
+    )
+    cfg = ExecutorConfig(
+        max_workers=4,
+        max_retries=0,  # single attempt per racer: original fails, dup wins
+        retry_backoff_s=0.001,
+        speculation_factor=1.5,
+        speculation_min_samples=2,
+    )
+    ok = FunctionSpec(name="ok", fn=lambda x: np.asarray(x) + 1, jit=False)
+    with ServerlessExecutor(cfg, fault_injector=inj) as ex:
+        specs = [
+            (FunctionSpec(name="flaky", fn=lambda x: np.asarray(x) + 1, jit=False),
+             (np.ones(2),))
+        ] + [(ok, (np.ones(2),)) for _ in range(4)]
+        results = ex.map_with_speculation(specs)
+        for r in results:
+            np.testing.assert_allclose(r, 2.0)
+        assert inj.seen["flaky"] == 2  # failed original + successful duplicate
+
+
 def test_cost_model_tiers():
     cm = CostModel()
     small = cm.request_for_scan(10 << 20)  # 10MB scan
