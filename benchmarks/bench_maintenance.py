@@ -1,0 +1,192 @@
+"""Lakekeeper benchmarks: bytes reclaimed by GC, warm-scan speedup from
+shard compaction (ISSUE 2 acceptance numbers).
+
+Scenario 1 (gc): the taxi pipeline runs 4 times with an edited filter
+date — each edit writes new trips/pickups artifacts, so the lake
+accumulates superseded table versions.  ``repro cache prune`` releases
+the stale cache roots, ``repro gc --history 1`` expires non-head
+history, and the sweep must reclaim >=50% of store bytes while the
+branch head stays bit-identical.
+
+Scenario 2 (compact): a table built from many small appends is
+compacted; a full warm scan afterwards must touch fewer objects and
+finish faster, with identical rows.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import bench, row
+from repro.catalog import Catalog
+from repro.core import Pipeline, Runner, StageCacheRegistry, requirements
+from repro.io import ObjectStore
+from repro.maintenance import EvictionPolicy, collect_garbage, compact_table, prune_cache
+from repro.runtime import ExecutorConfig, ServerlessExecutor
+from repro.table import Schema, TableFormat
+
+TAXI_SCHEMA = Schema.of(
+    pickup_at="int32",
+    pickup_location_id="int32",
+    passenger_count="int32",
+    dropoff_location_id="int32",
+)
+APRIL_1 = 17987
+
+
+def _make_data(n: int, rng: np.random.Generator):
+    days = np.sort(rng.integers(APRIL_1 - 60, APRIL_1 + 30, n)).astype(np.int32)
+    return {
+        "pickup_at": days,
+        "pickup_location_id": rng.integers(0, 64, n).astype(np.int32),
+        "passenger_count": rng.poisson(30.0, n).astype(np.int32),
+        "dropoff_location_id": rng.integers(0, 64, n).astype(np.int32),
+    }
+
+
+def _build_pipeline(since: str) -> Pipeline:
+    p = Pipeline("taxi_maintenance_bench")
+    p.sql(
+        "trips",
+        f"""
+        SELECT pickup_location_id, passenger_count as count, dropoff_location_id
+        FROM taxi_table WHERE pickup_at >= '{since}'
+        """,
+    )
+
+    @p.python
+    @requirements({"pandas": "2.0.0"})
+    def trips_expectation(ctx, trips):
+        return trips.mean("count") > 10.0
+
+    p.sql(
+        "pickups",
+        """
+        SELECT pickup_location_id, dropoff_location_id, COUNT(*) AS counts
+        FROM trips GROUP BY pickup_location_id, dropoff_location_id
+        ORDER BY counts DESC
+        """,
+    )
+    return p
+
+
+def _store_bytes(store: ObjectStore) -> int:
+    return sum(store.object_size(k) or 0 for k in store.keys())
+
+
+def _bench_gc(n: int) -> List[str]:
+    store = ObjectStore(tempfile.mkdtemp())
+    catalog = Catalog(store)
+    fmt = TableFormat(store, shard_rows=16384)
+    rng = np.random.default_rng(0)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, _make_data(n, rng))
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+
+    dates = ["2019-02-01", "2019-02-05", "2019-02-09", "2019-02-13"]
+    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
+        runner = Runner(catalog, fmt, ex)
+        for since in dates:
+            res = runner.run(
+                _build_pipeline(since), branch="main",
+                fusion=False, pushdown=False, cache=True,
+            )
+        baseline = runner.query("SELECT pickup_location_id, counts FROM pickups")
+
+        before = _store_bytes(store)
+        registry = StageCacheRegistry(store)
+        budget = sum(
+            e.output_bytes for e in registry.entries().values()
+            if e.run_id == res.run_id
+        )
+        prune_cache(registry, EvictionPolicy(max_bytes=budget))
+        t0 = time.perf_counter()
+        report = collect_garbage(store, catalog, fmt, history=1, grace_s=0.0)
+        gc_wall = time.perf_counter() - t0
+        after = _store_bytes(store)
+
+        out = runner.query("SELECT pickup_location_id, counts FROM pickups")
+        assert np.array_equal(out["counts"], baseline["counts"]), "gc broke the head!"
+        warm = runner.run(
+            _build_pipeline(dates[-1]), branch="main",
+            fusion=False, pushdown=False, cache=True,
+        )
+
+    frac = 1.0 - after / before
+    assert frac >= 0.5, f"gc only reclaimed {frac:.1%} (target >=50%)"
+    return [
+        row(
+            f"gc_taxi_4edited_runs_n{n}",
+            gc_wall * 1e6,
+            f"reclaimed={report.bytes_reclaimed}B;frac={frac:.1%};"
+            f"objects={report.swept_objects};commits={report.swept_commits};"
+            f"target>=50%",
+        ),
+        row(
+            f"gc_post_sweep_warm_run_n{n}",
+            0.0,
+            f"cache_hits={warm.stats['cache']['hits']};"
+            f"stages_executed={warm.stats['cache']['stages_executed']};"
+            f"head_bit_identical=True",
+        ),
+    ]
+
+
+def _bench_compaction(n: int, append_rows: int) -> List[str]:
+    store = ObjectStore(tempfile.mkdtemp())
+    catalog = Catalog(store)
+    fmt = TableFormat(store, shard_rows=max(n, 1))
+    rng = np.random.default_rng(1)
+    data = _make_data(n, rng)
+    snap = None
+    for start in range(0, n, append_rows):
+        chunk = {c: v[start:start + append_rows] for c, v in data.items()}
+        snap = fmt.write(
+            "taxi_table", TAXI_SCHEMA, chunk,
+            parent=snap, append=snap is not None,
+        )
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+
+    def scan():
+        key = catalog.table_key("taxi_table")
+        fmt.read(fmt.load_snapshot(key))
+
+    gets0 = store.stats.gets
+    t_before = bench(scan, warmup=1, iters=5)
+    gets_before = (store.stats.gets - gets0) // 6
+
+    report = compact_table(catalog, fmt, "taxi_table")
+    fragmented = fmt.read(fmt.load_snapshot(
+        catalog.table_key("taxi_table", commit_id=catalog.head("main").parent_id)
+    ))
+    compacted = fmt.read(fmt.load_snapshot(catalog.table_key("taxi_table")))
+    for col in TAXI_SCHEMA.names:
+        assert np.array_equal(fragmented[col], compacted[col]), "compaction changed data!"
+
+    gets0 = store.stats.gets
+    t_after = bench(scan, warmup=1, iters=5)
+    gets_after = (store.stats.gets - gets0) // 6
+
+    speedup = t_before / max(t_after, 1e-9)
+    assert report.shards_after < report.shards_before, "no shards merged"
+    return [
+        row(
+            f"compact_scan_fragmented_n{n}",
+            t_before * 1e6,
+            f"shards={report.shards_before};gets_per_scan={gets_before}",
+        ),
+        row(
+            f"compact_scan_compacted_n{n}",
+            t_after * 1e6,
+            f"shards={report.shards_after};gets_per_scan={gets_after};"
+            f"speedup={speedup:.2f}x;bit_identical=True",
+        ),
+    ]
+
+
+def run(n: int = 200_000) -> List[str]:
+    out = _bench_gc(n)
+    out += _bench_compaction(n // 2, append_rows=1000)
+    return out

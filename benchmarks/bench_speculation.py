@@ -1,0 +1,97 @@
+"""Straggler speculation: quantify tail savings (ROADMAP item from PR 1).
+
+The executor duplicates a task once it runs longer than
+``speculation_factor`` x the median of its completed siblings, and the
+first successful finisher wins.  PR 1 fixed the trigger (the median was
+previously measured against the wall clock, so speculation could never
+fire); this benchmark measures what that fix buys on a classic fan-out
+with one slow container:
+
+* N sibling tasks, each ~``base_s`` of work;
+* one straggler whose FIRST attempt takes ``tail_s`` (a degraded
+  container); any duplicate attempt runs at normal speed;
+* speculation ON should cut the batch wall time from ~``tail_s`` to
+  ~``factor x base_s + base_s`` — the duplicate races past the straggler.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.runtime import ExecutorConfig, FunctionSpec, ServerlessExecutor
+
+N_TASKS = 8
+BASE_S = 0.05
+TAIL_S = 0.8
+
+
+def _make_siblings():
+    """Fresh task set: task 0's first attempt is slow, later attempts
+    (the speculated duplicate) run at base speed."""
+    attempts = {"n": 0}
+    lock = threading.Lock()
+
+    def straggler(x):
+        with lock:
+            attempts["n"] += 1
+            first = attempts["n"] == 1
+        time.sleep(TAIL_S if first else BASE_S)
+        return np.asarray(x) + 1
+
+    def normal(x):
+        time.sleep(BASE_S)
+        return np.asarray(x) + 1
+
+    return [
+        (
+            FunctionSpec(name=f"sib{i}", fn=straggler if i == 0 else normal, jit=False),
+            (np.ones(4),),
+        )
+        for i in range(N_TASKS)
+    ]
+
+
+def _run_batch(speculation_factor: float) -> float:
+    cfg = ExecutorConfig(
+        max_workers=N_TASKS + 2,
+        speculation_factor=speculation_factor,
+        speculation_min_samples=3,
+    )
+    with ServerlessExecutor(cfg) as ex:
+        t0 = time.perf_counter()
+        results = ex.map_with_speculation(_make_siblings())
+        wall = time.perf_counter() - t0
+        for r in results:
+            np.testing.assert_allclose(r, 2.0)
+        speculated = ex.stats()["speculated"]
+    return wall, speculated
+
+
+def run() -> List[str]:
+    # factor so large the straggler can never trip it = speculation off
+    wall_off, spec_off = _run_batch(speculation_factor=1e9)
+    wall_on, spec_on = _run_batch(speculation_factor=2.0)
+
+    assert spec_off == 0, "control run must not speculate"
+    assert spec_on >= 1, "straggler should have been speculated"
+    # the duplicate must beat the straggler's tail by a wide margin
+    savings = wall_off - wall_on
+    speedup = wall_off / max(wall_on, 1e-9)
+    assert wall_on < TAIL_S, "speculation failed to cut the tail"
+    return [
+        row(
+            f"speculation_off_tail{int(TAIL_S * 1e3)}ms",
+            wall_off * 1e6,
+            f"batch={N_TASKS};duplicates=0;wall~=tail",
+        ),
+        row(
+            f"speculation_on_tail{int(TAIL_S * 1e3)}ms",
+            wall_on * 1e6,
+            f"batch={N_TASKS};duplicates={spec_on};"
+            f"tail_savings={savings * 1e3:.0f}ms;speedup={speedup:.2f}x",
+        ),
+    ]

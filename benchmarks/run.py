@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_engine            query engine + fused_filter_agg kernel
   bench_catalog           paper 4.3 (branch/commit/merge, checkpoints)
   bench_differential_cache  warm re-runs skip clean stages (arXiv 2411.08203)
+  bench_maintenance       lakekeeper: gc bytes reclaimed, compaction speedup
+  bench_speculation       straggler-tail savings from backup requests
   bench_dryrun_summary    deliverables (e)+(g): dry-run + roofline headlines
 
 Run: ``PYTHONPATH=src:. python -m benchmarks.run [--only NAME]``
@@ -23,6 +25,8 @@ SUITES = [
     "bench_engine",
     "bench_fusion",
     "bench_differential_cache",
+    "bench_maintenance",
+    "bench_speculation",
     "bench_dryrun_summary",
 ]
 

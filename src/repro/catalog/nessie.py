@@ -118,6 +118,26 @@ class Catalog:
             raise CatalogError(f"no such commit {commit_id}")
         return Commit.from_json_dict(raw)
 
+    def get_commit_opt(self, commit_id: Optional[str]) -> Optional[Commit]:
+        """Like ``get_commit`` but None for a missing/expired commit.
+
+        After ``repro gc`` expires old history, a surviving commit's
+        parent pointer may dangle; walks treat that as the history
+        horizon (like a shallow git clone) rather than corruption.
+        """
+        if commit_id is None:
+            return None
+        raw = self.store.get_ref("commits", commit_id)
+        return None if raw is None else Commit.from_json_dict(raw)
+
+    def delete_commit(self, commit_id: str) -> bool:
+        """Remove a commit ref (GC of expired/unreachable history)."""
+        return self.store.delete_ref("commits", commit_id)
+
+    def all_commit_ids(self) -> List[str]:
+        """Every commit ref in the store, reachable or not."""
+        return sorted(self.store.list_refs("commits").keys())
+
     # ------------------------------------------------------------- branches
     def branches(self) -> List[str]:
         return sorted(self.store.list_refs(_BRANCH_NS).keys())
@@ -163,17 +183,31 @@ class Catalog:
         *,
         message: str = "",
         author: str = "user",
+        expect: Optional[Dict[str, Optional[str]]] = None,
     ) -> Commit:
         """Commit table updates to a branch (``None`` value deletes a table).
 
         Uses CAS on the branch head: concurrent commits retry against the
         fresh head, so a lost-update can't happen (optimistic concurrency).
+
+        ``expect`` maps table name -> the snapshot key the caller derived
+        its update *from*; if the fresh head disagrees, ``MergeConflict``
+        is raised instead of silently overwriting a concurrent change.
+        Derived rewrites (e.g. compaction) need this: their update is only
+        valid against the exact version they read.
         """
         for _ in range(64):
             ref = self.store.get_ref(_BRANCH_NS, branch)
             if ref is None:
                 raise CatalogError(f"no such branch {branch!r}")
             head = self.get_commit(ref["commit"])
+            if expect is not None:
+                for name, key in expect.items():
+                    if head.tables.get(name) != key:
+                        raise MergeConflict(
+                            f"table {name!r} changed concurrently on "
+                            f"{branch!r} (expected {key!r})"
+                        )
             tables = dict(head.tables)
             for name, key in updates.items():
                 if key is None:
@@ -213,19 +247,23 @@ class Catalog:
         out, cur = [], self.head(branch)
         while cur is not None and len(out) < limit:
             out.append(cur)
-            cur = self.get_commit(cur.parent_id) if cur.parent_id else None
+            # stop at the history horizon (parent expired by gc)
+            cur = self.get_commit_opt(cur.parent_id)
         return out
 
     # -------------------------------------------------------------- merging
     def _ancestors(self, commit_id: str) -> List[str]:
+        """Commit ids reachable from ``commit_id``, horizon-tolerant."""
         seen: List[str] = []
         stack = [commit_id]
         while stack:
             cid = stack.pop()
             if cid in seen:
                 continue
+            c = self.get_commit_opt(cid)
+            if c is None:  # expired by gc — history ends here
+                continue
             seen.append(cid)
-            c = self.get_commit(cid)
             if c.parent_id:
                 stack.append(c.parent_id)
             if c.extra_parent_id:
@@ -245,12 +283,83 @@ class Catalog:
             if cid in visited:
                 continue
             visited.add(cid)
-            c = self.get_commit(cid)
+            c = self.get_commit_opt(cid)
+            if c is None:  # beyond the gc horizon: no ancestry there
+                continue
             if c.parent_id:
                 stack.append(c.parent_id)
             if c.extra_parent_id:
                 stack.append(c.extra_parent_id)
         return None
+
+    # --------------------------------------------------------- reachability
+    def reachable_commits(
+        self,
+        *,
+        extra_roots: Sequence[str] = (),
+        history: Optional[int] = None,
+    ) -> Dict[str, Commit]:
+        """Enumerate commits reachable from every branch head, every tag
+        and ``extra_roots`` — the mark phase's catalog walk.
+
+        ``history`` bounds the walk depth from each *branch head* (None =
+        unlimited): ``history=1`` keeps only the heads themselves,
+        Iceberg-style snapshot expiry.  Tag and extra roots are always
+        kept but their ancestry honours the same bound, counted from the
+        root.  Merge parents (``extra_parent_id``) count as one step like
+        first parents.
+        """
+        if history is not None and history < 1:
+            # history=0 would mark NOTHING live — a sweep against that
+            # live set destroys every branch head's data
+            raise ValueError(f"history must be >= 1, got {history}")
+        roots: List[str] = []
+        for branch in self.branches():
+            ref = self.store.get_ref(_BRANCH_NS, branch)
+            if ref is not None:
+                roots.append(ref["commit"])
+        roots.extend(self.tags().values())
+        roots.extend(extra_roots)
+
+        out: Dict[str, Commit] = {}
+        if history is None:
+            # unbounded: a plain visited-set walk — shared ancestry is
+            # traversed once regardless of how many roots reach it
+            stack = list(roots)
+            while stack:
+                cid = stack.pop()
+                if cid in out:
+                    continue
+                c = self.get_commit_opt(cid)
+                if c is None:
+                    continue  # dangling root or expired parent
+                out[cid] = c
+                if c.parent_id:
+                    stack.append(c.parent_id)
+                if c.extra_parent_id:
+                    stack.append(c.extra_parent_id)
+            return out
+
+        # depth-bounded: a commit must be re-expanded when another root
+        # reaches it shallower (its ancestry extends further down)
+        best_depth: Dict[str, int] = {}
+        dstack: List[tuple] = [(cid, 1) for cid in roots]
+        while dstack:
+            cid, depth = dstack.pop()
+            if depth > history:
+                continue
+            if best_depth.get(cid, 1 << 60) <= depth:
+                continue  # already visited at least this shallowly
+            c = self.get_commit_opt(cid)
+            if c is None:
+                continue  # dangling root or expired parent
+            best_depth[cid] = depth
+            out[cid] = c
+            if c.parent_id:
+                dstack.append((c.parent_id, depth + 1))
+            if c.extra_parent_id:
+                dstack.append((c.extra_parent_id, depth + 1))
+        return out
 
     def merge(
         self,
@@ -309,6 +418,13 @@ class Catalog:
     # ----------------------------------------------------------------- tags
     def tag(self, name: str, commit_id: str) -> None:
         self.store.set_ref(_TAG_NS, name, {"commit": commit_id})
+
+    def tags(self) -> Dict[str, str]:
+        """All tags: name -> commit id."""
+        return {
+            name: ref["commit"]
+            for name, ref in self.store.list_refs(_TAG_NS).items()
+        }
 
     def resolve_tag(self, name: str) -> str:
         ref = self.store.get_ref(_TAG_NS, name)

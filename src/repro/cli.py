@@ -9,6 +9,14 @@ Mirrors the two core commands plus the git-like helpers:
   python -m repro.cli --lake ... log [-b branch]
   python -m repro.cli --lake ... tables [-b branch]
 
+plus the lakekeeper maintenance verbs (repro.maintenance):
+
+  python -m repro.cli --lake ... gc [--dry-run] [--history N] [--grace S]
+  python -m repro.cli --lake ... compact [TABLE] [-b branch]
+                                      [--target-rows N] [--dry-run]
+  python -m repro.cli --lake ... cache {prune,stats}
+                                      [--max-bytes N] [--ttl S] [--dry-run]
+
 A pipeline module is a plain Python file defining ``PIPELINE`` (a
 ``repro.core.Pipeline``) — the paper's "code in the IDE of choice".
 """
@@ -87,6 +95,39 @@ def main(argv=None) -> None:
     t = sub.add_parser("tables", help="tables at a branch head")
     t.add_argument("-b", "--branch", default="main")
 
+    g = sub.add_parser("gc", help="mark-and-sweep unreachable objects")
+    g.add_argument("--dry-run", action="store_true",
+                   help="report reclaimable garbage without deleting")
+    g.add_argument("--history", type=int, default=None,
+                   help="keep only the last N commits per branch "
+                   "(snapshot expiry; default keeps all history)")
+    g.add_argument("--grace", type=float, default=900.0, metavar="S",
+                   help="never sweep objects younger than S seconds "
+                   "(protects in-flight runs; default 900)")
+    g.add_argument("--pin-ttl", type=float, default=86400.0, metavar="S",
+                   help="ignore run pins older than S seconds "
+                   "(leaked by crashed runs; default 1 day)")
+
+    co = sub.add_parser("compact", help="merge small shards into larger ones")
+    co.add_argument("table", nargs="?", default=None,
+                    help="table to compact (default: every table)")
+    co.add_argument("-b", "--branch", default="main")
+    co.add_argument("--target-rows", type=int, default=None,
+                    help="rows per output shard (default: format shard_rows)")
+    co.add_argument("--min-fill", type=float, default=0.5,
+                    help="shards below min_fill*target are merge candidates")
+    co.add_argument("--dry-run", action="store_true")
+
+    ca = sub.add_parser("cache", help="differential-cache maintenance")
+    ca_sub = ca.add_subparsers(dest="cache_cmd", required=True)
+    cp = ca_sub.add_parser("prune", help="evict entries by LRU/TTL policy")
+    cp.add_argument("--max-bytes", type=int, default=None,
+                    help="byte budget for summed entry output_bytes")
+    cp.add_argument("--ttl", type=float, default=None, metavar="S",
+                    help="evict entries not used for S seconds")
+    cp.add_argument("--dry-run", action="store_true")
+    ca_sub.add_parser("stats", help="registry size and entry listing")
+
     args = ap.parse_args(argv)
     store = ObjectStore(Path(args.lake))
     catalog = Catalog(store)
@@ -109,6 +150,66 @@ def main(argv=None) -> None:
         for name, key in sorted(catalog.tables(branch=args.branch).items()):
             snap = fmt.load_snapshot(key)
             print(f"{name:<32} {snap.num_rows:>10} rows  {key[:12]}")
+        return
+
+    if args.cmd == "gc":
+        from repro.maintenance import collect_garbage
+
+        if args.history is not None and args.history < 1:
+            raise SystemExit(
+                f"--history must be >= 1 (got {args.history}): history=N "
+                "keeps the last N commits per branch, 0 would keep nothing"
+            )
+        report = collect_garbage(
+            store, catalog, fmt,
+            history=args.history, grace_s=args.grace,
+            pin_ttl_s=args.pin_ttl, dry_run=args.dry_run,
+        )
+        print(report.describe())
+        return
+
+    if args.cmd == "compact":
+        from repro.maintenance import compact_branch, compact_table
+
+        if args.table:
+            reports = [compact_table(
+                catalog, fmt, args.table, branch=args.branch,
+                target_rows=args.target_rows, min_fill=args.min_fill,
+                dry_run=args.dry_run,
+            )]
+        else:
+            reports = compact_branch(
+                catalog, fmt, branch=args.branch,
+                target_rows=args.target_rows, min_fill=args.min_fill,
+                dry_run=args.dry_run,
+            )
+        for report in reports:
+            print(report.describe())
+        print(f"shards merged (lifetime): {store.stats.compact_shards_merged}")
+        return
+
+    if args.cmd == "cache":
+        from repro.core import StageCacheRegistry
+        from repro.maintenance import EvictionPolicy, prune_cache
+
+        registry = StageCacheRegistry(store)
+        if args.cache_cmd == "prune":
+            report = prune_cache(
+                registry,
+                EvictionPolicy(max_bytes=args.max_bytes, ttl_s=args.ttl),
+                dry_run=args.dry_run,
+            )
+            print(report.describe())
+        else:  # stats
+            entries = registry.entries()
+            print(f"{len(entries)} entries, {registry.total_bytes()} bytes")
+            for fp, e in sorted(
+                entries.items(), key=lambda kv: kv[1].last_used_at
+            ):
+                print(
+                    f"{fp[:16]}  run={e.run_id:<4} bytes={e.output_bytes:<10} "
+                    f"outputs={sorted(e.outputs)}"
+                )
         return
 
     with ServerlessExecutor() as ex:

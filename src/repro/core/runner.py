@@ -183,44 +183,50 @@ class Runner:
         run_id = self.registry.next_run_id()
         ephemeral = f"run_{run_id}"
         self.catalog.create_branch(ephemeral, at_commit=base.commit_id)
+        # pin the base commit: a concurrent `repro gc` must not expire the
+        # data version this run is reading (grace-period pinning)
+        self.registry.pin_run(run_id, base.commit_id)
 
         try:
-            result = self._execute(
-                pipeline, branch, ephemeral, base.commit_id, params,
-                PlannerConfig(fusion=fusion, pushdown=pushdown), run_id,
-                use_cache=cache,
-            )
-        except Exception:
-            # any failure: discard the ephemeral branch — prod stays clean
-            self.catalog.delete_branch(ephemeral)
-            raise
+            try:
+                result = self._execute(
+                    pipeline, branch, ephemeral, base.commit_id, params,
+                    PlannerConfig(fusion=fusion, pushdown=pushdown), run_id,
+                    use_cache=cache,
+                )
+            except Exception:
+                # any failure: discard the ephemeral branch — prod stays clean
+                self.catalog.delete_branch(ephemeral)
+                raise
 
-        # 4. audit — a failed expectation also rolls back this run's
-        # candidate cache entries (they are only persisted below, after
-        # the audit), so the cache can never serve unaudited artifacts
-        failed = [k for k, v in result["checks"].items() if not v]
-        if failed:
-            self.catalog.delete_branch(ephemeral)
+            # 4. audit — a failed expectation also rolls back this run's
+            # candidate cache entries (they are only persisted below, after
+            # the audit), so the cache can never serve unaudited artifacts
+            failed = [k for k, v in result["checks"].items() if not v]
+            if failed:
+                self.catalog.delete_branch(ephemeral)
+                rec = self._record(
+                    run_id, pipeline, branch, base.commit_id, params,
+                    result, merged=None, t_start=t_start,
+                )
+                raise ExpectationFailed(failed)
+
+            # 5. write: atomic merge + ephemeral cleanup
+            merged = self.catalog.merge(
+                ephemeral, branch,
+                message=f"run {run_id}: {pipeline.name}",
+                author=author, delete_source=True,
+            )
+            # 6. publish this run's stage outputs to the differential cache
+            if cache:
+                for entry in result["cache"]["entries"].values():
+                    self.cache_registry.put(entry)
             rec = self._record(
                 run_id, pipeline, branch, base.commit_id, params,
-                result, merged=None, t_start=t_start,
+                result, merged=merged.commit_id, t_start=t_start,
             )
-            raise ExpectationFailed(failed)
-
-        # 5. write: atomic merge + ephemeral cleanup
-        merged = self.catalog.merge(
-            ephemeral, branch,
-            message=f"run {run_id}: {pipeline.name}",
-            author=author, delete_source=True,
-        )
-        # 6. publish this run's stage outputs to the differential cache
-        if cache:
-            for entry in result["cache"]["entries"].values():
-                self.cache_registry.put(entry)
-        rec = self._record(
-            run_id, pipeline, branch, base.commit_id, params,
-            result, merged=merged.commit_id, t_start=t_start,
-        )
+        finally:
+            self.registry.unpin_run(run_id)
         return RunResult(
             run_id=run_id,
             branch=branch,
@@ -254,6 +260,7 @@ class Runner:
         replay_id = self.registry.next_run_id()
         ephemeral = f"run_{replay_id}"
         self.catalog.create_branch(ephemeral, at_commit=rec.base_commit)
+        self.registry.pin_run(replay_id, rec.base_commit)
         try:
             # replay must genuinely re-execute — the differential cache is
             # bypassed so the reproducibility claim is tested, not assumed
@@ -264,6 +271,7 @@ class Runner:
             )
         finally:
             self.catalog.delete_branch(ephemeral)
+            self.registry.unpin_run(replay_id)
         return RunResult(
             run_id=replay_id,
             branch=rec.branch,
@@ -346,6 +354,8 @@ class Runner:
                 cache_hits += 1
                 bytes_saved += entry.output_bytes
                 self.fmt.store.record_cache_hit(entry.output_bytes)
+                # bump the entry's LRU clock so eviction favours cold ones
+                self.cache_registry.touch(entry.fingerprint, entry=entry)
                 log.info(
                     "stage %d restored from cache (%s)",
                     stage.stage_id, stage.transitive_fingerprint[:12],
@@ -409,12 +419,13 @@ class Runner:
                     created_at=time.time(),
                 )
         bytes_after = self.fmt.store.stats.snapshot()
-        # cache_* counters are run-level telemetry (reported under "cache"),
-        # not bytes moved — keep the io dict strictly I/O
+        # cache_* counters are run-level telemetry (reported under "cache")
+        # and gc_*/compact_* belong to the lakekeeper, not bytes moved by
+        # this run — keep the io dict strictly I/O
         io_delta = {
             k: bytes_after[k] - bytes_before[k]
             for k in bytes_after
-            if not k.startswith("cache_")
+            if not k.startswith(("cache_", "gc_", "compact_"))
         }
         return {
             "plan": plan,

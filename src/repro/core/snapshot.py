@@ -17,7 +17,7 @@ failed expectation can never leave poisoned cache entries behind.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional
 
 from repro.io.objectstore import ObjectStore
@@ -25,6 +25,9 @@ from repro.io.objectstore import ObjectStore
 _RUN_NS = "runs"
 _COUNTER = "run_counter"
 _CACHE_NS = "stagecache"
+#: in-flight run pins — GC roots protecting a running run's base commit
+#: (see repro.maintenance.reachability)
+_PIN_NS = "pins"
 
 
 @dataclass(frozen=True)
@@ -98,27 +101,67 @@ class RunRegistry:
                 out.append(RunRecord.from_json_dict(raw))
         return sorted(out, key=lambda r: r.run_id)
 
+    # -------------------------------------------------------------- pinning
+    # An executing run holds a pin on its base commit so a concurrent
+    # ``repro gc`` cannot expire the data version it is reading.  Pins are
+    # dropped in the runner's ``finally``; a pin leaked by a crashed
+    # process ages out via the GC's ``pin_ttl_s``.
+
+    def pin_run(self, run_id: int, base_commit: str) -> None:
+        self.store.set_ref(
+            _PIN_NS, f"run_{run_id}",
+            {"base_commit": base_commit, "created_at": time.time()},
+        )
+
+    def unpin_run(self, run_id: int) -> None:
+        self.store.delete_ref(_PIN_NS, f"run_{run_id}")
+
+    def pinned_commits(self, *, max_age_s: Optional[float] = None) -> Dict[int, str]:
+        """Live pins: run_id -> base commit.  Pins older than
+        ``max_age_s`` are treated as leaked and ignored."""
+        now = time.time()
+        out: Dict[int, str] = {}
+        for name, raw in self.store.list_refs(_PIN_NS).items():
+            if not name.startswith("run_"):
+                continue
+            if max_age_s is not None and now - raw.get("created_at", 0.0) > max_age_s:
+                continue
+            out[int(name[len("run_"):])] = raw["base_commit"]
+        return out
+
 
 @dataclass(frozen=True)
 class StageCacheEntry:
     """Everything needed to substitute a cached stage for execution.
 
-    ``outputs`` maps artifact name -> snapshot manifest key (the blobs are
-    content-addressed and immortal in the object store, so the keys stay
-    dereferenceable forever).  ``checks`` records the stage's expectation
-    verdicts at creation time; since entries are only persisted after a
-    fully-audited run, every recorded verdict is True — downstream audit
-    can therefore be skipped for cache-restored stages.
+    ``outputs`` maps artifact name -> snapshot manifest key; the blobs
+    are content-addressed, so the keys stay dereferenceable until the
+    lakekeeper (repro.maintenance) evicts the entry and a GC sweep
+    reclaims any blobs no longer reachable from another root.
+    ``checks`` records the stage's expectation verdicts at creation
+    time; since entries are only persisted after a fully-audited run,
+    every recorded verdict is True — downstream audit can therefore be
+    skipped for cache-restored stages.  ``output_bytes`` (size) and
+    ``last_used_at`` (recency) are the metadata the eviction policy
+    (LRU within a byte budget, optional TTL) ranks entries by.
     """
 
     fingerprint: str
     outputs: Dict[str, str]
     checks: Dict[str, bool]
     #: decompressed bytes the cached outputs represent (what a recompute
-    #: would have re-written) — feeds StoreStats.cache_bytes_saved
+    #: would have re-written) — feeds StoreStats.cache_bytes_saved and
+    #: counts against the eviction policy's byte budget
     output_bytes: int
     run_id: int
     created_at: float
+    #: bumped on every cache hit (LRU clock); equals created_at until the
+    #: entry is first restored
+    last_used_at: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.last_used_at == 0.0:
+            object.__setattr__(self, "last_used_at", self.created_at)
 
     def to_json_dict(self) -> Dict:
         return {
@@ -128,6 +171,7 @@ class StageCacheEntry:
             "output_bytes": self.output_bytes,
             "run_id": self.run_id,
             "created_at": self.created_at,
+            "last_used_at": self.last_used_at,
         }
 
     @staticmethod
@@ -153,14 +197,33 @@ class StageCacheRegistry:
     def put(self, entry: StageCacheEntry) -> None:
         self.store.set_ref(_CACHE_NS, entry.fingerprint, entry.to_json_dict())
 
-    def invalidate(self, fingerprint: str) -> None:
-        self.store.delete_ref(_CACHE_NS, fingerprint)
+    def invalidate(self, fingerprint: str) -> bool:
+        """Drop an entry; idempotent, returns whether it existed."""
+        return self.store.delete_ref(_CACHE_NS, fingerprint)
+
+    def touch(
+        self,
+        fingerprint: str,
+        *,
+        entry: Optional[StageCacheEntry] = None,
+        now: Optional[float] = None,
+    ) -> None:
+        """Bump an entry's LRU clock (called by the runner on a hit).
+        Pass ``entry`` when already in hand to skip the re-fetch."""
+        entry = entry if entry is not None else self.get(fingerprint)
+        if entry is None:
+            return
+        self.put(replace(entry, last_used_at=now if now is not None else time.time()))
 
     def entries(self) -> Dict[str, StageCacheEntry]:
         return {
             fp: StageCacheEntry.from_json_dict(raw)
             for fp, raw in self.store.list_refs(_CACHE_NS).items()
         }
+
+    def total_bytes(self) -> int:
+        """Sum of output_bytes across live entries (the budgeted figure)."""
+        return sum(e.output_bytes for e in self.entries().values())
 
     def clear(self) -> None:
         for fp in list(self.entries()):

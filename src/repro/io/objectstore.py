@@ -18,9 +18,10 @@ import json
 import os
 import tempfile
 import threading
+import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterable, Iterator, Optional, Set
 
 from repro.utils.hashing import content_hash
 
@@ -38,6 +39,13 @@ class StoreStats:
     #: recomputed, and the output bytes that were NOT re-written as a result
     cache_hits: int = 0
     cache_bytes_saved: int = 0
+    #: lakekeeper maintenance ledger (see repro.maintenance): the gc_*,
+    #: cache_entries_* and compact_* counters are maintenance telemetry,
+    #: not run I/O — the runner's per-run io delta excludes those prefixes
+    gc_objects_swept: int = 0
+    gc_bytes_reclaimed: int = 0
+    cache_entries_evicted: int = 0
+    compact_shards_merged: int = 0
 
     def snapshot(self) -> Dict[str, int]:
         return {
@@ -48,7 +56,23 @@ class StoreStats:
             "ref_updates": self.ref_updates,
             "cache_hits": self.cache_hits,
             "cache_bytes_saved": self.cache_bytes_saved,
+            "gc_objects_swept": self.gc_objects_swept,
+            "gc_bytes_reclaimed": self.gc_bytes_reclaimed,
+            "cache_entries_evicted": self.cache_entries_evicted,
+            "compact_shards_merged": self.compact_shards_merged,
         }
+
+
+@dataclass(frozen=True)
+class SweepResult:
+    """Outcome of one mark-and-sweep pass over the blob space."""
+
+    swept: int
+    bytes_reclaimed: int
+    #: unreachable objects spared because they are younger than the grace
+    #: period (an in-flight run may have written them before committing)
+    kept_young: int
+    dry_run: bool
 
 
 @dataclass
@@ -84,8 +108,16 @@ class ObjectStore:
         with self._lock:
             self.stats.puts += 1
             self.stats.bytes_written += len(data)
-        if path.exists():  # content-addressed: already present, done.
-            return key
+        if path.exists():  # content-addressed: already present...
+            # ...but refresh its mtime: the GC grace period keys off object
+            # age, and a writer deduping onto an old *unreachable* blob
+            # must re-arm the grace window or a concurrent sweep could
+            # delete the blob before this writer commits a reference to it
+            try:
+                os.utime(path, None)
+                return key
+            except FileNotFoundError:
+                pass  # a concurrent sweep won the race — rewrite below
         path.parent.mkdir(parents=True, exist_ok=True)
         # Write-then-rename for atomicity (a crashed writer never leaves a
         # half-object visible — required for checkpoint fault tolerance).
@@ -120,12 +152,97 @@ class ObjectStore:
             self.stats.cache_hits += 1
             self.stats.cache_bytes_saved += bytes_saved
 
+    def bump_stat(self, counter: str, n: int = 1) -> None:
+        """Thread-safe increment of a StoreStats counter by name (the
+        maintenance services report through this)."""
+        with self._lock:
+            setattr(self.stats, counter, getattr(self.stats, counter) + n)
+
     def keys(self) -> Iterator[str]:
         objects = self.root / "objects"
         for shard in sorted(objects.iterdir()):
             if shard.is_dir():
                 for obj in sorted(shard.iterdir()):
-                    yield shard.name + obj.name
+                    if not obj.name.startswith(".tmp-"):
+                        yield shard.name + obj.name
+
+    def object_size(self, key: str) -> Optional[int]:
+        """Size in bytes of a stored blob, or None if absent."""
+        try:
+            return self._object_path(key).stat().st_size
+        except FileNotFoundError:
+            return None
+
+    def object_age_s(self, key: str, *, now: Optional[float] = None) -> Optional[float]:
+        """Seconds since the blob was (last) written, or None if absent."""
+        try:
+            mtime = self._object_path(key).stat().st_mtime
+        except FileNotFoundError:
+            return None
+        return max(0.0, (now if now is not None else time.time()) - mtime)
+
+    def delete(self, key: str) -> int:
+        """Delete a blob; return bytes freed (0 if already absent).
+
+        Idempotent — deletion is a maintenance operation (GC sweep) that
+        must be safely retryable after a crashed or concurrent sweeper.
+        """
+        path = self._object_path(key)
+        try:
+            size = path.stat().st_size
+            path.unlink()
+        except FileNotFoundError:
+            return 0
+        return size
+
+    def sweep(
+        self,
+        live: Set[str],
+        *,
+        grace_s: float = 0.0,
+        dry_run: bool = False,
+        now: Optional[float] = None,
+    ) -> SweepResult:
+        """Delete every blob not in ``live`` (the sweep half of mark-and-sweep).
+
+        ``grace_s`` spares unreachable objects younger than the grace
+        period: an in-flight run writes stage outputs *before* committing
+        them to its ephemeral branch, so a concurrent sweeper would see
+        them as garbage for a moment.  ``dry_run`` reports what would be
+        reclaimed without deleting anything.
+        """
+        now = now if now is not None else time.time()
+        swept = 0
+        bytes_reclaimed = 0
+        kept_young = 0
+        for key in list(self.keys()):
+            if key in live:
+                continue
+            age = self.object_age_s(key, now=now)
+            if age is None:
+                continue  # raced with another sweeper
+            if age < grace_s:
+                kept_young += 1
+                continue
+            size = self.object_size(key) or 0
+            if not dry_run:
+                # re-check age at delete time: a writer deduping onto this
+                # blob re-arms the grace window via put()'s utime, and the
+                # first stat above may predate it (check-then-delete race)
+                age = self.object_age_s(key, now=time.time())
+                if age is None:
+                    continue
+                if age < grace_s:
+                    kept_young += 1
+                    continue
+                size = self.delete(key)
+            swept += 1
+            bytes_reclaimed += size
+        if not dry_run:
+            with self._lock:
+                self.stats.gc_objects_swept += swept
+                self.stats.gc_bytes_reclaimed += bytes_reclaimed
+        return SweepResult(swept, bytes_reclaimed, kept_young, dry_run)
 
     # ------------------------------------------------------------------- refs
     def _ref_path(self, namespace: str, name: str) -> Path:
@@ -152,10 +269,18 @@ class ObjectStore:
             return None
         return json.loads(path.read_text())
 
-    def delete_ref(self, namespace: str, name: str) -> None:
+    def delete_ref(self, namespace: str, name: str) -> bool:
+        """Delete a ref; return whether it existed.
+
+        Idempotent (no-op on a missing ref, even under a concurrent
+        deleter) so eviction and GC sweeps can retry safely.
+        """
         path = self._ref_path(namespace, name)
-        if path.exists():
+        try:
             path.unlink()
+        except FileNotFoundError:
+            return False
+        return True
 
     def list_refs(self, namespace: str) -> Dict[str, Dict]:
         ns = self.root / "refs" / namespace

@@ -1,0 +1,109 @@
+"""Mark-and-sweep garbage collection (``repro gc``).
+
+Mark (repro.maintenance.reachability) walks branch heads, tags, pinned
+in-flight runs and live stage-cache entries down to shard blobs; sweep
+deletes everything else — first the unreachable/expired *commit refs*,
+then the unreachable *objects* (manifests + column blobs).
+
+Safety levers, in the order a production deployment reaches for them:
+
+* ``dry_run``   — report what would be reclaimed, delete nothing;
+* ``grace_s``   — never sweep an object younger than this, so an
+  in-flight run's just-written, not-yet-committed stage outputs survive
+  a concurrent sweep (defence in depth on top of run pins);
+* ``history``   — Iceberg-style snapshot expiry: keep only the last N
+  commits per branch (None keeps all history, so a default ``repro gc``
+  only reclaims failed/abandoned runs and evicted cache blobs);
+* ``pin_ttl_s`` — how long a leaked pin (crashed process) keeps
+  protecting its base commit.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.catalog.nessie import Catalog
+from repro.io.objectstore import ObjectStore
+from repro.maintenance.reachability import LiveSet, mark
+from repro.table.format import TableFormat
+from repro.utils.logging import get_logger
+
+log = get_logger("maintenance.gc")
+
+
+@dataclass(frozen=True)
+class GCReport:
+    """What one ``repro gc`` pass saw and did."""
+
+    roots: Dict[str, int]
+    live_commits: int
+    live_objects: int
+    swept_commits: int
+    swept_objects: int
+    bytes_reclaimed: int
+    #: unreachable but younger than the grace period — left for next time
+    kept_young: int
+    dry_run: bool
+
+    def describe(self) -> str:
+        verb = "would reclaim" if self.dry_run else "reclaimed"
+        return (
+            f"gc: {verb} {self.swept_objects} objects "
+            f"({self.bytes_reclaimed} bytes) + {self.swept_commits} commit refs; "
+            f"live: {self.live_commits} commits / {self.live_objects} objects; "
+            f"spared {self.kept_young} in-grace objects; roots: {self.roots}"
+        )
+
+
+def collect_garbage(
+    store: ObjectStore,
+    catalog: Catalog,
+    fmt: TableFormat,
+    *,
+    history: Optional[int] = None,
+    grace_s: float = 0.0,
+    pin_ttl_s: Optional[float] = None,
+    dry_run: bool = False,
+) -> GCReport:
+    """One full mark-and-sweep pass.  Idempotent and crash-safe: every
+    delete is a no-op when re-applied, and a half-finished sweep only
+    leaves garbage for the next pass, never dangling live data."""
+    live: LiveSet = mark(
+        store, catalog, fmt, history=history, pin_ttl_s=pin_ttl_s
+    )
+
+    # sweep expired/unreachable commit refs first so a crash between the
+    # two phases can't leave a commit whose objects are already gone.
+    # The grace period applies here too: a concurrent run writes its
+    # commit ref *before* CAS-ing the branch head, so a just-created
+    # commit can look unreachable for a moment — deleting it would leave
+    # the branch head dangling once the CAS lands.
+    now = time.time()
+    swept_commits = 0
+    for commit_id in catalog.all_commit_ids():
+        if commit_id in live.commits:
+            continue
+        commit = catalog.get_commit_opt(commit_id)
+        if commit is not None and now - commit.created_at < grace_s:
+            continue
+        swept_commits += 1
+        if not dry_run:
+            catalog.delete_commit(commit_id)
+
+    result = store.sweep(
+        live.objects, grace_s=grace_s, dry_run=dry_run
+    )
+
+    report = GCReport(
+        roots=live.roots,
+        live_commits=len(live.commits),
+        live_objects=len(live.objects),
+        swept_commits=swept_commits,
+        swept_objects=result.swept,
+        bytes_reclaimed=result.bytes_reclaimed,
+        kept_young=result.kept_young,
+        dry_run=dry_run,
+    )
+    log.info("%s", report.describe())
+    return report

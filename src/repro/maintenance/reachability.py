@@ -1,0 +1,89 @@
+"""The shared mark phase: what is *live* in a lake.
+
+One reachability walk serves all three lakekeeper services (GC sweeps
+against it, eviction releases roots from it, compaction relies on it to
+expire superseded snapshots):
+
+    roots                         edges
+    -----                         -----
+    branch heads  ─┐
+    tags           ├─> commits ──> table manifests ──> shard column blobs
+    pinned runs   ─┘
+    stage-cache entries ─────────> table manifests ──> shard column blobs
+
+Commits, branch heads, tags, pins and cache entries are *refs* (small
+mutable pointers); manifests and column blobs are content-addressed
+*objects*.  The mark returns both vocabularies: live commit ids (so the
+GC can drop expired commit refs) and live object keys (so the sweep can
+drop unreachable blobs).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Set
+
+from repro.catalog.nessie import Catalog
+from repro.core.snapshot import RunRegistry, StageCacheRegistry
+from repro.io.objectstore import ObjectStore
+from repro.table.format import TableFormat
+
+
+@dataclass(frozen=True)
+class LiveSet:
+    """The mark result: everything a sweep must keep."""
+
+    #: live commit ids (reachable from branch heads/tags/pins within the
+    #: history bound)
+    commits: Set[str]
+    #: live object keys (manifests + shard column blobs)
+    objects: Set[str]
+    #: telemetry: how many roots of each kind seeded the walk
+    roots: Dict[str, int] = field(default_factory=dict)
+
+
+def mark(
+    store: ObjectStore,
+    catalog: Catalog,
+    fmt: TableFormat,
+    *,
+    history: Optional[int] = None,
+    pin_ttl_s: Optional[float] = None,
+) -> LiveSet:
+    """Walk every root to a closed live set.
+
+    ``history`` bounds how many commits deep each branch is retained
+    (None = keep everything, ``1`` = heads only — Iceberg-style snapshot
+    expiry).  Tagged commits are always roots regardless of depth, so a
+    tag protects its data forever.  ``pin_ttl_s`` ages out pins leaked by
+    crashed runs (None = honour all pins).
+    """
+    registry = RunRegistry(store)
+    cache = StageCacheRegistry(store)
+
+    pins = registry.pinned_commits(max_age_s=pin_ttl_s)
+    commits = catalog.reachable_commits(
+        extra_roots=list(pins.values()), history=history
+    )
+
+    manifests: Set[str] = set()
+    for commit in commits.values():
+        manifests.update(commit.tables.values())
+
+    cache_entries = cache.entries()
+    for entry in cache_entries.values():
+        manifests.update(entry.outputs.values())
+
+    objects: Set[str] = set()
+    for key in manifests:
+        objects |= fmt.snapshot_object_keys(key)
+
+    return LiveSet(
+        commits=set(commits),
+        objects=objects,
+        roots={
+            "branches": len(catalog.branches()),
+            "tags": len(catalog.tags()),
+            "pinned_runs": len(pins),
+            "cache_entries": len(cache_entries),
+        },
+    )

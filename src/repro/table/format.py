@@ -115,32 +115,99 @@ class TableFormat:
             stop = min(start + self.shard_rows, nrows)
             if stop <= start:
                 break
-            blobs: Dict[str, str] = {}
-            stats: Dict[str, Dict[str, float]] = {}
-            for col in schema.columns:
-                chunk = np.ascontiguousarray(data[col.name][start:stop])
-                blobs[col.name] = self.store.put(array_to_bytes(chunk))
-                if chunk.size and chunk.dtype.kind in "iuf":
-                    stats[col.name] = {
-                        "min": float(np.min(chunk)),
-                        "max": float(np.max(chunk)),
-                    }
-                else:
-                    stats[col.name] = {"min": float("-inf"), "max": float("inf")}
-            shards.append(ShardMeta(stop - start, blobs, stats))
+            shards.append(self._write_shard(
+                schema, {c.name: data[c.name][start:stop] for c in schema.columns}
+            ))
+        return self._seal_snapshot(
+            table, schema, shards, parent.snapshot_id if parent else None
+        )
+
+    def _write_shard(self, schema: Schema, data: TableData) -> ShardMeta:
+        """Write one shard's column blobs, capturing min/max stats."""
+        blobs: Dict[str, str] = {}
+        stats: Dict[str, Dict[str, float]] = {}
+        nrows = 0
+        for col in schema.columns:
+            chunk = np.ascontiguousarray(data[col.name])
+            nrows = len(chunk)
+            blobs[col.name] = self.store.put(array_to_bytes(chunk))
+            if chunk.size and chunk.dtype.kind in "iuf":
+                stats[col.name] = {
+                    "min": float(np.min(chunk)),
+                    "max": float(np.max(chunk)),
+                }
+            else:
+                stats[col.name] = {"min": float("-inf"), "max": float("inf")}
+        return ShardMeta(nrows, blobs, stats)
+
+    def _seal_snapshot(
+        self,
+        table: str,
+        schema: Schema,
+        shards: Sequence[ShardMeta],
+        parent_id: Optional[str],
+    ) -> Snapshot:
         snapshot_id = stable_hash(
             {
                 "table": table,
                 "schema": schema.to_json_dict(),
                 "shards": [s.to_json_dict() for s in shards],
-                "parent": parent.snapshot_id if parent else None,
+                "parent": parent_id,
             }
         )
-        snap = Snapshot(table, snapshot_id, schema, tuple(shards),
-                        parent.snapshot_id if parent else None)
+        snap = Snapshot(table, snapshot_id, schema, tuple(shards), parent_id)
         # persist the snapshot manifest itself so catalogs only hold keys
         self.store.put(dumps_json(snap.to_json_dict()))
         return snap
+
+    # ----------------------------------------------------------- compaction
+    def compact_snapshot(
+        self,
+        snapshot: Snapshot,
+        *,
+        target_rows: Optional[int] = None,
+        min_fill: float = 0.5,
+    ) -> tuple:
+        """Rewrite runs of small shards into fewer near-``target_rows`` ones.
+
+        The mechanics half of ``repro compact`` (policy + catalog commit
+        live in repro.maintenance.compaction).  Only *adjacent* shards
+        merge and the merged chunk preserves row order, so a full scan of
+        the new snapshot is bit-identical to the old one.  Shards already
+        at least ``min_fill * target_rows`` full pass through untouched —
+        structural sharing keeps compaction incremental.  Per-column
+        min/max stats are recomputed from the merged data, so
+        ``Predicate.may_match`` pruning stays exact.
+
+        Returns ``(new_snapshot, shards_merged)``; ``shards_merged == 0``
+        means nothing to do and ``new_snapshot is snapshot``.
+        """
+        groups = plan_compaction_groups(
+            snapshot.shards,
+            target_rows=target_rows or self.shard_rows,
+            min_fill=min_fill,
+        )
+        out: List[ShardMeta] = []
+        merged = 0
+        for group in groups:
+            if len(group) == 1:
+                out.append(group[0])
+                continue
+            parts = [self.read_shard(s) for s in group]
+            data = {
+                c: np.concatenate([p[c] for p in parts])
+                for c in snapshot.schema.names
+            }
+            out.append(self._write_shard(snapshot.schema, data))
+            merged += len(group)
+        if merged == 0:
+            return snapshot, 0
+        return (
+            self._seal_snapshot(
+                snapshot.table, snapshot.schema, out, snapshot.snapshot_id
+            ),
+            merged,
+        )
 
     # ------------------------------------------------------------------ read
     def read_shard(
@@ -164,6 +231,55 @@ class TableFormat:
     def load_snapshot(self, manifest_key: str) -> Snapshot:
         return Snapshot.from_json_dict(loads_json(self.store.get(manifest_key)))
 
+    def snapshot_object_keys(self, manifest_key: str) -> set:
+        """The manifest blob itself plus every column blob it references —
+        one table version's contribution to the GC live set.  A missing
+        manifest yields the empty set (tolerates a crashed prior sweep)."""
+        if not self.store.exists(manifest_key):
+            return set()
+        snap = self.load_snapshot(manifest_key)
+        keys = {manifest_key}
+        for shard in snap.shards:
+            keys.update(shard.column_blobs.values())
+        return keys
+
     def manifest_key(self, snapshot: Snapshot) -> str:
         """Content address of a snapshot manifest (what catalogs store)."""
         return self.store.put(dumps_json(snapshot.to_json_dict()))
+
+
+def plan_compaction_groups(
+    shards: Sequence[ShardMeta],
+    *,
+    target_rows: int,
+    min_fill: float = 0.5,
+) -> List[List[ShardMeta]]:
+    """Greedy, order-preserving grouping: consecutive *small* shards
+    (< ``min_fill * target_rows`` rows) pack together until adding the
+    next would exceed ``target_rows``.  Each returned group becomes one
+    output shard; singleton groups pass through without a rewrite.  Pure
+    metadata — used both by the writer and by ``repro compact --dry-run``.
+    """
+    small_cutoff = max(1, int(min_fill * target_rows))
+    groups: List[List[ShardMeta]] = []
+    buffer: List[ShardMeta] = []
+    buffered_rows = 0
+
+    def flush() -> None:
+        nonlocal buffered_rows
+        if buffer:
+            groups.append(list(buffer))
+            buffer.clear()
+        buffered_rows = 0
+
+    for shard in shards:
+        if shard.num_rows < small_cutoff:
+            if buffer and buffered_rows + shard.num_rows > target_rows:
+                flush()
+            buffer.append(shard)
+            buffered_rows += shard.num_rows
+        else:
+            flush()
+            groups.append([shard])
+    flush()
+    return groups

@@ -109,6 +109,24 @@ def plan_scan(
     )
 
 
+def pruning_effectiveness(
+    snapshot: Snapshot, predicates: Sequence[Predicate]
+) -> float:
+    """Fraction of *rows* a metadata-only plan proves away for these
+    predicates (0.0 = stats prune nothing, 1.0 = everything).
+
+    Compaction (repro.maintenance.compaction) reports this before/after
+    for its ``guard_predicates`` and warns when merging shards coarsened
+    pruning on the table's hot predicates — fewer, bigger shards
+    inherently trade per-shard pruning granularity for scan overhead.
+    """
+    total = snapshot.num_rows
+    if total == 0:
+        return 0.0
+    plan = plan_scan(snapshot, predicates=predicates)
+    return 1.0 - plan.rows_to_read / total
+
+
 def execute_scan(fmt: TableFormat, plan: ScanPlan) -> TableData:
     """Read surviving shards, apply the residual row-level predicate."""
     if not plan.shards:

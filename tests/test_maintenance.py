@@ -1,0 +1,546 @@
+"""Lakekeeper: mark-and-sweep GC, cache eviction, shard compaction.
+
+The invariants pinned here are the maintenance analog of the paper's
+correctness story: reclamation must be invisible to every reader that
+matters — branch heads, tags, time travel within retained history,
+replay of surviving runs, and warm cache re-runs.
+"""
+import numpy as np
+import pytest
+
+from repro.catalog import Catalog
+from repro.cli import main as cli_main
+from repro.core import Pipeline, Runner, StageCacheRegistry, requirements
+from repro.core.snapshot import RunRegistry, StageCacheEntry
+from repro.io import ObjectStore
+from repro.maintenance import (
+    EvictionPolicy,
+    collect_garbage,
+    compact_table,
+    mark,
+    prune_cache,
+)
+from repro.runtime import ExecutorConfig, ServerlessExecutor
+from repro.table import Predicate, TableFormat
+from repro.table.scan import plan_scan, pruning_effectiveness
+from tests.helpers_taxi import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
+
+
+@pytest.fixture
+def runner(catalog, fmt):
+    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
+        yield Runner(catalog, fmt, ex)
+
+
+@pytest.fixture
+def seeded(catalog, fmt, rng):
+    data = make_taxi_data(2000, rng)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, data)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)}, message="seed")
+    return data
+
+
+def build_dated_pipeline(since: str = "2019-04-01") -> Pipeline:
+    """Taxi pipeline whose trips filter date is the 'edit' knob — unlike a
+    threshold edit, a date edit changes the *data* each run writes, so
+    successive runs genuinely create garbage for GC to find."""
+    p = Pipeline("taxi_demo")
+    p.sql(
+        "trips",
+        f"""
+        SELECT pickup_location_id, passenger_count as count, dropoff_location_id
+        FROM taxi_table WHERE pickup_at >= '{since}'
+        """,
+    )
+
+    @p.python
+    @requirements({"pandas": "2.0.0"})
+    def trips_expectation(ctx, trips):
+        return trips.mean("count") > 10.0
+
+    p.sql(
+        "pickups",
+        """
+        SELECT pickup_location_id, dropoff_location_id, COUNT(*) AS counts
+        FROM trips GROUP BY pickup_location_id, dropoff_location_id
+        ORDER BY counts DESC
+        """,
+    )
+    return p
+
+
+def _store_bytes(store):
+    return sum(store.object_size(k) or 0 for k in store.keys())
+
+
+def _run(runner, pipeline, branch="main", **kw):
+    kw.setdefault("fusion", False)
+    kw.setdefault("pushdown", False)
+    kw.setdefault("cache", True)
+    return runner.run(pipeline, branch=branch, **kw)
+
+
+# ------------------------------------------------------------------- mark
+def test_mark_roots_cover_branches_tags_cache_pins(runner, catalog, fmt, seeded):
+    store = catalog.store
+    res = _run(runner, build_taxi_pipeline())
+    catalog.tag("v1", res.merged_commit)
+    RunRegistry(store).pin_run(999, res.merged_commit)
+    live = mark(store, catalog, fmt)
+    assert live.roots == {
+        "branches": 1, "tags": 1, "pinned_runs": 1,
+        "cache_entries": len(StageCacheRegistry(store).entries()),
+    }
+    # every blob the head references is in the live set
+    for key in catalog.tables().values():
+        assert fmt.snapshot_object_keys(key) <= live.objects
+
+
+def test_mark_history_bound_drops_old_commits(runner, catalog, fmt, seeded):
+    r1 = _run(runner, build_dated_pipeline("2019-04-01"))
+    r2 = _run(runner, build_dated_pipeline("2019-04-05"))
+    full = mark(catalog.store, catalog, fmt)
+    heads_only = mark(catalog.store, catalog, fmt, history=1)
+    assert heads_only.commits < full.commits
+    assert catalog.head("main").commit_id in heads_only.commits
+
+
+# --------------------------------------------------------------------- gc
+def test_gc_default_keeps_all_history(runner, catalog, fmt, seeded):
+    _run(runner, build_dated_pipeline("2019-04-01"))
+    _run(runner, build_dated_pipeline("2019-04-05"))
+    report = collect_garbage(catalog.store, catalog, fmt)
+    # full-history gc: every commit ever merged stays live, and every
+    # object is referenced by some retained commit or cache entry
+    assert report.swept_objects == 0
+    assert report.swept_commits == 0
+
+
+def test_gc_reclaims_failed_run_artifacts(runner, catalog, fmt, rng):
+    from repro.core import ExpectationFailed
+
+    # mean count ~2 < threshold 10 -> audit fails, ephemeral branch dropped
+    data = make_taxi_data(800, rng, mean_count=2.0)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, data)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    with pytest.raises(ExpectationFailed):
+        _run(runner, build_taxi_pipeline())
+    before = _store_bytes(catalog.store)
+    report = collect_garbage(catalog.store, catalog, fmt)
+    # the failed run's trips artifact (written before the audit) is
+    # unreachable from any root and gets swept; the seed table survives
+    assert report.swept_objects > 0
+    assert report.bytes_reclaimed > 0
+    assert _store_bytes(catalog.store) < before
+    out = fmt.read(fmt.load_snapshot(catalog.table_key("taxi_table")))
+    assert len(out["pickup_at"]) == 800
+
+
+def test_gc_dry_run_deletes_nothing(runner, catalog, fmt, rng):
+    from repro.core import ExpectationFailed
+
+    data = make_taxi_data(800, rng, mean_count=2.0)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, data)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    with pytest.raises(ExpectationFailed):
+        _run(runner, build_taxi_pipeline())
+    before = set(catalog.store.keys())
+    report = collect_garbage(catalog.store, catalog, fmt, dry_run=True)
+    assert report.dry_run and report.swept_objects > 0
+    assert set(catalog.store.keys()) == before
+    assert catalog.store.stats.gc_objects_swept == 0
+    # the real pass reclaims exactly what the dry run promised
+    real = collect_garbage(catalog.store, catalog, fmt)
+    assert real.swept_objects == report.swept_objects
+    assert real.bytes_reclaimed == report.bytes_reclaimed
+
+
+def test_gc_grace_period_spares_young_objects(store):
+    live_key = store.put(b"still referenced")
+    garbage = store.put(b"unreachable but fresh")
+    result = store.sweep({live_key}, grace_s=3600.0)
+    assert result.swept == 0 and result.kept_young == 1
+    assert store.exists(garbage)
+    result = store.sweep({live_key}, grace_s=0.0)
+    assert result.swept == 1 and store.exists(live_key)
+    assert not store.exists(garbage)
+
+
+def test_gc_respects_run_pins_until_ttl(runner, catalog, fmt, seeded):
+    store = catalog.store
+    pinned_commit = catalog.head("main").commit_id
+    _run(runner, build_dated_pipeline("2019-04-05"))  # head moves on
+    RunRegistry(store).pin_run(123, pinned_commit)
+    collect_garbage(store, catalog, fmt, history=1)
+    # the pinned base commit's table is still readable...
+    key = catalog.table_key("taxi_table", commit_id=pinned_commit)
+    assert len(fmt.read(fmt.load_snapshot(key))["pickup_at"]) == 2000
+    # ...until the pin ages out (ttl 0 = every pin is stale)
+    collect_garbage(store, catalog, fmt, history=1, pin_ttl_s=0.0)
+    assert catalog.get_commit_opt(pinned_commit) is None
+
+
+def test_runner_unpins_after_run_and_replay(runner, catalog, fmt, seeded):
+    res = _run(runner, build_taxi_pipeline())
+    runner.replay(build_taxi_pipeline(), res.run_id)
+    assert RunRegistry(catalog.store).pinned_commits() == {}
+
+
+# ------------------------------------------------- gc roots across catalog
+def test_tagged_commit_survives_history_expiry(runner, catalog, fmt, seeded):
+    r1 = _run(runner, build_dated_pipeline("2019-04-01"))
+    catalog.tag("release", r1.merged_commit)
+    _run(runner, build_dated_pipeline("2019-04-05"))
+    _run(runner, build_dated_pipeline("2019-04-09"))
+    collect_garbage(catalog.store, catalog, fmt, history=1)
+    # the tagged commit and every blob it references stay alive
+    tagged = catalog.get_commit(catalog.resolve_tag("release"))
+    for key in tagged.tables.values():
+        snap = fmt.load_snapshot(key)
+        assert fmt.read(snap)  # all shards readable
+    out = runner.query(
+        "SELECT pickup_location_id, counts FROM pickups",
+        commit_id=r1.merged_commit,
+    )
+    assert len(out["counts"]) > 0
+
+
+def test_merged_then_deleted_branch_keeps_blobs(runner, catalog, fmt, seeded):
+    res = _run(runner, build_taxi_pipeline(), branch="feat")
+    catalog.merge("feat", "main", delete_source=True)
+    assert not catalog.has_branch("feat")
+    report = collect_garbage(catalog.store, catalog, fmt)
+    # the run's artifacts reached main via the merge: nothing to sweep
+    out = runner.query("SELECT pickup_location_id, counts FROM pickups")
+    assert len(out["counts"]) > 0
+    for key in catalog.tables().values():
+        assert fmt.snapshot_object_keys(key)
+
+
+def test_replay_on_surviving_branch_works_after_gc(runner, catalog, fmt, seeded):
+    pipeline = build_taxi_pipeline()
+    first = _run(runner, pipeline)
+    collect_garbage(catalog.store, catalog, fmt)
+    again = runner.replay(pipeline, first.run_id)
+    assert again.artifacts == first.artifacts  # bit-identical re-execution
+
+
+def test_unmerged_deleted_branch_is_reclaimed(runner, catalog, fmt, seeded):
+    res = _run(runner, build_dated_pipeline("2019-03-01"), branch="scratch")
+    scratch_artifacts = dict(res.artifacts)
+    catalog.delete_branch("scratch")
+    prune_cache(StageCacheRegistry(catalog.store), EvictionPolicy(max_bytes=0))
+    report = collect_garbage(catalog.store, catalog, fmt)
+    assert report.swept_objects > 0
+    # the abandoned branch's artifacts are gone, main's table is intact
+    assert not catalog.store.exists(scratch_artifacts["trips"])
+    assert len(fmt.read(fmt.load_snapshot(catalog.table_key("taxi_table"))))
+
+
+# ------------------------------------------------------- acceptance: taxi
+def test_gc_acceptance_reclaims_half_while_readers_survive(
+    runner, catalog, fmt, seeded
+):
+    """ISSUE 2 acceptance: >=3 runs with edits, then gc reclaims >=50% of
+    store bytes while every branch head, tag and cached warm re-run stays
+    readable."""
+    store = catalog.store
+    dates = ["2019-02-01", "2019-02-05", "2019-02-09", "2019-02-13"]
+    for since in dates:
+        res = _run(runner, build_dated_pipeline(since))
+    catalog.tag("latest", res.merged_commit)
+    baseline = runner.query("SELECT pickup_location_id, counts FROM pickups")
+
+    before = _store_bytes(store)
+    # evict cache entries of the superseded pipeline versions (LRU keeps
+    # the most recent run's entries within budget)...
+    last_run_bytes = sum(
+        e.output_bytes
+        for e in StageCacheRegistry(store).entries().values()
+        if e.run_id == res.run_id
+    )
+    prune_cache(
+        StageCacheRegistry(store), EvictionPolicy(max_bytes=last_run_bytes)
+    )
+    # ...then expire history to the branch heads and sweep
+    report = collect_garbage(store, catalog, fmt, history=1, grace_s=0.0)
+    after = _store_bytes(store)
+
+    assert report.bytes_reclaimed > 0
+    reclaimed_frac = 1.0 - after / before
+    assert reclaimed_frac >= 0.5, f"only reclaimed {reclaimed_frac:.1%}"
+
+    # branch head still queryable, bit-identical
+    out = runner.query("SELECT pickup_location_id, counts FROM pickups")
+    assert np.array_equal(out["counts"], baseline["counts"])
+    # tag still resolvable and readable
+    tagged = catalog.get_commit(catalog.resolve_tag("latest"))
+    assert fmt.read(fmt.load_snapshot(tagged.tables["pickups"]))
+    # a warm re-run of the surviving pipeline version restores from cache
+    warm = _run(runner, build_dated_pipeline(dates[-1]))
+    assert warm.stats["cache"]["hits"] >= 2
+    assert warm.stats["cache"]["stages_executed"] <= 1
+
+
+# --------------------------------------------------------------- eviction
+def _entry(fp, *, bytes_=100, used=0.0, outputs=None):
+    return StageCacheEntry(
+        fingerprint=fp, outputs=outputs or {}, checks={},
+        output_bytes=bytes_, run_id=1, created_at=used, last_used_at=used,
+    )
+
+
+def test_eviction_ttl(store):
+    reg = StageCacheRegistry(store)
+    reg.put(_entry("old", used=100.0))
+    reg.put(_entry("fresh", used=900.0))
+    report = prune_cache(reg, EvictionPolicy(ttl_s=500.0), now=1000.0)
+    assert report.entries_evicted == 1
+    assert set(reg.entries()) == {"fresh"}
+
+
+def test_eviction_lru_under_byte_budget(store):
+    reg = StageCacheRegistry(store)
+    for i in range(5):
+        reg.put(_entry(f"e{i}", bytes_=100, used=float(i)))
+    report = prune_cache(reg, EvictionPolicy(max_bytes=250))
+    # oldest three evicted; most-recently-used two survive
+    assert report.entries_evicted == 3
+    assert set(reg.entries()) == {"e3", "e4"}
+    assert reg.total_bytes() == 200
+    assert store.stats.cache_entries_evicted == 3
+
+
+def test_eviction_dry_run(store):
+    reg = StageCacheRegistry(store)
+    reg.put(_entry("a", bytes_=100))
+    report = prune_cache(reg, EvictionPolicy(max_bytes=0), dry_run=True)
+    assert report.entries_evicted == 1 and report.dry_run
+    assert set(reg.entries()) == {"a"}
+    assert store.stats.cache_entries_evicted == 0
+
+
+def test_cache_hit_touches_lru_clock(runner, catalog, fmt, seeded):
+    reg = StageCacheRegistry(catalog.store)
+    _run(runner, build_taxi_pipeline())
+    before = reg.entries()
+    warm = _run(runner, build_taxi_pipeline())
+    assert warm.stats["cache"]["hits"] > 0
+    after = reg.entries()
+    assert any(after[fp].last_used_at > before[fp].last_used_at for fp in before)
+    # created_at is preserved — only the LRU clock moves
+    assert all(after[fp].created_at == before[fp].created_at for fp in before)
+
+
+def test_evicted_entries_release_blobs_to_sweeper(runner, catalog, fmt, seeded):
+    """Eviction -> GC is a two-step hand-off: prune drops the registry
+    roots, the next sweep reclaims any blobs nothing else references."""
+    store = catalog.store
+    res = _run(runner, build_dated_pipeline("2019-03-01"), branch="scratch")
+    catalog.delete_branch("scratch")  # artifacts now only rooted by cache
+    assert collect_garbage(store, catalog, fmt, dry_run=True).swept_objects == 0
+    prune_cache(StageCacheRegistry(store), EvictionPolicy(max_bytes=0))
+    report = collect_garbage(store, catalog, fmt)
+    assert report.swept_objects > 0
+    assert not store.exists(res.artifacts["trips"])
+
+
+# ------------------------------------------------------------- compaction
+@pytest.fixture
+def fragmented(catalog, fmt, rng):
+    """taxi_table built from many small appends -> many small shards."""
+    data = make_taxi_data(2000, rng)
+    snap = None
+    for start in range(0, 2000, 100):
+        chunk = {c: v[start:start + 100] for c, v in data.items()}
+        snap = fmt.write(
+            "taxi_table", TAXI_SCHEMA, chunk, parent=snap, append=snap is not None
+        )
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    return data
+
+
+def test_compaction_fewer_shards_identical_rows(catalog, fmt, fragmented):
+    before = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    assert len(before.shards) == 20
+    report = compact_table(catalog, fmt, "taxi_table", target_rows=1000)
+    assert report.shards_merged == 20
+    assert report.shards_after < report.shards_before
+    after = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    assert len(after.shards) == report.shards_after
+    # bit-identical full scan, row order preserved
+    a, b = fmt.read(before), fmt.read(after)
+    for col in TAXI_SCHEMA.names:
+        np.testing.assert_array_equal(a[col], b[col])
+    assert catalog.store.stats.compact_shards_merged == 20
+
+
+def test_compaction_preserves_stats_and_predicate_results(
+    catalog, fmt, fragmented
+):
+    pred = Predicate("pickup_at", ">=", float(fragmented["pickup_at"][1200]))
+    before = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    compact_table(catalog, fmt, "taxi_table", target_rows=500,
+                  guard_predicates=[pred])
+    after = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    # stats are exact on the merged shards: min/max equal the data
+    for shard in after.shards:
+        lo = shard.column_stats["pickup_at"]["min"]
+        hi = shard.column_stats["pickup_at"]["max"]
+        col = fmt.read_shard(shard, ["pickup_at"])["pickup_at"]
+        assert lo == float(col.min()) and hi == float(col.max())
+    # pushdown still prunes (data is sorted by pickup_at) and results match
+    from repro.table.scan import execute_scan
+
+    plan_b = plan_scan(before, predicates=[pred])
+    plan_a = plan_scan(after, predicates=[pred])
+    assert plan_a.pruned_shards > 0
+    assert pruning_effectiveness(after, [pred]) > 0.0
+    np.testing.assert_array_equal(
+        execute_scan(fmt, plan_b)["pickup_at"],
+        execute_scan(fmt, plan_a)["pickup_at"],
+    )
+
+
+def test_compaction_noop_on_compact_table(catalog, fmt, rng):
+    snap = fmt.write("t", TAXI_SCHEMA, make_taxi_data(1000, rng))
+    catalog.commit("main", {"t": fmt.manifest_key(snap)})
+    report = compact_table(catalog, fmt, "t", target_rows=100)
+    assert report.shards_merged == 0 and report.commit_id is None
+    # no new commit was created
+    assert catalog.table_key("t") == fmt.manifest_key(snap)
+
+
+def test_compaction_dry_run_plans_without_writing(catalog, fmt, fragmented):
+    head_before = catalog.head("main").commit_id
+    puts_before = catalog.store.stats.puts
+    report = compact_table(
+        catalog, fmt, "taxi_table", target_rows=1000, dry_run=True
+    )
+    assert report.dry_run and report.shards_merged == 20
+    assert catalog.head("main").commit_id == head_before
+    assert catalog.store.stats.puts == puts_before
+
+
+def test_old_snapshot_readable_until_expired(catalog, fmt, fragmented):
+    old_key = catalog.table_key("taxi_table")
+    compact_table(catalog, fmt, "taxi_table", target_rows=1000)
+    # time travel to the pre-compaction commit still works...
+    parent = catalog.head("main").parent_id
+    assert catalog.table_key("taxi_table", commit_id=parent) == old_key
+    assert fmt.read(fmt.load_snapshot(old_key))
+    # ...until snapshot expiry collects it
+    collect_garbage(catalog.store, catalog, fmt, history=1)
+    assert not catalog.store.exists(old_key)
+    new = fmt.read(fmt.load_snapshot(catalog.table_key("taxi_table")))
+    np.testing.assert_array_equal(new["pickup_at"], fragmented["pickup_at"])
+
+
+# -------------------------------------------------------------------- cli
+def test_cli_maintenance_verbs(tmp_path, rng, capsys):
+    root = tmp_path / "lake"
+    store = ObjectStore(root)
+    catalog = Catalog(store)
+    fmt = TableFormat(store, shard_rows=128)
+    data = make_taxi_data(1000, rng)
+    snap = None
+    for start in range(0, 1000, 100):
+        chunk = {c: v[start:start + 100] for c, v in data.items()}
+        snap = fmt.write(
+            "taxi_table", TAXI_SCHEMA, chunk, parent=snap, append=snap is not None
+        )
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    orphan = store.put(b"orphan blob")
+
+    cli_main(["--lake", str(root), "gc", "--dry-run", "--grace", "0"])
+    out = capsys.readouterr().out
+    assert "would reclaim" in out
+    assert store.exists(orphan)
+
+    cli_main(["--lake", str(root), "gc", "--grace", "0"])
+    out = capsys.readouterr().out
+    assert "reclaimed" in out
+    assert not store.exists(orphan)
+
+    cli_main(["--lake", str(root), "compact", "taxi_table", "--target-rows", "500"])
+    out = capsys.readouterr().out
+    assert "rewrote" in out and "shards merged" in out
+
+    cli_main(["--lake", str(root), "cache", "stats"])
+    out = capsys.readouterr().out
+    assert "0 entries" in out
+
+    cli_main(["--lake", str(root), "cache", "prune", "--max-bytes", "0"])
+    out = capsys.readouterr().out
+    assert "evicted 0/0" in out
+
+
+# ---------------------------------------------------- review regressions
+def test_gc_history_zero_refuses_to_brick_the_lake(runner, catalog, fmt, seeded):
+    """Regression: history=0 would mark nothing live; the sweep against
+    that empty live set would destroy every branch head's data."""
+    with pytest.raises(ValueError, match="history"):
+        collect_garbage(catalog.store, catalog, fmt, history=0)
+    with pytest.raises(ValueError, match="history"):
+        mark(catalog.store, catalog, fmt, history=-1)
+    # nothing was deleted by the refused calls
+    assert catalog.head("main")
+    assert fmt.read(fmt.load_snapshot(catalog.table_key("taxi_table")))
+
+
+def test_compaction_aborts_on_concurrent_table_change(catalog, fmt, fragmented, rng):
+    """Regression: compaction's commit is CAS'd against the exact table
+    version it read — a concurrent writer's rows must not be lost."""
+    from repro.catalog.nessie import MergeConflict
+
+    old_key = catalog.table_key("taxi_table")
+    # a concurrent run replaces the table between load and publish
+    newer = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(50, rng))
+    newer_key = fmt.manifest_key(newer)
+
+    original_load = fmt.load_snapshot
+
+    def racy_load(key):
+        snap = original_load(key)
+        if key == old_key:
+            catalog.commit("main", {"taxi_table": newer_key})
+        return snap
+
+    fmt.load_snapshot = racy_load
+    try:
+        with pytest.raises(MergeConflict):
+            compact_table(catalog, fmt, "taxi_table", target_rows=1000)
+    finally:
+        fmt.load_snapshot = original_load
+    # the concurrent writer's version survived
+    assert catalog.table_key("taxi_table") == newer_key
+
+
+def test_put_rearms_grace_on_dedup(store):
+    """Regression: re-putting existing content must refresh the blob's
+    mtime, or the gc grace period can't protect an in-flight writer that
+    deduped onto an old unreachable blob."""
+    import os
+
+    key = store.put(b"shared content")
+    path = store._object_path(key)
+    os.utime(path, (1.0, 1.0))  # pretend it was written long ago
+    assert store.object_age_s(key) > 3600
+    store.put(b"shared content")  # in-flight run dedups onto it
+    assert store.object_age_s(key) < 60
+    # young again -> a grace-period sweep spares it
+    result = store.sweep(set(), grace_s=3600.0)
+    assert result.swept == 0 and store.exists(key)
+
+
+def test_gc_grace_spares_young_commit_refs(runner, catalog, fmt, seeded):
+    """Regression: a concurrent run writes its commit ref before CAS-ing
+    the branch head, so unreachable-looking *young* commit refs must ride
+    out the grace period just like young blobs."""
+    res = _run(runner, build_dated_pipeline("2019-03-01"), branch="scratch")
+    catalog.delete_branch("scratch")  # commits now unreachable, but young
+    prune_cache(StageCacheRegistry(catalog.store), EvictionPolicy(max_bytes=0))
+    report = collect_garbage(catalog.store, catalog, fmt, grace_s=3600.0)
+    assert report.swept_commits == 0
+    report = collect_garbage(catalog.store, catalog, fmt, grace_s=0.0)
+    assert report.swept_commits > 0

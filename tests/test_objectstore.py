@@ -71,3 +71,55 @@ def test_property_tensor_serialization(shape, dtype):
     out = bytes_to_array(array_to_bytes(arr))
     assert out.dtype == arr.dtype and out.shape == arr.shape
     np.testing.assert_array_equal(out, arr)
+
+
+# ----------------------------------------------------- delete + sweep (GC)
+def test_delete_blob_idempotent(store):
+    key = store.put(b"ephemeral")
+    size = store.delete(key)
+    assert size == len(b"ephemeral")
+    assert not store.exists(key)
+    # second delete is a safe no-op (retryable sweeps)
+    assert store.delete(key) == 0
+
+
+def test_delete_ref_idempotent(store):
+    """Regression (ISSUE 2): delete_ref must no-op on a missing ref so
+    eviction/GC sweeps can retry safely after a crash."""
+    store.set_ref("ns", "victim", {"v": 1})
+    assert store.delete_ref("ns", "victim") is True
+    assert store.get_ref("ns", "victim") is None
+    assert store.delete_ref("ns", "victim") is False
+    # a ref that never existed is equally fine
+    assert store.delete_ref("ns", "never_there") is False
+    assert store.delete_ref("empty_namespace", "nope") is False
+
+
+def test_sweep_keeps_live_objects(store):
+    live = store.put(b"live data")
+    dead1 = store.put(b"dead one")
+    dead2 = store.put(b"dead two")
+    result = store.sweep({live}, grace_s=0.0)
+    assert result.swept == 2
+    assert result.bytes_reclaimed == len(b"dead one") + len(b"dead two")
+    assert store.exists(live)
+    assert not store.exists(dead1) and not store.exists(dead2)
+    assert store.stats.gc_objects_swept == 2
+    assert store.stats.gc_bytes_reclaimed == result.bytes_reclaimed
+
+
+def test_sweep_dry_run_reports_without_deleting(store):
+    store.put(b"live")
+    dead = store.put(b"doomed")
+    result = store.sweep(set(), grace_s=0.0, dry_run=True)
+    assert result.dry_run and result.swept == 2
+    assert store.exists(dead)
+    assert store.stats.gc_objects_swept == 0
+
+
+def test_object_size_and_age(store):
+    key = store.put(b"12345")
+    assert store.object_size(key) == 5
+    assert store.object_age_s(key) is not None
+    assert store.object_size("00" * 16) is None
+    assert store.object_age_s("00" * 16) is None
