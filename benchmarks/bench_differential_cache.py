@@ -1,28 +1,37 @@
 """Cross-run differential artifact cache (FaaS & Furious, arXiv 2411.08203).
 
-The claim under test: on a re-run of the taxi pipeline, stages whose
-transitive fingerprint is unchanged restore from the object store instead
-of recomputing, so
+The claim under test: the cache is keyed at **logical-node** granularity
+(node code + upstream node fingerprints + input content hashes + params),
+independent of the physical planner's fusion grouping, so
 
-* a fully-warm re-run executes 0 stages;
-* a re-run with ONE edited node executes only the dirty cone;
+* a fully-warm re-run executes 0 nodes;
+* a re-run with ONE edited node executes only that node's downstream cone;
+* **flipping the planner config on a warm lake — fusion toggled or
+  ``max_stage_nodes`` changed — still executes 0 nodes** (under the old
+  stage-keyed scheme this was a guaranteed full recompute);
 * warm wall-clock is >= 2x faster than cold.
 
-Cold/warm/edited runs use the isomorphic (fusion-off) plan so the cache
-unit is one node per stage — the differential granularity the follow-up
-paper argues for.
+Cold/warm/edited runs use the isomorphic (fusion-off) plan so every node
+is materialized and the dirty-cone accounting is visible node by node;
+the flip scenarios then re-plan the same warm lake fused.
+
+Also runnable standalone for the CI smoke-benchmark job::
+
+    python -m benchmarks.bench_differential_cache --n 20000 --json out.json
 """
 from __future__ import annotations
 
+import argparse
+import json
 import tempfile
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from benchmarks.common import row
 from repro.catalog import Catalog
-from repro.core import Pipeline, Runner, requirements
+from repro.core import Pipeline, PlannerConfig, Runner, requirements
 from repro.io import ObjectStore
 from repro.runtime import ExecutorConfig, ServerlessExecutor
 from repro.table import Schema, TableFormat
@@ -76,7 +85,7 @@ def _build_pipeline(order: str = "DESC") -> Pipeline:
     return p
 
 
-def run(n: int = 400_000) -> List[str]:
+def run(n: int = 400_000, json_path: Optional[str] = None) -> List[str]:
     store = ObjectStore(tempfile.mkdtemp())
     catalog = Catalog(store)
     fmt = TableFormat(store, shard_rows=65536)
@@ -84,37 +93,64 @@ def run(n: int = 400_000) -> List[str]:
     snap = fmt.write("taxi_table", TAXI_SCHEMA, _make_data(n, rng))
     catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
 
-    def timed_run(runner, pipeline, branch):
+    def timed_run(runner, pipeline, branch, **kw):
+        kw.setdefault("fusion", False)
+        kw.setdefault("pushdown", False)
         t0 = time.perf_counter()
-        res = runner.run(
-            pipeline, branch=branch, fusion=False, pushdown=False, cache=True
-        )
+        res = runner.run(pipeline, branch=branch, cache=True, **kw)
         return time.perf_counter() - t0, res
 
-    out: List[str] = []
     with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
         runner = Runner(catalog, fmt, ex)
         t_cold, cold = timed_run(runner, _build_pipeline(), "cold")
         t_warm, warm = timed_run(runner, _build_pipeline(), "warm")
         t_edit, edit = timed_run(runner, _build_pipeline(order="ASC"), "edited")
+        # the tentpole scenarios: flip the planner config on the warm lake
+        t_flip, flip = timed_run(
+            runner, _build_pipeline(), "flip_fused", fusion=True, pushdown=True
+        )
+        t_cap, cap = timed_run(
+            runner, _build_pipeline(), "flip_capped",
+            planner_config=PlannerConfig(fusion=True, max_stage_nodes=1),
+        )
 
-    c, w, e = (r.stats["cache"] for r in (cold, warm, edit))
+    stats = {
+        name: r.stats["cache"]
+        for name, r in (
+            ("cold", cold), ("warm", warm), ("edited", edit),
+            ("fusion_flip", flip), ("max_stage_nodes_flip", cap),
+        )
+    }
+    c, w, e = stats["cold"], stats["warm"], stats["edited"]
     speedup_warm = t_cold / max(t_warm, 1e-9)
     speedup_edit = t_cold / max(t_edit, 1e-9)
-    assert w["stages_executed"] < c["stages_executed"], "warm must skip stages"
-    assert e["stages_executed"] == 1, "one edited node -> one dirty stage"
+    assert w["nodes_executed"] == 0, "warm re-run must execute nothing"
+    assert e["nodes_executed"] == 1, "one edited node -> only its dirty cone"
+    # acceptance: a planner-config change on the warm lake is still warm
+    assert stats["fusion_flip"]["nodes_executed"] == 0, (
+        "fusion flip must execute 0 nodes"
+    )
+    assert stats["max_stage_nodes_flip"]["nodes_executed"] == 0, (
+        "max_stage_nodes flip must execute 0 nodes"
+    )
+
+    out: List[str] = []
+    walls = {
+        "cold": t_cold, "warm": t_warm, "edited": t_edit,
+        "fusion_flip": t_flip, "max_stage_nodes_flip": t_cap,
+    }
     out.append(
         row(
             f"diffcache_cold_n{n}",
             t_cold * 1e6,
-            f"stages_executed={c['stages_executed']};hits={c['hits']}",
+            f"nodes_executed={c['nodes_executed']};hits={c['hits']}",
         )
     )
     out.append(
         row(
             f"diffcache_warm_n{n}",
             t_warm * 1e6,
-            f"stages_executed={w['stages_executed']};hits={w['hits']};"
+            f"nodes_executed={w['nodes_executed']};hits={w['hits']};"
             f"speedup={speedup_warm:.2f}x;bytes_saved={w['bytes_saved']};"
             f"target>=2x",
         )
@@ -123,8 +159,55 @@ def run(n: int = 400_000) -> List[str]:
         row(
             f"diffcache_edited_node_n{n}",
             t_edit * 1e6,
-            f"stages_executed={e['stages_executed']};hits={e['hits']};"
+            f"nodes_executed={e['nodes_executed']};hits={e['hits']};"
             f"speedup={speedup_edit:.2f}x;dirty_cone_only=True",
         )
     )
+    for scenario in ("fusion_flip", "max_stage_nodes_flip"):
+        s = stats[scenario]
+        out.append(
+            row(
+                f"diffcache_{scenario}_n{n}",
+                walls[scenario] * 1e6,
+                f"nodes_executed={s['nodes_executed']};hits={s['hits']};"
+                f"rehydrated={s['rehydrated']};elided={s['elided']};"
+                f"speedup={t_cold / max(walls[scenario], 1e-9):.2f}x;"
+                f"warm_under_changed_config=True",
+            )
+        )
+
+    if json_path is not None:
+        results = {
+            "n": n,
+            "scenarios": {
+                name: {
+                    "wall_s": walls[name],
+                    "hits": s["hits"],
+                    "nodes_executed": s["nodes_executed"],
+                    "rehydrated": s["rehydrated"],
+                    "elided": s["elided"],
+                    "bytes_saved": s["bytes_saved"],
+                }
+                for name, s in stats.items()
+            },
+            "speedup_warm": speedup_warm,
+            "speedup_edited": speedup_edit,
+        }
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
     return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=400_000, help="taxi rows")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write scenario metrics as JSON (CI artifact)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for line in run(n=args.n, json_path=args.json):
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -36,11 +36,15 @@ def run(sizes=(10_000, 100_000, 500_000)) -> List[str]:
 
             def run_mode(fusion: bool):
                 branch_id[0] += 1
+                # cache=False: this benchmark measures genuine recompute
+                # cost; the (default-on) differential cache would turn
+                # every repeat into a restore and flatten the comparison
                 return runner.run(
                     build_taxi_pipeline(),
                     branch=f"b{branch_id[0]}_{fusion}",
                     fusion=fusion,
                     pushdown=fusion,
+                    cache=False,
                 )
 
             t_fused = bench(lambda: run_mode(True), warmup=1, iters=3)

@@ -40,9 +40,12 @@ def main() -> None:
         print(res.plan.describe())
         print(f"io: {res.stats['io']}")
 
-        # naive isomorphic plan (the paper's first version) for contrast
+        # naive isomorphic plan (the paper's first version) for contrast —
+        # cache=False so the comparison measures genuine recompute (the
+        # default-on node cache would plan around the fused run's outputs)
         res_naive = runner.run(
-            build_taxi_pipeline(), branch="feat_naive", fusion=False, pushdown=False
+            build_taxi_pipeline(), branch="feat_naive", fusion=False,
+            pushdown=False, cache=False,
         )
         print("== isomorphic plan ==")
         print(res_naive.plan.describe())

@@ -81,8 +81,11 @@ def main(argv=None) -> None:
         "--cache",
         action=argparse.BooleanOptionalAction,
         default=True,
-        help="restore unchanged stages from the differential cache "
-        "(--no-cache forces a full recompute and persists nothing)",
+        help="plan around the node-granular differential cache: unchanged "
+        "logical nodes restore from the object store or are elided "
+        "entirely, whatever the fusion config (this is the default — the "
+        "fast path is the default path; --no-cache forces a full "
+        "recompute and persists nothing)",
     )
 
     b = sub.add_parser("branch", help="list/create branches")
@@ -189,10 +192,10 @@ def main(argv=None) -> None:
         return
 
     if args.cmd == "cache":
-        from repro.core import StageCacheRegistry
+        from repro.core import NodeCacheRegistry
         from repro.maintenance import EvictionPolicy, prune_cache
 
-        registry = StageCacheRegistry(store)
+        registry = NodeCacheRegistry(store)
         if args.cache_cmd == "prune":
             report = prune_cache(
                 registry,
@@ -206,8 +209,10 @@ def main(argv=None) -> None:
             for fp, e in sorted(
                 entries.items(), key=lambda kv: kv[1].last_used_at
             ):
+                label = e.node or ",".join(sorted({*e.outputs, *e.checks}))
                 print(
-                    f"{fp[:16]}  run={e.run_id:<4} bytes={e.output_bytes:<10} "
+                    f"{fp[:16]}  {e.kind:<8} node={label:<24} "
+                    f"run={e.run_id:<4} bytes={e.output_bytes:<10} "
                     f"outputs={sorted(e.outputs)}"
                 )
         return
@@ -240,9 +245,11 @@ def main(argv=None) -> None:
         print(f"wall: {res.stats['wall_s']:.2f}s  io: {res.stats['io']}")
         cache = res.stats.get("cache", {})
         if cache.get("enabled"):
-            total = cache["hits"] + cache["stages_executed"]
+            total = cache["hits"] + cache["nodes_executed"]
             print(
-                f"cache: {cache['hits']}/{total} stages restored, "
+                f"cache: {cache['hits']}/{total} nodes hit "
+                f"({cache['rehydrated']} rehydrated, {cache['elided']} "
+                f"elided), {cache['nodes_executed']} executed, "
                 f"{cache['bytes_saved']} bytes saved"
             )
 

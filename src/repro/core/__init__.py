@@ -5,8 +5,10 @@
 ``PhysicalPlan``  — fused stages with scan pushdown (paper 4.4.2)
 ``Runner``        — transform-audit-write over ephemeral branches (4.3)
 ``RunRegistry``   — snapshotting, fingerprints, replay (4.4.1, 4.6)
-``StageCacheRegistry`` — cross-run differential artifact cache (FaaS &
-                    Furious-style: clean stages restore, dirty cones rerun)
+``NodeCacheRegistry`` — cross-run differential artifact cache (FaaS &
+                    Furious-style, keyed per logical node: clean nodes
+                    restore or elide, dirty cones rerun, planner-config
+                    changes stay warm)
 """
 from repro.core.pipeline import Pipeline, Node, PipelineError, requirements
 from repro.core.logical import LogicalPlan, build_logical_plan
@@ -19,6 +21,9 @@ from repro.core.physical import (
 )
 from repro.core.runner import Runner, RunResult, ExpectationFailed
 from repro.core.snapshot import (
+    CacheView,
+    NodeCacheEntry,
+    NodeCacheRegistry,
     RunRecord,
     RunRegistry,
     StageCacheEntry,
@@ -26,6 +31,9 @@ from repro.core.snapshot import (
 )
 
 __all__ = [
+    "CacheView",
+    "NodeCacheEntry",
+    "NodeCacheRegistry",
     "StageCacheEntry",
     "StageCacheRegistry",
     "Pipeline",

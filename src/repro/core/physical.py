@@ -13,16 +13,29 @@ object storage.  The optimized planner instead:
 Both behaviours are switchable (``PlannerConfig``) because the naive plan
 is the baseline the paper's 5x claim is measured against
 (benchmarks/bench_fusion.py).
+
+The planner is also **cache-aware** (the FaaS-and-Furious differential
+cache, re-keyed at node granularity): every logical node gets a
+*transitive fingerprint* — node code + upstream node fingerprints +
+input table content hashes + run params — that is independent of how
+nodes are fused into stages.  Given a ``CacheView``, the planner cuts
+fused chains at cache boundaries: nodes the cache satisfies become
+rehydrations (or are elided outright when nothing downstream needs
+them), and stages are built only over the uncached remainder.  A fusion
+config flip therefore re-plans *around* the warm cache instead of
+invalidating it.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.logical import LogicalPlan
 from repro.core.pipeline import Node
+from repro.core.snapshot import CacheView, NodeCacheEntry
 from repro.engine.columnar import Columnar
 from repro.engine.exec import execute_query
 from repro.engine.query import Query
@@ -65,10 +78,12 @@ class Stage:
     fn: Callable[..., Tuple[Dict[str, Columnar], Dict[str, Any]]]
     resources: ResourceRequest
     fingerprint: str
-    #: transitive identity: node code + upstream stage fingerprints + input
-    #: table snapshot ids + run params — the differential-cache key.  Two
-    #: stages with equal transitive fingerprints produce bit-identical
-    #: outputs, so a cached result can be substituted for execution.
+    #: stage-level transitive identity (node code + upstream stage
+    #: fingerprints + input table snapshot ids + run params).  This is the
+    #: *legacy* (PR 1) differential-cache key — new entries are keyed by
+    #: per-node fingerprints (``PhysicalPlan.node_fingerprints``) — kept so
+    #: stage-keyed entries written by old lakes can still be matched and
+    #: upgraded (``CacheView.adopt_legacy``).
     transitive_fingerprint: str = ""
 
     @property
@@ -82,10 +97,32 @@ class PhysicalPlan:
     logical: LogicalPlan
     config: PlannerConfig
     stages: List[Stage]
+    #: logical node name -> transitive node fingerprint (the cache key,
+    #: independent of fusion grouping)
+    node_fingerprints: Dict[str, str] = field(default_factory=dict)
+    #: nodes the cache satisfied at plan time: name -> entry
+    cached_nodes: Dict[str, NodeCacheEntry] = field(default_factory=dict)
+    #: cache-satisfied artifacts the runner must restore (commit their
+    #: cached manifest keys): contract outputs, inputs of executing
+    #: stages, and same-config materialization points
+    rehydrate: Tuple[str, ...] = ()
+    #: cache-satisfied expectations — verdict True recorded at audit time,
+    #: reported without re-evaluation
+    cached_checks: Tuple[str, ...] = ()
+    #: nodes neither executed nor rehydrated: nothing downstream of them
+    #: needs their value this run (the fusion-flip win).  Contract outputs
+    #: are never elided; an interior materialization the current config
+    #: would have produced cold can be (see build_physical_plan)
+    elided: Tuple[str, ...] = ()
 
     @property
     def num_materializations(self) -> int:
         return sum(len(s.outputs) for s in self.stages)
+
+    @property
+    def nodes_executed(self) -> int:
+        """Logical nodes this plan actually computes (cache hits excluded)."""
+        return sum(len(s.node_names) for s in self.stages)
 
     def describe(self) -> str:
         lines = [f"physical plan ({'fused' if self.config.fusion else 'isomorphic'}):"]
@@ -99,6 +136,11 @@ class PhysicalPlan:
                 f"  stage {s.stage_id}: nodes={list(s.node_names)} scans={scans} "
                 f"inputs={list(s.internal_inputs)} outputs={list(s.outputs)} "
                 f"checks={list(s.checks)} mem={s.resources.memory_gb}GB"
+            )
+        if self.cached_nodes:
+            lines.append(
+                f"  cache: rehydrate={list(self.rehydrate)} "
+                f"checks={list(self.cached_checks)} elided={list(self.elided)}"
             )
         return "\n".join(lines)
 
@@ -147,25 +189,60 @@ def _scan_bytes(plan: ScanPlan) -> int:
     return plan.rows_to_read * row_bytes
 
 
-def build_physical_plan(
+def compute_node_fingerprints(
     logical: LogicalPlan,
-    snapshots: Dict[str, Snapshot],
-    *,
-    config: PlannerConfig = PlannerConfig(),
-    ctx: Any = None,
-    cost_model: Optional[CostModel] = None,
-) -> PhysicalPlan:
-    cost_model = cost_model or CostModel()
+    input_fingerprints: Dict[str, str],
+    run_params: Dict[str, Any],
+) -> Dict[str, str]:
+    """Per-node transitive identity, independent of fusion grouping.
 
-    # ---------------------------------------------------- stage assignment
-    # greedy: a node joins the stage that produced ALL its internal parents
-    # (expectations likewise); otherwise it opens a new stage.
+    ``node code + upstream node fingerprints + input table identities +
+    run params`` — two nodes with equal transitive fingerprints produce
+    bit-identical outputs, so a cached result can substitute for
+    execution regardless of how either plan grouped nodes into stages.
+    ``input_fingerprints`` should be sharding-invariant content hashes
+    (``TableFormat.content_fingerprint``) so compaction doesn't bust the
+    cache; snapshot ids are an acceptable conservative fallback.
+    """
+    fps: Dict[str, str] = {}
+    for name in logical.order:
+        node = logical.nodes[name]
+        parents: Dict[str, str] = {}
+        scans: Dict[str, str] = {}
+        for p in node.parents:
+            if p in logical.nodes:
+                parents[p] = fps[p]
+            else:
+                scans[p] = input_fingerprints[p]
+        fps[name] = stable_hash(
+            {
+                "node": node.fingerprint,
+                "parents": parents,
+                "scans": scans,
+                "params": run_params,
+            }
+        )
+    return fps
+
+
+def _greedy_stages(
+    logical: LogicalPlan,
+    config: PlannerConfig,
+    names: Sequence[str],
+) -> Tuple[List[List[str]], Dict[str, int], Dict[str, int]]:
+    """Greedy fusion grouping over ``names`` (topological subsequence of
+    ``logical.order``): a node joins the stage that produced ALL its
+    in-subset parents (expectations likewise); otherwise it opens a new
+    stage.  Parents outside the subset — external tables, cache-restored
+    artifacts — are boundaries, which is exactly how a fused chain gets
+    cut at a cache hit: the cached prefix is absent from ``names`` and the
+    uncached suffix starts a fresh (shorter) stage."""
     node_stage: Dict[str, int] = {}
     stage_nodes: List[List[str]] = []
     produced_in: Dict[str, int] = {}
-    for name in logical.order:
+    for name in names:
         node = logical.nodes[name]
-        internal_parents = [p for p in node.parents if p in logical.nodes]
+        internal_parents = [p for p in node.parents if p in produced_in]
         target: Optional[int] = None
         if config.fusion and internal_parents:
             parent_stages = {produced_in[p] for p in internal_parents}
@@ -182,19 +259,285 @@ def build_physical_plan(
         node_stage[name] = target
         if not node.is_expectation:
             produced_in[name] = target
+    return stage_nodes, node_stage, produced_in
+
+
+def _stage_outputs(
+    logical: LogicalPlan,
+    stage_nodes: List[List[str]],
+    node_stage: Dict[str, int],
+    produced_in: Dict[str, int],
+) -> List[Tuple[str, ...]]:
+    """Materialization points of a grouping: artifacts that are contract
+    outputs or cross a stage boundary."""
+    needed_later: Dict[str, List[int]] = {}
+    for names in stage_nodes:
+        for name in names:
+            for p in logical.nodes[name].parents:
+                if p in produced_in and produced_in[p] != node_stage[name]:
+                    needed_later.setdefault(p, []).append(node_stage[name])
+    outs: List[Tuple[str, ...]] = []
+    for names in stage_nodes:
+        outs.append(
+            tuple(
+                n
+                for n in names
+                if not logical.nodes[n].is_expectation
+                and (n in logical.outputs or n in needed_later)
+            )
+        )
+    return outs
+
+
+def _legacy_stage_fingerprints(
+    logical: LogicalPlan,
+    snapshots: Dict[str, Snapshot],
+    run_params: Dict[str, Any],
+    stage_nodes: List[List[str]],
+    produced_in: Dict[str, int],
+    outputs_per_stage: List[Tuple[str, ...]],
+) -> List[str]:
+    """The PR 1 stage-keyed cache fingerprints, byte-for-byte: node code +
+    upstream stage fingerprints + input snapshot ids + params.  Only used
+    to match (and then upgrade) entries written by pre-node lakes."""
+    fps: List[str] = []
+    for sid, names in enumerate(stage_nodes):
+        scan_tables = sorted(
+            {
+                p
+                for n in names
+                for p in logical.nodes[n].parents
+                if p not in logical.nodes
+            }
+        )
+        internal_inputs = {
+            p
+            for n in names
+            for p in logical.nodes[n].parents
+            if p in produced_in and produced_in[p] != sid
+        }
+        parent_stages = sorted({produced_in[p] for p in internal_inputs})
+        fps.append(
+            stable_hash(
+                {
+                    "nodes": [logical.nodes[n].fingerprint for n in names],
+                    "outputs": sorted(outputs_per_stage[sid]),
+                    "parents": [fps[p] for p in parent_stages],
+                    "scans": {t: snapshots[t].snapshot_id for t in scan_tables},
+                    "params": run_params,
+                }
+            )
+        )
+    return fps
+
+
+def _consult_cache(
+    cache: CacheView,
+    logical: LogicalPlan,
+    snapshots: Dict[str, Snapshot],
+    run_params: Dict[str, Any],
+    node_fp: Dict[str, str],
+    natural: List[List[str]],
+    nat_produced_in: Dict[str, int],
+    nat_outputs: List[Tuple[str, ...]],
+) -> Dict[str, NodeCacheEntry]:
+    """Which nodes can the cache satisfy?  Node-keyed lookups first; any
+    still-unsatisfied natural stage is then matched against legacy
+    stage-keyed entries and, on a hit, staged for the one-way upgrade
+    into node entries (so the *next* planner change still finds them).
+    ``natural``/``nat_produced_in``/``nat_outputs`` describe the
+    cache-unaware grouping of the CURRENT config (computed once by
+    ``build_physical_plan``) — old lakes warm up as long as the config
+    matches what wrote the legacy entry, and the adopted node entries
+    are config-proof from then on."""
+    satisfied: Dict[str, NodeCacheEntry] = {}
+    for name in logical.order:
+        node = logical.nodes[name]
+        entry = cache.node(node_fp[name])
+        if entry is None:
+            continue
+        if node.is_expectation:
+            if entry.checks.get(name, False):
+                satisfied[name] = entry
+        elif name in entry.outputs:
+            satisfied[name] = entry
+
+    produced_in = nat_produced_in
+    legacy_fps = _legacy_stage_fingerprints(
+        logical, snapshots, run_params, natural, produced_in, nat_outputs
+    )
+    for sid, names in enumerate(natural):
+        checks = [n for n in names if logical.nodes[n].is_expectation]
+        missing = [
+            n for n in (*nat_outputs[sid], *checks) if n not in satisfied
+        ]
+        if not missing:
+            continue
+        legacy = cache.legacy_stage(legacy_fps[sid])
+        if legacy is None:
+            continue
+        if not set(nat_outputs[sid]) <= set(legacy.outputs):
+            continue
+        if not all(legacy.checks.get(c, False) for c in checks):
+            continue
+        per_node_bytes = legacy.output_bytes // max(len(nat_outputs[sid]), 1)
+        # adopted entries are being used RIGHT NOW — fresh LRU clock, or a
+        # TTL prune straight after the upgrade run would evict them (the
+        # legacy timestamp can be arbitrarily old); created_at keeps the
+        # provenance.  Names a live node entry already satisfies are NOT
+        # re-adopted: overwriting would regress their clock and replace
+        # accurate output_bytes with the legacy bytes//n estimate.
+        now = time.time()
+        adopted: List[NodeCacheEntry] = []
+        for out in nat_outputs[sid]:
+            if out in satisfied:
+                continue
+            entry = NodeCacheEntry(
+                fingerprint=node_fp[out],
+                outputs={out: legacy.outputs[out]},
+                checks={},
+                output_bytes=per_node_bytes,
+                run_id=legacy.run_id,
+                created_at=legacy.created_at,
+                last_used_at=now,
+                node=out,
+            )
+            adopted.append(entry)
+            satisfied[out] = entry
+        for c in checks:
+            if c in satisfied:
+                continue
+            entry = NodeCacheEntry(
+                fingerprint=node_fp[c],
+                outputs={},
+                checks={c: True},
+                output_bytes=0,
+                run_id=legacy.run_id,
+                created_at=legacy.created_at,
+                last_used_at=now,
+                node=c,
+            )
+            adopted.append(entry)
+            satisfied[c] = entry
+        cache.adopt_legacy(legacy, adopted)
+    return satisfied
+
+
+def build_physical_plan(
+    logical: LogicalPlan,
+    snapshots: Dict[str, Snapshot],
+    *,
+    config: PlannerConfig = PlannerConfig(),
+    ctx: Any = None,
+    cost_model: Optional[CostModel] = None,
+    cache: Optional[CacheView] = None,
+    input_fingerprints: Optional[Dict[str, str]] = None,
+) -> PhysicalPlan:
+    """Plan ``logical`` into fused stages, planning *around* the cache.
+
+    ``cache`` (when given) is consulted at node granularity: satisfied
+    nodes are never assigned to a stage — terminal ones become
+    rehydrations, interior ones cut fused chains so only the uncached
+    suffix executes, and nodes no executing consumer needs are elided.
+    ``input_fingerprints`` carries the sharding-invariant content identity
+    of each external table (defaults to snapshot ids, which are exact but
+    conservatively miss after a compaction rewrite).
+    """
+    cost_model = cost_model or CostModel()
+    # run params feed python nodes through ctx, so they are part of every
+    # node's cache identity (a param change must invalidate everything)
+    run_params = dict(getattr(ctx, "params", None) or {})
+    input_ids = input_fingerprints or {
+        t: snap.snapshot_id for t, snap in snapshots.items()
+    }
+    node_fp = compute_node_fingerprints(logical, input_ids, run_params)
+
+    # the natural (cache-unaware) grouping of this config — shared by the
+    # legacy-entry match and the materialization-parity restore set below
+    nat_stages, nat_node_stage, nat_produced = _greedy_stages(
+        logical, config, list(logical.order)
+    )
+    nat_outputs_per_stage = _stage_outputs(
+        logical, nat_stages, nat_node_stage, nat_produced
+    )
+
+    # ------------------------------------------------- cache consultation
+    satisfied = (
+        _consult_cache(
+            cache, logical, snapshots, run_params, node_fp,
+            nat_stages, nat_produced, nat_outputs_per_stage,
+        )
+        if cache is not None
+        else {}
+    )
+
+    # ------------------------------------------ needed-set (reverse walk)
+    # An unsatisfied audit or contract output must run; running a node
+    # needs its parents' values; a satisfied parent is restored instead of
+    # recomputed, so *its* parents are not needed on its account.
+    value_needed: Set[str] = set()
+    exec_set: Set[str] = set()
+    for name in reversed(list(logical.order)):
+        if name in satisfied:
+            continue
+        node = logical.nodes[name]
+        if not (
+            node.is_expectation
+            or name in logical.outputs
+            or name in value_needed
+        ):
+            continue  # every consumer is satisfied or elided
+        exec_set.add(name)
+        for p in node.parents:
+            if p in logical.nodes:
+                value_needed.add(p)
+
+    # what the natural (cache-unaware) grouping would materialize — cheap
+    # manifest-key commits that keep a warm re-run's artifacts identical
+    # to the cold run's under the same config with an intact cache.
+    # Parity is deliberately best-effort beyond that: an UNSATISFIED node
+    # whose consumers are all cached is elided rather than recomputed —
+    # whether it lost its entry to a config flip (it was never
+    # materialized under the old grouping) or to `repro cache prune`.
+    # Contract outputs (logical.outputs) are always produced; an interior
+    # table the current config would have materialized cold may be absent
+    # from the warm branch, and `--no-cache` forces a full materializing
+    # recompute.  This is the acceptance trade-off: recomputing such
+    # nodes would turn every planner flip into real work.
+    natural_outputs = {n for outs in nat_outputs_per_stage for n in outs}
+    restored = tuple(
+        name
+        for name in logical.order
+        if name in satisfied
+        and not logical.nodes[name].is_expectation
+        and (
+            name in logical.outputs
+            or name in value_needed
+            or name in natural_outputs
+        )
+    )
+    restored_set = set(restored)
+    cached_checks = tuple(
+        name
+        for name in logical.order
+        if name in satisfied and logical.nodes[name].is_expectation
+    )
+
+    # ---------------------------------------------------- stage assignment
+    exec_names = [n for n in logical.order if n in exec_set]
+    stage_nodes, node_stage, produced_in = _greedy_stages(
+        logical, config, exec_names
+    )
 
     # --------------------------------------------- boundary identification
     needed_later: Dict[str, List[int]] = {}
-    for name in logical.order:
+    for name in exec_names:
         node = logical.nodes[name]
         for p in node.parents:
             if p in produced_in and produced_in[p] != node_stage[name]:
                 needed_later.setdefault(p, []).append(node_stage[name])
 
     stages: List[Stage] = []
-    # run params feed python nodes through ctx, so they are part of every
-    # stage's cache identity (a param change must invalidate everything)
-    run_params = dict(getattr(ctx, "params", None) or {})
     transitive: Dict[int, str] = {}
     for sid, names in enumerate(stage_nodes):
         nodes = [logical.nodes[n] for n in names]
@@ -239,13 +582,16 @@ def build_physical_plan(
             plan = plan_scan(snapshot, columns=columns, predicates=predicates)
             scans[table] = ScanSpec(table, plan, _scan_bytes(plan))
 
+        # inputs produced by other stages OR restored from the cache (the
+        # rehydrate-then-shorter-stage cut)
         internal_inputs = tuple(
             sorted(
                 {
                     p
                     for n in nodes
                     for p in n.parents
-                    if p in produced_in and produced_in[p] != sid
+                    if (p in produced_in and produced_in[p] != sid)
+                    or p in restored_set
                 }
             )
         )
@@ -259,18 +605,27 @@ def build_physical_plan(
         input_order = tuple(sorted(scans)) + internal_inputs
         fn = _make_stage_fn(nodes, rewrites, input_order, outputs, ctx)
         total_bytes = sum(s.estimated_bytes for s in scans.values())
-        # transitive fingerprint: parents are topologically earlier stages,
-        # so their fingerprints are already in ``transitive``
-        parent_stages = sorted({produced_in[p] for p in internal_inputs})
-        transitive[sid] = stable_hash(
-            {
-                "nodes": [logical.nodes[n].fingerprint for n in names],
-                "outputs": sorted(outputs),
-                "parents": [transitive[p] for p in parent_stages],
-                "scans": {t: snapshots[t].snapshot_id for t in scans},
-                "params": run_params,
-            }
+        # legacy stage fingerprint: parents are topologically earlier
+        # stages, so their fingerprints are already in ``transitive``; a
+        # restored parent contributes its node fingerprint instead (the
+        # "restored" key is only present for cache-cut stages, keeping
+        # cold-plan fingerprints byte-identical to PR 1 entries)
+        parent_stages = sorted(
+            {produced_in[p] for p in internal_inputs if p in produced_in}
         )
+        payload: Dict[str, Any] = {
+            "nodes": [logical.nodes[n].fingerprint for n in names],
+            "outputs": sorted(outputs),
+            "parents": [transitive[p] for p in parent_stages],
+            "scans": {t: snapshots[t].snapshot_id for t in scans},
+            "params": run_params,
+        }
+        restored_parents = {
+            p: node_fp[p] for p in internal_inputs if p in restored_set
+        }
+        if restored_parents:
+            payload["restored"] = restored_parents
+        transitive[sid] = stable_hash(payload)
         stages.append(
             Stage(
                 stage_id=sid,
@@ -285,4 +640,21 @@ def build_physical_plan(
                 transitive_fingerprint=transitive[sid],
             )
         )
-    return PhysicalPlan(logical=logical, config=config, stages=stages)
+    executed = {n for names in stage_nodes for n in names}
+    elided = tuple(
+        n
+        for n in logical.order
+        if n not in executed
+        and n not in restored_set
+        and n not in cached_checks
+    )
+    return PhysicalPlan(
+        logical=logical,
+        config=config,
+        stages=stages,
+        node_fingerprints=node_fp,
+        cached_nodes=satisfied,
+        rehydrate=restored,
+        cached_checks=cached_checks,
+        elided=elided,
+    )

@@ -33,10 +33,11 @@ from repro.core.physical import (
 )
 from repro.core.pipeline import Pipeline
 from repro.core.snapshot import (
+    CacheView,
+    NodeCacheEntry,
+    NodeCacheRegistry,
     RunRecord,
     RunRegistry,
-    StageCacheEntry,
-    StageCacheRegistry,
 )
 from repro.engine.columnar import Columnar
 from repro.runtime.executor import ServerlessExecutor
@@ -94,13 +95,13 @@ class Runner:
     fmt: TableFormat
     executor: ServerlessExecutor
     registry: RunRegistry = None  # type: ignore[assignment]
-    cache_registry: StageCacheRegistry = None  # type: ignore[assignment]
+    cache_registry: NodeCacheRegistry = None  # type: ignore[assignment]
 
     def __post_init__(self) -> None:
         if self.registry is None:
             self.registry = RunRegistry(self.catalog.store)
         if self.cache_registry is None:
-            self.cache_registry = StageCacheRegistry(self.catalog.store)
+            self.cache_registry = NodeCacheRegistry(self.catalog.store)
 
     # ------------------------------------------------------------ queries
     def query(
@@ -156,16 +157,23 @@ class Runner:
         pushdown: bool = True,
         base_commit: Optional[str] = None,
         author: str = "user",
-        cache: bool = False,
+        cache: bool = True,
+        planner_config: Optional[PlannerConfig] = None,
     ) -> RunResult:
         """Execute ``pipeline`` with transform-audit-write semantics.
 
-        ``cache=True`` enables the cross-run differential cache: stages
-        whose transitive fingerprint matches a previous audited run are
-        skipped, their outputs restored from the object store; after this
-        run's audit passes, its own stage outputs are registered for
-        future runs.  ``cache=False`` bypasses the cache in both
-        directions (full recompute, nothing persisted).
+        The cross-run differential cache is ON by default (the fast path
+        is the default path): logical nodes whose transitive fingerprint
+        matches a previous audited run are planned around — restored from
+        the object store or elided outright — and after this run's audit
+        passes its own node outputs are registered for future runs.
+        ``cache=False`` bypasses the cache in both directions (full
+        recompute, nothing persisted).
+
+        ``planner_config`` overrides the ``fusion``/``pushdown`` shorthands
+        when the caller needs full control (e.g. ``max_stage_nodes``) —
+        thanks to node-granular cache keys, replanning under a different
+        config still reuses every cached node.
         """
         t_start = time.perf_counter()
         params = dict(params or {})
@@ -191,7 +199,9 @@ class Runner:
             try:
                 result = self._execute(
                     pipeline, branch, ephemeral, base.commit_id, params,
-                    PlannerConfig(fusion=fusion, pushdown=pushdown), run_id,
+                    planner_config
+                    or PlannerConfig(fusion=fusion, pushdown=pushdown),
+                    run_id,
                     use_cache=cache,
                 )
             except Exception:
@@ -217,8 +227,14 @@ class Runner:
                 message=f"run {run_id}: {pipeline.name}",
                 author=author, delete_source=True,
             )
-            # 6. publish this run's stage outputs to the differential cache
+            # 6. publish this run's node outputs to the differential cache,
+            # and only now apply any staged legacy->node upgrades — a
+            # failed audit must leave the registry untouched, adoptions
+            # included (write-after-audit covers re-keying)
             if cache:
+                view = result["cache"]["view"]
+                if view is not None:
+                    view.apply_adoptions()
                 for entry in result["cache"]["entries"].values():
                     self.cache_registry.put(entry)
             rec = self._record(
@@ -310,57 +326,70 @@ class Runner:
             schemas[name] = snap.schema
         logical = build_logical_plan(pipeline, external_schemas=schemas)
         ctx = RunContext(branch, run_id, params)
-        plan = build_physical_plan(logical, snapshots, config=config, ctx=ctx)
+        # sharding-invariant input identity: a compaction rewrite changes
+        # snapshot ids but not content, so fingerprints key on the content
+        # hash (memoized per snapshot — only the first run pays the scan)
+        input_fps = (
+            {
+                name: self.fmt.content_fingerprint(snap)
+                for name, snap in snapshots.items()
+            }
+            if use_cache
+            else None
+        )
+        cache_view = CacheView(self.cache_registry) if use_cache else None
+        plan = build_physical_plan(
+            logical, snapshots, config=config, ctx=ctx,
+            cache=cache_view, input_fingerprints=input_fps,
+        )
         log.info("\n%s", plan.describe())
 
         # 3. transform: execute stages through the serverless executor —
-        # unless the differential cache already holds a stage's outputs
+        # the planner already cut every cache-satisfied node out of them
         env: Dict[str, Columnar] = {}  # in-memory artifact cache (locality)
         artifacts: Dict[str, str] = {}
         checks: Dict[str, bool] = {}
-        cache_hits = 0
         stages_executed = 0
         bytes_saved = 0
-        new_entries: Dict[str, StageCacheEntry] = {}
+        new_entries: Dict[str, NodeCacheEntry] = {}
         bytes_before = self.fmt.store.stats.snapshot()
-        for stage in plan.stages:
-            entry = (
-                self.cache_registry.get(stage.transitive_fingerprint)
-                if use_cache
-                else None
+
+        # 3a. rehydrate cache-satisfied nodes: commit their cached manifest
+        # keys to the ephemeral branch (contract outputs stay queryable and
+        # executing stages read restored inputs back on demand) and report
+        # their audited verdicts.  Expectations were audited when the entry
+        # was created — same code, same data, same verdict (4.4.1).
+        rehydrate_updates: Dict[str, str] = {}
+        for name in plan.rehydrate:
+            entry = plan.cached_nodes[name]
+            key = entry.outputs[name]
+            artifacts[name] = key
+            rehydrate_updates[name] = key
+            bytes_saved += entry.output_bytes
+            self.fmt.store.record_cache_hit(entry.output_bytes)
+            # bump the entry's LRU clock so eviction favours cold ones.
+            # Deliberately re-fetch instead of passing the in-hand entry:
+            # entries staged by a legacy adoption are not persisted until
+            # the audit passes, and touch() must not write them early.
+            self.cache_registry.touch(entry.fingerprint)
+        for cname in plan.cached_checks:
+            checks[cname] = True
+            self.cache_registry.touch(plan.cached_nodes[cname].fingerprint)
+        if rehydrate_updates:
+            self.catalog.commit(
+                ephemeral, rehydrate_updates,
+                message=f"run {run_id}: rehydrated "
+                        f"{sorted(rehydrate_updates)} from node cache",
+                author="runner",
             )
-            if (
-                entry is not None
-                and set(stage.outputs) <= set(entry.outputs)
-                and all(entry.checks.get(c, False) for c in stage.checks)
-            ):
-                # cache hit: skip the task entirely.  Outputs rehydrate from
-                # the store lazily (committed to the ephemeral branch here;
-                # a downstream executing stage reads them back on demand).
-                # Expectations in this stage were audited when the entry
-                # was created — same code, same data, same verdict (4.4.1).
-                updates = {}
-                for name in stage.outputs:
-                    artifacts[name] = entry.outputs[name]
-                    updates[name] = entry.outputs[name]
-                for cname in stage.checks:
-                    checks[cname] = True
-                if updates:
-                    self.catalog.commit(
-                        ephemeral, updates,
-                        message=f"run {run_id} stage {stage.stage_id} (cached)",
-                        author="runner",
-                    )
-                cache_hits += 1
-                bytes_saved += entry.output_bytes
-                self.fmt.store.record_cache_hit(entry.output_bytes)
-                # bump the entry's LRU clock so eviction favours cold ones
-                self.cache_registry.touch(entry.fingerprint, entry=entry)
-                log.info(
-                    "stage %d restored from cache (%s)",
-                    stage.stage_id, stage.transitive_fingerprint[:12],
-                )
-                continue
+            log.info(
+                "cache: rehydrated %d artifact(s), skipped %d audited "
+                "check(s), elided %d node(s)",
+                len(rehydrate_updates), len(plan.cached_checks),
+                len(plan.elided),
+            )
+
+        for stage in plan.stages:
             inputs: List[Columnar] = []
             for table in sorted(stage.scans):
                 data = execute_scan(self.fmt, stage.scans[table].plan)
@@ -387,11 +416,11 @@ class Runner:
                 checks[cname] = verdict
                 this_stage_checks[cname] = verdict
             updates: Dict[str, Optional[str]] = {}
-            output_bytes = 0
+            node_bytes: Dict[str, int] = {}
             for name, rel in outputs.items():
                 env[name] = rel
                 compact = rel.to_numpy(compact=True)
-                output_bytes += sum(arr.nbytes for arr in compact.values())
+                node_bytes[name] = sum(arr.nbytes for arr in compact.values())
                 schema = Schema(
                     tuple(
                         Column(c, str(compact[c].dtype)) for c in sorted(compact)
@@ -408,16 +437,34 @@ class Runner:
                     author="runner",
                 )
             if use_cache:
-                # candidate entry — persisted by run() only if the audit
-                # passes (failed audits must not poison future runs)
-                new_entries[stage.transitive_fingerprint] = StageCacheEntry(
-                    fingerprint=stage.transitive_fingerprint,
-                    outputs={n: artifacts[n] for n in stage.outputs},
-                    checks=this_stage_checks,
-                    output_bytes=output_bytes,
-                    run_id=run_id,
-                    created_at=time.time(),
-                )
+                # candidate node entries — persisted by run() only if the
+                # audit passes (failed audits must not poison future runs).
+                # One entry per materialized artifact and one per evaluated
+                # expectation, keyed by the fusion-independent node
+                # fingerprint, so any future plan shape can reuse them.
+                now = time.time()
+                for name in stage.outputs:
+                    fp = plan.node_fingerprints[name]
+                    new_entries[fp] = NodeCacheEntry(
+                        fingerprint=fp,
+                        outputs={name: artifacts[name]},
+                        checks={},
+                        output_bytes=node_bytes.get(name, 0),
+                        run_id=run_id,
+                        created_at=now,
+                        node=name,
+                    )
+                for cname, verdict in this_stage_checks.items():
+                    fp = plan.node_fingerprints[cname]
+                    new_entries[fp] = NodeCacheEntry(
+                        fingerprint=fp,
+                        outputs={},
+                        checks={cname: verdict},
+                        output_bytes=0,
+                        run_id=run_id,
+                        created_at=now,
+                        node=cname,
+                    )
         bytes_after = self.fmt.store.stats.snapshot()
         # cache_* counters are run-level telemetry (reported under "cache")
         # and gc_*/compact_* belong to the lakekeeper, not bytes moved by
@@ -434,10 +481,16 @@ class Runner:
             "io": io_delta,
             "cache": {
                 "enabled": use_cache,
-                "hits": cache_hits,
+                # node-granular hit accounting: every cache-satisfied
+                # logical node counts, whether rehydrated or elided
+                "hits": len(plan.cached_nodes),
+                "nodes_executed": plan.nodes_executed,
                 "stages_executed": stages_executed,
+                "rehydrated": len(plan.rehydrate),
+                "elided": len(plan.elided),
                 "bytes_saved": bytes_saved,
                 "entries": new_entries,
+                "view": cache_view,
             },
         }
 
@@ -474,7 +527,10 @@ class Runner:
                 "cache": {
                     "enabled": cache["enabled"],
                     "hits": cache["hits"],
+                    "nodes_executed": cache["nodes_executed"],
                     "stages_executed": cache["stages_executed"],
+                    "rehydrated": cache["rehydrated"],
+                    "elided": cache["elided"],
                     "bytes_saved": cache["bytes_saved"],
                 },
             },

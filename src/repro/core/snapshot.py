@@ -7,24 +7,34 @@ base data commit, parameters, produced artifact keys, and execution stats.
 the tests assert snapshot-id equality (bit-for-bit reproducibility).
 
 That same determinism, read forward, is a performance win (the follow-up
-paper's differential caching): if a stage's *transitive* fingerprint —
-node code + upstream fingerprints + input snapshot ids + params — matches
-a previous successful run, its outputs can be restored from the object
-store instead of recomputed.  ``StageCacheRegistry`` is the fingerprint →
-outputs index; entries are written only after a run's audit passes, so a
-failed expectation can never leave poisoned cache entries behind.
+paper's differential caching): if a *logical node's* transitive
+fingerprint — node code + upstream node fingerprints + input table
+content hashes + params — matches a previous successful run, its output
+can be restored from the object store instead of recomputed.  The cache
+is keyed at **node** granularity, independent of how the physical
+planner happened to fuse nodes into stages, so a planner-config change
+(fusion toggled, ``max_stage_nodes`` tweaked) never invalidates the
+cache.  ``NodeCacheRegistry`` is the fingerprint → entry index; entries
+are written only after a run's audit passes, so a failed expectation can
+never leave poisoned cache entries behind.  Entries written by the old
+stage-keyed scheme (PR 1) are kept readable in their own namespace and
+upgraded one-way to node entries the first time a plan matches them
+(``CacheView.adopt_legacy``), so pre-migration lakes don't cold-start.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field, replace
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.io.objectstore import ObjectStore
 
 _RUN_NS = "runs"
 _COUNTER = "run_counter"
-_CACHE_NS = "stagecache"
+#: legacy (PR 1) stage-keyed entries — read-only except for the one-way
+#: upgrade; new entries always land in the node namespace
+_LEGACY_CACHE_NS = "stagecache"
+_CACHE_NS = "nodecache"
 #: in-flight run pins — GC roots protecting a running run's base commit
 #: (see repro.maintenance.reachability)
 _PIN_NS = "pins"
@@ -45,8 +55,10 @@ class RunRecord:
     fused: bool
     stats: Dict[str, Any]
     created_at: float
-    #: transitive stage fingerprint -> artifact manifest keys persisted to
-    #: the differential cache by this run (empty for cache-off / failed runs)
+    #: transitive *node* fingerprint -> artifact manifest keys persisted to
+    #: the differential cache by this run (empty for cache-off / failed
+    #: runs; check entries appear with an empty mapping).  Named
+    #: ``stage_cache`` for on-disk compatibility with pre-node records.
     stage_cache: Dict[str, Dict[str, str]] = field(default_factory=dict)
 
     def to_json_dict(self) -> Dict:
@@ -131,19 +143,23 @@ class RunRegistry:
 
 
 @dataclass(frozen=True)
-class StageCacheEntry:
-    """Everything needed to substitute a cached stage for execution.
+class NodeCacheEntry:
+    """Everything needed to substitute one cached logical node for execution.
 
-    ``outputs`` maps artifact name -> snapshot manifest key; the blobs
-    are content-addressed, so the keys stay dereferenceable until the
-    lakekeeper (repro.maintenance) evicts the entry and a GC sweep
-    reclaims any blobs no longer reachable from another root.
-    ``checks`` records the stage's expectation verdicts at creation
-    time; since entries are only persisted after a fully-audited run,
-    every recorded verdict is True — downstream audit can therefore be
-    skipped for cache-restored stages.  ``output_bytes`` (size) and
-    ``last_used_at`` (recency) are the metadata the eviction policy
-    (LRU within a byte budget, optional TTL) ranks entries by.
+    An **artifact** node's entry maps its name -> snapshot manifest key in
+    ``outputs`` (a single-key dict); an **expectation** node's entry records
+    its audited verdict in ``checks`` instead.  The blobs behind a manifest
+    key are content-addressed, so the key stays dereferenceable until the
+    lakekeeper (repro.maintenance) evicts the entry and a GC sweep reclaims
+    any blobs no longer reachable from another root.  Since entries are
+    only persisted after a fully-audited run, every recorded verdict is
+    True — audit can be skipped for cache-restored nodes.  ``output_bytes``
+    (size) and ``last_used_at`` (recency) are the metadata the eviction
+    policy (LRU within a byte budget, optional TTL) ranks entries by.
+
+    Legacy stage-keyed entries (PR 1) deserialize into the same shape
+    (multi-name ``outputs``/``checks``, empty ``node``) and are upgraded
+    one-way to node entries by ``CacheView.adopt_legacy``.
     """
 
     fingerprint: str
@@ -158,10 +174,18 @@ class StageCacheEntry:
     #: bumped on every cache hit (LRU clock); equals created_at until the
     #: entry is first restored
     last_used_at: float = 0.0
+    #: logical node name this entry caches ("" for legacy stage entries)
+    node: str = ""
 
     def __post_init__(self) -> None:
         if self.last_used_at == 0.0:
             object.__setattr__(self, "last_used_at", self.created_at)
+
+    @property
+    def kind(self) -> str:
+        if not self.node:
+            return "stage"  # legacy, pre-node-granularity
+        return "check" if self.checks else "artifact"
 
     def to_json_dict(self) -> Dict:
         return {
@@ -172,40 +196,63 @@ class StageCacheEntry:
             "run_id": self.run_id,
             "created_at": self.created_at,
             "last_used_at": self.last_used_at,
+            "node": self.node,
         }
 
     @staticmethod
-    def from_json_dict(d: Dict) -> "StageCacheEntry":
-        return StageCacheEntry(**d)
+    def from_json_dict(d: Dict) -> "NodeCacheEntry":
+        return NodeCacheEntry(**d)
+
+
+#: historical name — external callers and old records still use it
+StageCacheEntry = NodeCacheEntry
 
 
 @dataclass
-class StageCacheRegistry:
-    """Differential-cache index: transitive stage fingerprint -> entry.
+class NodeCacheRegistry:
+    """Differential-cache index: transitive node fingerprint -> entry.
 
     Entries live in the same ref namespace machinery as branches and run
     records, so the cache shares the store's durability and atomic-swap
-    semantics without any new storage layer.
+    semantics without any new storage layer.  Two namespaces back the
+    registry: ``nodecache`` (current, node-keyed) and ``stagecache``
+    (legacy PR 1 stage-keyed entries, kept readable so old lakes warm up
+    instead of cold-starting).  Reads/evictions see the union; writes go
+    to the node namespace only.
     """
 
     store: ObjectStore
 
-    def get(self, fingerprint: str) -> Optional[StageCacheEntry]:
+    def get(self, fingerprint: str) -> Optional[NodeCacheEntry]:
         raw = self.store.get_ref(_CACHE_NS, fingerprint)
-        return None if raw is None else StageCacheEntry.from_json_dict(raw)
+        return None if raw is None else NodeCacheEntry.from_json_dict(raw)
 
-    def put(self, entry: StageCacheEntry) -> None:
+    def get_legacy(self, stage_fingerprint: str) -> Optional[NodeCacheEntry]:
+        """Look up a PR 1 stage-keyed entry (the upgrade-path read)."""
+        raw = self.store.get_ref(_LEGACY_CACHE_NS, stage_fingerprint)
+        return None if raw is None else NodeCacheEntry.from_json_dict(raw)
+
+    def put(self, entry: NodeCacheEntry) -> None:
         self.store.set_ref(_CACHE_NS, entry.fingerprint, entry.to_json_dict())
 
+    def put_legacy(self, entry: NodeCacheEntry) -> None:
+        """Write into the legacy stage-keyed namespace.  Only migration
+        tests and pre-node tooling should ever need this."""
+        self.store.set_ref(
+            _LEGACY_CACHE_NS, entry.fingerprint, entry.to_json_dict()
+        )
+
     def invalidate(self, fingerprint: str) -> bool:
-        """Drop an entry; idempotent, returns whether it existed."""
-        return self.store.delete_ref(_CACHE_NS, fingerprint)
+        """Drop an entry from whichever namespace holds it; idempotent,
+        returns whether it existed."""
+        dropped = self.store.delete_ref(_CACHE_NS, fingerprint)
+        return self.store.delete_ref(_LEGACY_CACHE_NS, fingerprint) or dropped
 
     def touch(
         self,
         fingerprint: str,
         *,
-        entry: Optional[StageCacheEntry] = None,
+        entry: Optional[NodeCacheEntry] = None,
         now: Optional[float] = None,
     ) -> None:
         """Bump an entry's LRU clock (called by the runner on a hit).
@@ -215,11 +262,18 @@ class StageCacheRegistry:
             return
         self.put(replace(entry, last_used_at=now if now is not None else time.time()))
 
-    def entries(self) -> Dict[str, StageCacheEntry]:
-        return {
-            fp: StageCacheEntry.from_json_dict(raw)
-            for fp, raw in self.store.list_refs(_CACHE_NS).items()
+    def entries(self) -> Dict[str, NodeCacheEntry]:
+        """Union of node-keyed and surviving legacy entries — what the
+        eviction policy budgets and the GC mark walks."""
+        out = {
+            fp: NodeCacheEntry.from_json_dict(raw)
+            for fp, raw in self.store.list_refs(_LEGACY_CACHE_NS).items()
         }
+        out.update(
+            (fp, NodeCacheEntry.from_json_dict(raw))
+            for fp, raw in self.store.list_refs(_CACHE_NS).items()
+        )
+        return out
 
     def total_bytes(self) -> int:
         """Sum of output_bytes across live entries (the budgeted figure)."""
@@ -228,3 +282,60 @@ class StageCacheRegistry:
     def clear(self) -> None:
         for fp in list(self.entries()):
             self.invalidate(fp)
+
+
+#: historical name — maintenance, CLI and tests predating node granularity
+StageCacheRegistry = NodeCacheRegistry
+
+
+class CacheView:
+    """The planner's window onto the differential cache.
+
+    ``build_physical_plan`` consults it to decide which logical nodes can
+    be satisfied without execution; the runner constructs one per cached
+    run.  The view is strictly read-only at plan time: ``adopt_legacy``
+    only *stages* the one-way upgrade of a matched PR 1 stage entry into
+    per-node entries, and the runner applies it (``apply_adoptions``)
+    after the run's audit passes — a failed run must not mutate the
+    registry, re-keying included.
+    """
+
+    def __init__(self, registry: NodeCacheRegistry):
+        self.registry = registry
+        #: (legacy entry, replacement node entries) staged by the planner
+        self.pending_adoptions: List[
+            Tuple[NodeCacheEntry, List[NodeCacheEntry]]
+        ] = []
+
+    def node(self, fingerprint: str) -> Optional[NodeCacheEntry]:
+        return self.registry.get(fingerprint)
+
+    def legacy_stage(self, stage_fingerprint: str) -> Optional[NodeCacheEntry]:
+        return self.registry.get_legacy(stage_fingerprint)
+
+    def adopt_legacy(
+        self,
+        legacy: NodeCacheEntry,
+        node_entries: List[NodeCacheEntry],
+    ) -> None:
+        """Stage the split of ``legacy`` into node-keyed ``node_entries``.
+
+        The legacy entry's outputs were written by a fully-audited run, so
+        the adopted entries inherit its provenance (run_id/created_at);
+        this run can plan against them immediately.  Nothing is persisted
+        here — ``apply_adoptions`` runs post-audit.
+        """
+        self.pending_adoptions.append((legacy, list(node_entries)))
+
+    def apply_adoptions(self) -> None:
+        """Persist staged upgrades: write the node entries, retire the
+        stage-keyed originals (the node entries now root the same
+        manifests for the GC).  Idempotent; called by the runner after a
+        successful audit."""
+        for legacy, entries in self.pending_adoptions:
+            for entry in entries:
+                self.registry.put(entry)
+            self.registry.store.delete_ref(
+                _LEGACY_CACHE_NS, legacy.fingerprint
+            )
+        self.pending_adoptions.clear()

@@ -21,7 +21,7 @@ import time
 from dataclasses import dataclass
 from typing import List, Optional
 
-from repro.core.snapshot import StageCacheEntry, StageCacheRegistry
+from repro.core.snapshot import NodeCacheEntry, NodeCacheRegistry
 from repro.utils.logging import get_logger
 
 log = get_logger("maintenance.eviction")
@@ -55,7 +55,7 @@ class EvictionReport:
 
 
 def prune_cache(
-    registry: StageCacheRegistry,
+    registry: NodeCacheRegistry,
     policy: EvictionPolicy,
     *,
     now: Optional[float] = None,
@@ -66,8 +66,8 @@ def prune_cache(
     entries = list(registry.entries().values())
     bytes_before = sum(e.output_bytes for e in entries)
 
-    expired: List[StageCacheEntry] = []
-    survivors: List[StageCacheEntry] = []
+    expired: List[NodeCacheEntry] = []
+    survivors: List[NodeCacheEntry] = []
     for e in entries:
         if policy.ttl_s is not None and now - e.last_used_at > policy.ttl_s:
             expired.append(e)

@@ -45,12 +45,15 @@ class GCReport:
     #: unreachable but younger than the grace period — left for next time
     kept_young: int
     dry_run: bool
+    #: content-fingerprint memo refs pruned for expired snapshots
+    swept_content_refs: int = 0
 
     def describe(self) -> str:
         verb = "would reclaim" if self.dry_run else "reclaimed"
         return (
             f"gc: {verb} {self.swept_objects} objects "
-            f"({self.bytes_reclaimed} bytes) + {self.swept_commits} commit refs; "
+            f"({self.bytes_reclaimed} bytes) + {self.swept_commits} commit refs "
+            f"+ {self.swept_content_refs} content-hash memos; "
             f"live: {self.live_commits} commits / {self.live_objects} objects; "
             f"spared {self.kept_young} in-grace objects; roots: {self.roots}"
         )
@@ -95,6 +98,12 @@ def collect_garbage(
         live.objects, grace_s=grace_s, dry_run=dry_run
     )
 
+    # content-fingerprint memos for expired snapshots are pure cache —
+    # dropping one only costs a recompute on next use, so no grace needed
+    swept_content = fmt.prune_content_fingerprints(
+        live.snapshot_ids, dry_run=dry_run
+    )
+
     report = GCReport(
         roots=live.roots,
         live_commits=len(live.commits),
@@ -104,6 +113,7 @@ def collect_garbage(
         bytes_reclaimed=result.bytes_reclaimed,
         kept_young=result.kept_young,
         dry_run=dry_run,
+        swept_content_refs=swept_content,
     )
     log.info("%s", report.describe())
     return report

@@ -9,13 +9,19 @@ expire superseded snapshots):
     branch heads  ─┐
     tags           ├─> commits ──> table manifests ──> shard column blobs
     pinned runs   ─┘
-    stage-cache entries ─────────> table manifests ──> shard column blobs
+    node-cache entries ──────────> table manifests ──> shard column blobs
 
 Commits, branch heads, tags, pins and cache entries are *refs* (small
 mutable pointers); manifests and column blobs are content-addressed
 *objects*.  The mark returns both vocabularies: live commit ids (so the
 GC can drop expired commit refs) and live object keys (so the sweep can
 drop unreachable blobs).
+
+Cache roots are **node-granular**: each live ``NodeCacheEntry`` (and any
+not-yet-upgraded legacy stage entry — ``NodeCacheRegistry.entries()``
+returns the union of both namespaces) pins the manifest of the one
+artifact it caches, so evicting a single node releases exactly that
+node's blobs to the next sweep.
 """
 from __future__ import annotations
 
@@ -23,7 +29,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional, Set
 
 from repro.catalog.nessie import Catalog
-from repro.core.snapshot import RunRegistry, StageCacheRegistry
+from repro.core.snapshot import NodeCacheRegistry, RunRegistry
 from repro.io.objectstore import ObjectStore
 from repro.table.format import TableFormat
 
@@ -39,6 +45,9 @@ class LiveSet:
     objects: Set[str]
     #: telemetry: how many roots of each kind seeded the walk
     roots: Dict[str, int] = field(default_factory=dict)
+    #: snapshot ids of the live manifests — lets the sweep prune
+    #: content-fingerprint memo refs whose snapshot has been expired
+    snapshot_ids: Set[str] = field(default_factory=set)
 
 
 def mark(
@@ -58,7 +67,7 @@ def mark(
     crashed runs (None = honour all pins).
     """
     registry = RunRegistry(store)
-    cache = StageCacheRegistry(store)
+    cache = NodeCacheRegistry(store)
 
     pins = registry.pinned_commits(max_age_s=pin_ttl_s)
     commits = catalog.reachable_commits(
@@ -74,8 +83,17 @@ def mark(
         manifests.update(entry.outputs.values())
 
     objects: Set[str] = set()
+    snapshot_ids: Set[str] = set()
     for key in manifests:
-        objects |= fmt.snapshot_object_keys(key)
+        # tolerate a missing manifest (crashed prior sweep), like
+        # snapshot_object_keys does
+        if not store.exists(key):
+            continue
+        snap = fmt.load_snapshot(key)
+        snapshot_ids.add(snap.snapshot_id)
+        objects.add(key)
+        for shard in snap.shards:
+            objects.update(shard.column_blobs.values())
 
     return LiveSet(
         commits=set(commits),
@@ -86,4 +104,5 @@ def mark(
             "pinned_runs": len(pins),
             "cache_entries": len(cache_entries),
         },
+        snapshot_ids=snapshot_ids,
     )

@@ -10,7 +10,12 @@ to a real deployment are what matter and are what the tests pin down:
 * **bounded retries** on worker failure, with exponential backoff;
 * **straggler speculation** — if a task exceeds ``speculation_factor`` ×
   the median duration of its completed siblings, a duplicate launches and
-  the first finisher wins (standard backup-request trick, scaled down);
+  the first finisher wins (standard backup-request trick, scaled down).
+  Single tasks (the ``submit()``/``run()`` path — one fused stage, one
+  container) have no siblings, so their baseline is the **per-fingerprint
+  latency history** of prior runs of the same function: a pipeline stage
+  that usually takes 50 ms but is stuck at 500 ms gets a backup request
+  too, not just fan-out batches;
 * **failure injection** — tests wrap task functions with a FaultInjector
   that kills the first N attempts to prove the retry path.
 """
@@ -19,7 +24,13 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import (
+    FIRST_COMPLETED,
+    Future,
+    ThreadPoolExecutor,
+    TimeoutError as FuturesTimeoutError,
+    wait,
+)
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -46,6 +57,10 @@ class ExecutorConfig:
     #: hard per-attempt timeout (None = no timeout); a timed-out attempt
     #: counts as a failure and is retried
     attempt_timeout_s: Optional[float] = None
+    #: completed durations remembered per function fingerprint — the
+    #: baseline single-task speculation falls back to when a task has no
+    #: completed siblings to take a median over
+    latency_history_size: int = 64
 
 
 @dataclass
@@ -109,6 +124,9 @@ class ServerlessExecutor:
         )
         self._durations: List[float] = []
         self._speculations = 0  # duplicates launched, lifetime of the pool
+        #: function fingerprint -> recent completed durations (the prior-run
+        #: baseline for single-task speculation)
+        self._latency_history: Dict[str, List[float]] = {}
         self._lock = threading.Lock()
 
     # ----------------------------------------------------------- lifecycle
@@ -146,6 +164,11 @@ class ServerlessExecutor:
                 with self._lock:
                     self.records.append(record)
                     self._durations.append(record.duration_s)
+                    history = self._latency_history.setdefault(
+                        spec.fingerprint, []
+                    )
+                    history.append(record.duration_s)
+                    del history[: -self.config.latency_history_size]
                 return result
             except Exception as e:  # container crash → retry
                 last_err = e
@@ -162,8 +185,64 @@ class ServerlessExecutor:
     def submit(self, spec: FunctionSpec, *args: Any) -> "Future[Any]":
         return self._pool.submit(self._run_with_retries, spec, args)
 
+    def _historical_baseline(self, spec: FunctionSpec) -> Optional[float]:
+        """Median completed duration of prior runs of this function, or
+        None below ``speculation_min_samples`` (no evidence, no backup)."""
+        with self._lock:
+            history = list(self._latency_history.get(spec.fingerprint, ()))
+        if len(history) < self.config.speculation_min_samples:
+            return None
+        return sorted(history)[len(history) // 2]
+
     def run(self, spec: FunctionSpec, *args: Any) -> Any:
-        return self.submit(spec, *args).result()
+        """Run one task synchronously, speculating against its own history.
+
+        A single task has no completed siblings to take a median over, so
+        the straggler baseline is the per-fingerprint latency history of
+        prior runs: once the primary exceeds ``speculation_factor`` × that
+        median, ONE duplicate launches and the first successful finisher
+        wins.  With no history the primary just runs to completion — the
+        pre-speculation behaviour, byte for byte.
+        """
+        with self._lock:
+            # records before this invocation (baseline-building successes
+            # included) must not count toward this task's attempt ledger
+            start_idx = len(self.records)
+        primary = self.submit(spec, *args)
+        baseline = self._historical_baseline(spec)
+        if baseline is None:
+            return primary.result()
+        cfg = self.config
+        deadline = cfg.speculation_factor * max(baseline, 1e-4)
+        try:
+            return primary.result(timeout=deadline)
+        except TaskFailure:
+            raise  # every retry failed before the deadline — no twin to wait on
+        except FuturesTimeoutError:
+            log.info("speculating single straggler task %s", spec.name)
+        with self._lock:
+            self._speculations += 1
+        racers: List[Future] = [
+            primary, self._pool.submit(self._run_with_retries, spec, args, True)
+        ]
+        pending = set(racers)
+        while pending:
+            done, pending = wait(pending, return_when=FIRST_COMPLETED)
+            for fut in done:
+                if fut.exception() is None:
+                    return fut.result()
+        # every racer failed — one TaskFailure, attempts accounted across
+        # the original and its duplicate (this invocation only)
+        with self._lock:
+            attempts = sum(
+                r.attempts
+                for r in self.records[start_idx:]
+                if r.name == spec.name
+            )
+        raise TaskFailure(
+            f"task {spec.name!r} failed on all {len(racers)} container(s) "
+            f"after {attempts} total attempts"
+        ) from racers[-1].exception()
 
     # -------------------------------------------------- bulk + speculation
     def map_with_speculation(

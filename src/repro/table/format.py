@@ -11,6 +11,7 @@ Responsibility split (mirrors Parquet vs Iceberg):
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -24,6 +25,10 @@ from repro.utils.hashing import stable_hash
 #: default rows per shard — small enough that predicate pushdown has
 #: something to prune, big enough to amortize per-shard overheads.
 DEFAULT_SHARD_ROWS = 65536
+
+#: ref namespace memoizing snapshot_id -> content fingerprint (tiny JSON
+#: pointers; stale ones for expired snapshots are harmless)
+_CONTENT_NS = "contenthash"
 
 
 @dataclass(frozen=True)
@@ -227,6 +232,55 @@ class TableFormat:
             }
         parts = [self.read_shard(s, cols) for s in snapshot.shards]
         return {c: np.concatenate([p[c] for p in parts]) for c in cols}
+
+    def content_fingerprint(self, snapshot: Snapshot) -> str:
+        """Sharding-invariant identity of a table version.
+
+        Streams each column's raw row-order bytes (shard boundaries
+        excluded) through sha256, then hashes the per-column digests with
+        the schema.  Because ``compact_snapshot`` preserves row order, a
+        compacted snapshot has the SAME content fingerprint as its parent
+        even though its snapshot id (which hashes shard layout) differs —
+        this is what keeps the differential cache warm across ``repro
+        compact``.  The result is memoized per snapshot id in the ref
+        space, so only the first caller per table version pays the scan.
+        """
+        memo = self.store.get_ref(_CONTENT_NS, snapshot.snapshot_id)
+        if memo is not None:
+            return memo["content_fingerprint"]
+        hashers = {c: hashlib.sha256() for c in snapshot.schema.names}
+        for shard in snapshot.shards:
+            data = self.read_shard(shard)
+            for c in snapshot.schema.names:
+                hashers[c].update(np.ascontiguousarray(data[c]).tobytes())
+        fp = stable_hash(
+            {
+                "table": snapshot.table,
+                "schema": snapshot.schema.to_json_dict(),
+                "columns": {c: h.hexdigest() for c, h in hashers.items()},
+            }
+        )
+        self.store.set_ref(
+            _CONTENT_NS, snapshot.snapshot_id, {"content_fingerprint": fp}
+        )
+        return fp
+
+    def prune_content_fingerprints(
+        self, live_snapshot_ids: set, *, dry_run: bool = False
+    ) -> int:
+        """Drop content-fingerprint memo refs whose snapshot is no longer
+        live (``repro gc`` calls this after the mark) — without it every
+        expired table version would leak one tiny ref forever.  Returns
+        the number of refs pruned; a dropped memo is only a cache miss,
+        the fingerprint recomputes on next use."""
+        pruned = 0
+        for snapshot_id in self.store.list_refs(_CONTENT_NS):
+            if snapshot_id in live_snapshot_ids:
+                continue
+            pruned += 1
+            if not dry_run:
+                self.store.delete_ref(_CONTENT_NS, snapshot_id)
+        return pruned
 
     def load_snapshot(self, manifest_key: str) -> Snapshot:
         return Snapshot.from_json_dict(loads_json(self.store.get(manifest_key)))

@@ -69,6 +69,31 @@ def test_cli_run_then_query_and_log(lake, capsys):
     assert "feat_1" in out and "main" in out
 
 
+def test_cli_run_reports_node_hit_rate(lake, capsys):
+    root, pipeline_file = lake
+    main(["--lake", str(root), "run", str(pipeline_file), "-b", "dev"])
+    cold = capsys.readouterr().out
+    assert "0/3 nodes hit" in cold  # cache on by default, cold lake
+    # warm fused re-run: pickups rehydrates, the audited check is skipped,
+    # and interior trips (never materialized by the fused cold run) elides
+    main(["--lake", str(root), "run", str(pipeline_file), "-b", "dev"])
+    warm = capsys.readouterr().out
+    assert "2/2 nodes hit" in warm and "0 executed" in warm
+    # a fusion flip stays warm (node-granular keys) ...
+    main(["--lake", str(root), "run", str(pipeline_file), "-b", "dev",
+          "--no-fusion"])
+    flipped = capsys.readouterr().out
+    assert "0 executed" in flipped
+    # ... and --no-cache is the explicit opt-out
+    main(["--lake", str(root), "run", str(pipeline_file), "-b", "dev",
+          "--no-cache"])
+    out = capsys.readouterr().out
+    assert "nodes hit" not in out
+    main(["--lake", str(root), "cache", "stats"])
+    out = capsys.readouterr().out
+    assert "pickups" in out and "artifact" in out and "check" in out
+
+
 def test_cli_tables_and_replay(lake, capsys):
     root, pipeline_file = lake
     main(["--lake", str(root), "run", str(pipeline_file), "-b", "dev"])

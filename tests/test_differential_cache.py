@@ -1,10 +1,13 @@
 """Cross-run differential artifact cache (FaaS & Furious, arXiv 2411.08203).
 
 The reproducibility contract — same code on the same data produces
-identical results (paper 4.4.1) — turned into a performance win: stages
-whose transitive fingerprint (node code + upstream fingerprints + input
-snapshot ids + params) matches a previously audited run are skipped and
-their outputs restored from the object store.
+identical results (paper 4.4.1) — turned into a performance win: logical
+nodes whose transitive fingerprint (node code + upstream node
+fingerprints + input content hashes + params) matches a previously
+audited run are planned around — restored from the object store or
+elided — and only the dirty remainder executes.  Keying at node (not
+fused-stage) granularity makes the cache survive planner-config changes:
+the fusion-flip tests below are the acceptance criteria for that.
 """
 import subprocess
 import sys
@@ -14,9 +17,10 @@ import numpy as np
 import pytest
 
 from repro.core import ExpectationFailed, PlannerConfig, Runner, build_logical_plan
-from repro.core.physical import build_physical_plan
+from repro.core.physical import build_physical_plan, compute_node_fingerprints
 from repro.core.runner import RunContext
-from repro.core.snapshot import StageCacheEntry, StageCacheRegistry
+from repro.core.snapshot import NodeCacheEntry, NodeCacheRegistry, StageCacheEntry, StageCacheRegistry
+from repro.maintenance import compact_table
 from repro.runtime import ExecutorConfig, ServerlessExecutor
 from tests.helpers_taxi import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
 
@@ -48,10 +52,12 @@ def _run(runner, pipeline, branch, **kw):
 def test_warm_rerun_executes_zero_stages(runner, catalog, fmt, seeded):
     cold = _run(runner, build_taxi_pipeline(), "b1")
     assert cold.stats["cache"] == {
-        "enabled": True, "hits": 0, "stages_executed": 3, "bytes_saved": 0,
+        "enabled": True, "hits": 0, "nodes_executed": 3,
+        "stages_executed": 3, "rehydrated": 0, "elided": 0, "bytes_saved": 0,
     }
     warm = _run(runner, build_taxi_pipeline(), "b2")
     assert warm.stats["cache"]["hits"] == 3
+    assert warm.stats["cache"]["nodes_executed"] == 0
     assert warm.stats["cache"]["stages_executed"] == 0
     assert warm.stats["cache"]["bytes_saved"] > 0
     # restored artifacts are the SAME content-addressed snapshots
@@ -65,20 +71,24 @@ def test_warm_rerun_executes_zero_stages(runner, catalog, fmt, seeded):
 
 
 def test_warm_rerun_same_branch_hits(runner, catalog, fmt, seeded):
-    # re-running on the SAME branch still hits: the key is snapshot ids of
-    # the scanned tables, not the branch head commit
+    # re-running on the SAME branch still hits: the key is content hashes
+    # of the scanned tables, not the branch head commit
     cold = _run(runner, build_taxi_pipeline(), "main")
     warm = _run(runner, build_taxi_pipeline(), "main")
-    assert warm.stats["cache"]["stages_executed"] == 0
+    assert warm.stats["cache"]["nodes_executed"] == 0
     assert warm.artifacts == cold.artifacts
 
 
-def test_fused_plan_caches_as_one_unit(runner, catalog, fmt, seeded):
+def test_fused_plan_publishes_node_entries(runner, catalog, fmt, seeded):
+    # a fused cold run materializes only the terminal artifact, so it
+    # publishes entries for pickups + the expectation verdict; the interior
+    # trips node (never materialized) is elided on the warm re-run
     cold = runner.run(build_taxi_pipeline(), branch="f1", cache=True)
     assert len(cold.plan.stages) == 1
     warm = runner.run(build_taxi_pipeline(), branch="f2", cache=True)
-    assert warm.stats["cache"]["hits"] == 1
-    assert warm.stats["cache"]["stages_executed"] == 0
+    assert warm.stats["cache"]["hits"] == 2
+    assert warm.stats["cache"]["nodes_executed"] == 0
+    assert warm.stats["cache"]["elided"] == 1  # trips: no consumer needs it
     assert warm.artifacts == cold.artifacts
 
 
@@ -87,11 +97,11 @@ def test_edited_node_recomputes_only_dirty_cone(runner, catalog, fmt, seeded):
     _run(runner, build_taxi_pipeline(), "b1")
     # edit ONE node (the expectation threshold is captured in its closure,
     # hence in its fingerprint): upstream trips and downstream-independent
-    # pickups stay cached, only the expectation stage re-executes
+    # pickups stay cached, only the expectation re-executes
     edited = build_taxi_pipeline(threshold=5.0)
     res = _run(runner, edited, "b2")
     assert res.stats["cache"]["hits"] == 2
-    assert res.stats["cache"]["stages_executed"] == 1
+    assert res.stats["cache"]["nodes_executed"] == 1
     assert res.checks == {"trips_expectation": True}
 
 
@@ -99,32 +109,73 @@ def test_input_snapshot_change_invalidates_everything(runner, catalog, fmt, rng)
     snap = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(2000, rng))
     catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
     _run(runner, build_taxi_pipeline(), "b1")
-    # new data version: every stage's transitive fingerprint changes
+    # new data version: every node's transitive fingerprint changes
     snap2 = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(2500, rng))
     catalog.commit("main", {"taxi_table": fmt.manifest_key(snap2)})
     res = _run(runner, build_taxi_pipeline(), "b2")
     assert res.stats["cache"]["hits"] == 0
-    assert res.stats["cache"]["stages_executed"] == 3
+    assert res.stats["cache"]["nodes_executed"] == 3
 
 
 def test_param_change_invalidates(runner, catalog, fmt, seeded):
     _run(runner, build_taxi_pipeline(), "b1", params={"x": 1})
     hit = _run(runner, build_taxi_pipeline(), "b2", params={"x": 1})
-    assert hit.stats["cache"]["stages_executed"] == 0
+    assert hit.stats["cache"]["nodes_executed"] == 0
     miss = _run(runner, build_taxi_pipeline(), "b3", params={"x": 2})
-    assert miss.stats["cache"]["stages_executed"] == 3
+    assert miss.stats["cache"]["nodes_executed"] == 3
+
+
+# --------------------------------------- fusion-flip (acceptance criteria)
+def test_fusion_flip_warm_run_executes_zero_nodes(runner, catalog, fmt, seeded):
+    """The tentpole claim: node-keyed fingerprints make planner-config
+    changes a warm run, not a cold start."""
+    cold = runner.run(build_taxi_pipeline(), branch="c", fusion=True)
+    # flip fusion off: previously a guaranteed full recompute (stage
+    # grouping changed -> every stage fingerprint changed)
+    flip = runner.run(
+        build_taxi_pipeline(), branch="w1", fusion=False, pushdown=False
+    )
+    assert flip.stats["cache"]["nodes_executed"] == 0
+    assert flip.artifacts["pickups"] == cold.artifacts["pickups"]
+    # change max_stage_nodes (different fusion grouping): still warm
+    logical_cfg = runner.run(
+        build_taxi_pipeline(), branch="w2",
+        planner_config=PlannerConfig(fusion=True, max_stage_nodes=1),
+    )
+    assert logical_cfg.stats["cache"]["nodes_executed"] == 0
+
+
+def test_unfused_to_fused_flip_is_warm(runner, catalog, fmt, seeded):
+    _run(runner, build_taxi_pipeline(), "c")  # isomorphic cold run
+    warm = runner.run(build_taxi_pipeline(), branch="w", fusion=True)
+    assert warm.stats["cache"]["nodes_executed"] == 0
+    assert warm.stats["cache"]["hits"] == 3
+
+
+def test_fused_chain_cut_at_cache_boundary(runner, catalog, fmt, seeded):
+    """A fused chain whose prefix is cached becomes a rehydrate + a
+    shorter stage over only the uncached suffix."""
+    _run(runner, build_taxi_pipeline(), "c")  # caches trips/te/pickups
+    edited = build_taxi_pipeline(threshold=5.0)  # dirty expectation only
+    res = runner.run(edited, branch="w", fusion=True)
+    assert res.stats["cache"]["nodes_executed"] == 1
+    (stage,) = res.plan.stages
+    assert stage.node_names == ("trips_expectation",)
+    assert "trips" in stage.internal_inputs  # fed by rehydration
+    assert "trips" in res.plan.rehydrate
 
 
 # ------------------------------------------------------------------ bypass
 def test_no_cache_bypasses_in_both_directions(runner, catalog, fmt, seeded):
     _run(runner, build_taxi_pipeline(), "b1", cache=False)
     # nothing was persisted by the cache-off run
-    assert StageCacheRegistry(catalog.store).entries() == {}
+    assert NodeCacheRegistry(catalog.store).entries() == {}
     _run(runner, build_taxi_pipeline(), "b2", cache=True)
     # --no-cache forces a full recompute even with a populated cache
     res = _run(runner, build_taxi_pipeline(), "b3", cache=False)
     assert res.stats["cache"] == {
-        "enabled": False, "hits": 0, "stages_executed": 3, "bytes_saved": 0,
+        "enabled": False, "hits": 0, "nodes_executed": 3,
+        "stages_executed": 3, "rehydrated": 0, "elided": 0, "bytes_saved": 0,
     }
 
 
@@ -158,7 +209,136 @@ def test_failed_audit_rolls_back_cache_entries(runner, catalog, fmt, rng):
     assert res.stats["cache"]["hits"] == 0
 
 
+# ----------------------------------------------- compaction (content hash)
+def test_compaction_rewrite_keeps_cache_warm(runner, catalog, fmt, seeded):
+    """Compacting a table rewrites shards in a new commit (new snapshot
+    id, bit-identical data) — input identity keys on the table content
+    hash, so the warm re-run still executes 0 nodes."""
+    cold = _run(runner, build_taxi_pipeline(), "main")
+    before = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    report = compact_table(catalog, fmt, "taxi_table", target_rows=1000)
+    assert report.shards_merged > 0
+    after = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    assert after.snapshot_id != before.snapshot_id
+    assert fmt.content_fingerprint(after) == fmt.content_fingerprint(before)
+    warm = _run(runner, build_taxi_pipeline(), "main")
+    assert warm.stats["cache"]["nodes_executed"] == 0
+    assert warm.artifacts == cold.artifacts
+
+
+# --------------------------------------------------- legacy stage entries
+def test_legacy_stage_entries_upgrade_one_way(runner, catalog, fmt, seeded):
+    """A lake whose cache was written by the stage-keyed scheme (PR 1)
+    must warm up, not cold-start: matched legacy entries are adopted into
+    node-keyed entries and the stage-keyed originals retired."""
+    import time as _time
+
+    pipeline = build_taxi_pipeline()
+    cold = _run(runner, pipeline, "b1", cache=False)  # nothing cached
+    reg = NodeCacheRegistry(catalog.store)
+    assert reg.entries() == {}
+
+    # simulate the PR 1 on-disk state: stage-keyed entries in `stagecache`
+    snap = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    logical = build_logical_plan(
+        pipeline, external_schemas={"taxi_table": snap.schema}
+    )
+    plan = build_physical_plan(
+        logical, {"taxi_table": snap},
+        config=PlannerConfig(fusion=False, pushdown=False),
+        ctx=RunContext("main", 1, {}),
+    )
+    for stage in plan.stages:
+        reg.put_legacy(NodeCacheEntry(
+            fingerprint=stage.transitive_fingerprint,
+            outputs={n: cold.artifacts[n] for n in stage.outputs},
+            checks={c: True for c in stage.checks},
+            output_bytes=128,
+            run_id=cold.run_id,
+            created_at=_time.time(),
+        ))
+    assert catalog.store.list_refs("stagecache")
+
+    warm = _run(runner, pipeline, "b2")  # same config as the legacy writer
+    assert warm.stats["cache"]["nodes_executed"] == 0
+    assert warm.artifacts == cold.artifacts
+    # one-way upgrade: stage namespace drained, node entries in its place
+    assert catalog.store.list_refs("stagecache") == {}
+    assert {e.node for e in reg.entries().values()} == {
+        "trips", "trips_expectation", "pickups",
+    }
+    # the adopted entries are fusion-config-proof from now on
+    fused = runner.run(pipeline, branch="b3", fusion=True)
+    assert fused.stats["cache"]["nodes_executed"] == 0
+
+
+def test_failed_audit_leaves_legacy_adoption_unapplied(runner, catalog, fmt, rng):
+    """Write-after-audit covers re-keying too: a failed run that matched a
+    legacy stage entry during planning must leave the registry exactly as
+    it found it — no node entries, legacy originals intact."""
+    import time as _time
+
+    # data whose mean passenger_count (~2) fails the threshold-10 audit
+    data = make_taxi_data(800, rng, mean_count=2.0)
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, data)
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    pipeline = build_taxi_pipeline()
+    reg = NodeCacheRegistry(catalog.store)
+
+    # legacy entry for the trips stage only (the part that would succeed)
+    snap = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    logical = build_logical_plan(
+        pipeline, external_schemas={"taxi_table": snap.schema}
+    )
+    plan = build_physical_plan(
+        logical, {"taxi_table": snap},
+        config=PlannerConfig(fusion=False, pushdown=False),
+        ctx=RunContext("main", 1, {}),
+    )
+    trips_stage = next(s for s in plan.stages if s.node_names == ("trips",))
+    # a real trips artifact (the trips node is identical across threshold
+    # variants — the threshold lives in the expectation's closure), from a
+    # run whose relaxed audit passes
+    ok = _run(runner, build_taxi_pipeline(threshold=1.0), "ok", cache=False)
+    trips_key = ok.artifacts["trips"]
+    reg.put_legacy(NodeCacheEntry(
+        fingerprint=trips_stage.transitive_fingerprint,
+        outputs={"trips": trips_key},
+        checks={},
+        output_bytes=64,
+        run_id=1,
+        created_at=_time.time(),
+    ))
+
+    with pytest.raises(ExpectationFailed):
+        _run(runner, pipeline, "main")
+    # no nodecache refs appeared, the legacy entry survived untouched
+    assert catalog.store.list_refs("nodecache") == {}
+    assert len(catalog.store.list_refs("stagecache")) == 1
+
+
 # ------------------------------------------------------------ fingerprints
+def test_node_fingerprints_ignore_fusion_config(catalog, fmt, seeded):
+    pipeline = build_taxi_pipeline()
+    snap = fmt.load_snapshot(catalog.table_key("taxi_table"))
+    logical = build_logical_plan(
+        pipeline, external_schemas={"taxi_table": snap.schema}
+    )
+    fps = [
+        build_physical_plan(
+            logical, {"taxi_table": snap}, config=cfg,
+            ctx=RunContext("main", 1, {}),
+        ).node_fingerprints
+        for cfg in (
+            PlannerConfig(fusion=True),
+            PlannerConfig(fusion=False, pushdown=False),
+            PlannerConfig(fusion=True, max_stage_nodes=1),
+        )
+    ]
+    assert fps[0] == fps[1] == fps[2]
+    assert len(set(fps[0].values())) == 3  # distinct nodes, distinct keys
+
+
 def _stage_fingerprints(catalog, fmt, params=None):
     pipeline = build_taxi_pipeline()
     key = catalog.table_key("taxi_table")

@@ -84,11 +84,17 @@ def test_pushdown_prunes_shards(runner, seeded):
 
 
 def test_isomorphic_equals_fused_results(catalog, fmt, seeded):
+    # cache=False: this test is about genuine recompute equivalence — with
+    # the (default) node cache on, the second run would plan around the
+    # first run's cached nodes instead of re-executing them
     with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
         runner = Runner(catalog, fmt, ex)
-        fused = runner.run(build_taxi_pipeline(), branch="fa", fusion=True)
+        fused = runner.run(
+            build_taxi_pipeline(), branch="fa", fusion=True, cache=False
+        )
         naive = runner.run(
-            build_taxi_pipeline(), branch="fb", fusion=False, pushdown=False
+            build_taxi_pipeline(), branch="fb", fusion=False, pushdown=False,
+            cache=False,
         )
     assert len(naive.plan.stages) == 3  # the "three separate executions"
     assert len(fused.plan.stages) == 1

@@ -475,6 +475,26 @@ def test_cli_maintenance_verbs(tmp_path, rng, capsys):
     assert "evicted 0/0" in out
 
 
+def test_gc_prunes_stale_content_fingerprint_memos(runner, catalog, fmt, rng):
+    """Cached runs memoize each input snapshot's content hash as a ref;
+    gc must prune memos whose snapshot has been expired or the ref space
+    grows one entry per table version forever."""
+    s1 = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(1000, rng))
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(s1)})
+    _run(runner, build_taxi_pipeline())  # memoizes s1's content hash
+    s2 = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(1500, rng))
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(s2)})
+    _run(runner, build_taxi_pipeline())  # memoizes s2's content hash
+    assert set(catalog.store.list_refs("contenthash")) == {
+        s1.snapshot_id, s2.snapshot_id,
+    }
+    # prune stale cache entries, expire history to heads: s1 is gone
+    prune_cache(StageCacheRegistry(catalog.store), EvictionPolicy(max_bytes=0))
+    report = collect_garbage(catalog.store, catalog, fmt, history=1, grace_s=0.0)
+    assert report.swept_content_refs == 1
+    assert set(catalog.store.list_refs("contenthash")) == {s2.snapshot_id}
+
+
 # ---------------------------------------------------- review regressions
 def test_gc_history_zero_refuses_to_brick_the_lake(runner, catalog, fmt, seeded):
     """Regression: history=0 would mark nothing live; the sweep against

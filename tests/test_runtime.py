@@ -161,6 +161,83 @@ def test_speculation_duplicate_succeeds_after_original_fails():
         assert inj.seen["flaky"] == 2  # failed original + successful duplicate
 
 
+class _CallState:
+    """Captured by test task closures.  A plain class reference has a
+    stable repr (unlike a mutated dict/list), so mutating its attributes
+    does not perturb the FunctionSpec fingerprint — which is exactly what
+    lets the executor accumulate latency history across calls."""
+
+    calls = 0
+
+
+def test_single_task_speculation_from_latency_history():
+    """The submit()/run() path has no siblings; after enough completed
+    runs of the same fingerprint, a straggler gets a backup request based
+    on its own latency history and the fast duplicate wins."""
+    _CallState.calls = 0
+
+    def task(x):
+        _CallState.calls += 1
+        if _CallState.calls == 4:  # the 4th invocation stalls (straggler)
+            time.sleep(0.8)
+        return np.asarray(x) + 1
+
+    cfg = ExecutorConfig(
+        max_workers=2, speculation_factor=3.0, speculation_min_samples=3
+    )
+    spec = FunctionSpec(name="stage", fn=task, jit=False)
+    with ServerlessExecutor(cfg) as ex:
+        for _ in range(3):  # prior runs build the per-fingerprint baseline
+            ex.run(spec, np.ones(2))
+        assert ex.stats()["speculated"] == 0
+        t0 = time.perf_counter()
+        out = ex.run(spec, np.ones(2))
+        elapsed = time.perf_counter() - t0
+        np.testing.assert_allclose(np.asarray(out), 2.0)
+        assert ex.stats()["speculated"] == 1
+        # the duplicate finished long before the 0.8 s straggler would have
+        assert elapsed < 0.5
+
+
+def test_single_task_without_history_never_speculates():
+    def slowish(x):
+        time.sleep(0.05)
+        return np.asarray(x) + 1
+
+    cfg = ExecutorConfig(
+        max_workers=2, speculation_factor=1.01, speculation_min_samples=3
+    )
+    spec = FunctionSpec(name="fresh", fn=slowish, jit=False)
+    with ServerlessExecutor(cfg) as ex:
+        ex.run(spec, np.ones(2))
+        ex.run(spec, np.ones(2))  # still below min_samples
+        assert ex.stats()["speculated"] == 0
+
+
+def test_single_task_speculation_all_racers_fail():
+    """When the speculated duplicate AND the original both exhaust their
+    retries on the run() path, exactly one TaskFailure surfaces with the
+    attempt ledger accounted across both containers."""
+    inj = FaultInjector(crash_delay_s={"flaky": 0.3})
+    cfg = ExecutorConfig(
+        max_workers=2,
+        max_retries=1,  # 2 attempts per racer
+        retry_backoff_s=0.001,
+        speculation_factor=1.5,
+        speculation_min_samples=2,
+    )
+    spec = FunctionSpec(name="flaky", fn=lambda x: np.asarray(x) + 1, jit=False)
+    with ServerlessExecutor(cfg, fault_injector=inj) as ex:
+        for _ in range(2):  # healthy warm-up runs build the baseline
+            ex.run(spec, np.ones(2))
+        inj.failures["flaky"] = 99  # now every attempt crashes (slowly)
+        with pytest.raises(TaskFailure):
+            ex.run(spec, np.ones(2))
+        assert ex.stats()["speculated"] == 1
+        failed = [r for r in ex.records if r.name == "flaky" and r.duration_s == 0.0]
+        assert sum(r.attempts for r in failed) == 4  # 2 racers x 2 attempts
+
+
 def test_cost_model_tiers():
     cm = CostModel()
     small = cm.request_for_scan(10 << 20)  # 10MB scan

@@ -99,6 +99,30 @@ def test_scan_residual_predicate_exact(fmt, rng):
     np.testing.assert_array_equal(out["fare"], expected)
 
 
+def test_content_fingerprint_invariant_to_shard_layout(fmt, rng):
+    """The differential-cache input identity: same rows in the same order
+    -> same content fingerprint, regardless of shard boundaries (what
+    keeps the cache warm across `repro compact`)."""
+    data = make_table(1000, rng)
+    snap = fmt.write("t", SCHEMA, data)
+    wide = TableFormat(fmt.store, shard_rows=1000)
+    resharded = wide.write("t", SCHEMA, data)
+    assert resharded.snapshot_id != snap.snapshot_id  # layout differs...
+    assert fmt.content_fingerprint(resharded) == fmt.content_fingerprint(snap)
+    # ...but content identity is the same; compaction is the same story
+    compacted, merged = wide.compact_snapshot(snap, target_rows=500)
+    assert merged > 0
+    assert fmt.content_fingerprint(compacted) == fmt.content_fingerprint(snap)
+    # different data (or order) is a different identity
+    reordered = {c: v[::-1].copy() for c, v in data.items()}
+    other = fmt.write("t", SCHEMA, reordered)
+    assert fmt.content_fingerprint(other) != fmt.content_fingerprint(snap)
+    # memoized: the second call is a ref read, not a table scan
+    gets_before = fmt.store.stats.gets
+    fmt.content_fingerprint(snap)
+    assert fmt.store.stats.gets == gets_before
+
+
 def test_schema_validation_errors(fmt, rng):
     data = make_table(10, rng)
     bad = dict(data)
