@@ -1,5 +1,8 @@
 """Cross-run differential artifact cache (FaaS & Furious, arXiv 2411.08203).
 
+Constructed entirely through the SDK facade (``repro.api.Client``) — the
+benchmark is also a smoke test of the one-construction-path invariant.
+
 The claim under test: the cache is keyed at **logical-node** granularity
 (node code + upstream node fingerprints + input content hashes + params),
 independent of the physical planner's fusion grouping, so
@@ -23,36 +26,17 @@ from __future__ import annotations
 
 import argparse
 import json
-import tempfile
 import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from benchmarks.common import row
-from repro.catalog import Catalog
-from repro.core import Pipeline, PlannerConfig, Runner, requirements
-from repro.io import ObjectStore
-from repro.runtime import ExecutorConfig, ServerlessExecutor
-from repro.table import Schema, TableFormat
+from repro.api import Client
+from repro.core import Pipeline, PlannerConfig, requirements
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
+from repro.runtime import ExecutorConfig
 
-TAXI_SCHEMA = Schema.of(
-    pickup_at="int32",
-    pickup_location_id="int32",
-    passenger_count="int32",
-    dropoff_location_id="int32",
-)
-APRIL_1 = 17987  # days since epoch for 2019-04-01
-
-
-def _make_data(n: int, rng: np.random.Generator):
-    days = np.sort(rng.integers(APRIL_1 - 60, APRIL_1 + 30, n)).astype(np.int32)
-    return {
-        "pickup_at": days,
-        "pickup_location_id": rng.integers(0, 64, n).astype(np.int32),
-        "passenger_count": rng.poisson(30.0, n).astype(np.int32),
-        "dropoff_location_id": rng.integers(0, 64, n).astype(np.int32),
-    }
 
 
 def _build_pipeline(order: str = "DESC") -> Pipeline:
@@ -86,36 +70,36 @@ def _build_pipeline(order: str = "DESC") -> Pipeline:
 
 
 def run(n: int = 400_000, json_path: Optional[str] = None) -> List[str]:
-    store = ObjectStore(tempfile.mkdtemp())
-    catalog = Catalog(store)
-    fmt = TableFormat(store, shard_rows=65536)
     rng = np.random.default_rng(0)
-    snap = fmt.write("taxi_table", TAXI_SCHEMA, _make_data(n, rng))
-    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
 
-    def timed_run(runner, pipeline, branch, **kw):
+    def timed_run(client, pipeline, branch, **kw):
         kw.setdefault("fusion", False)
         kw.setdefault("pushdown", False)
         t0 = time.perf_counter()
-        res = runner.run(pipeline, branch=branch, cache=True, **kw)
+        res = client.run(pipeline, branch=branch, cache=True, **kw)
+        res.raise_for_state()
         return time.perf_counter() - t0, res
 
-    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
-        runner = Runner(catalog, fmt, ex)
-        t_cold, cold = timed_run(runner, _build_pipeline(), "cold")
-        t_warm, warm = timed_run(runner, _build_pipeline(), "warm")
-        t_edit, edit = timed_run(runner, _build_pipeline(order="ASC"), "edited")
+    with Client.ephemeral(
+        shard_rows=65536,
+        executor_config=ExecutorConfig(max_workers=2),
+    ) as client:
+        client.write_table("taxi_table", make_taxi_data(n, rng),
+                           schema=TAXI_SCHEMA)
+        t_cold, cold = timed_run(client, _build_pipeline(), "cold")
+        t_warm, warm = timed_run(client, _build_pipeline(), "warm")
+        t_edit, edit = timed_run(client, _build_pipeline(order="ASC"), "edited")
         # the tentpole scenarios: flip the planner config on the warm lake
         t_flip, flip = timed_run(
-            runner, _build_pipeline(), "flip_fused", fusion=True, pushdown=True
+            client, _build_pipeline(), "flip_fused", fusion=True, pushdown=True
         )
         t_cap, cap = timed_run(
-            runner, _build_pipeline(), "flip_capped",
+            client, _build_pipeline(), "flip_capped",
             planner_config=PlannerConfig(fusion=True, max_stage_nodes=1),
         )
 
     stats = {
-        name: r.stats["cache"]
+        name: r.cache
         for name, r in (
             ("cold", cold), ("warm", warm), ("edited", edit),
             ("fusion_flip", flip), ("max_stage_nodes_flip", cap),

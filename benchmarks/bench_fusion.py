@@ -7,31 +7,25 @@ several data scales, reporting wall time and object-store traffic.
 """
 from __future__ import annotations
 
-import tempfile
 from typing import List
 
 import numpy as np
 
 from benchmarks.common import bench, row
-from repro.catalog import Catalog
-from repro.core import Runner
-from repro.io import ObjectStore
-from repro.runtime import ExecutorConfig, ServerlessExecutor
-from repro.table import TableFormat
-from tests.helpers_taxi import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
+from repro.api import Client
+from repro.examples_data import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
+from repro.runtime import ExecutorConfig
 
 
 def run(sizes=(10_000, 100_000, 500_000)) -> List[str]:
     out = []
     for n in sizes:
-        store = ObjectStore(tempfile.mkdtemp())
-        catalog = Catalog(store)
-        fmt = TableFormat(store, shard_rows=65536)
         rng = np.random.default_rng(0)
-        snap = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(n, rng))
-        catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
-        with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
-            runner = Runner(catalog, fmt, ex)
+        with Client.ephemeral(
+            shard_rows=65536, executor_config=ExecutorConfig(max_workers=2)
+        ) as client:
+            client.write_table("taxi_table", make_taxi_data(n, rng),
+                               schema=TAXI_SCHEMA)
             branch_id = [0]
 
             def run_mode(fusion: bool):
@@ -39,13 +33,13 @@ def run(sizes=(10_000, 100_000, 500_000)) -> List[str]:
                 # cache=False: this benchmark measures genuine recompute
                 # cost; the (default-on) differential cache would turn
                 # every repeat into a restore and flatten the comparison
-                return runner.run(
+                return client.run(
                     build_taxi_pipeline(),
                     branch=f"b{branch_id[0]}_{fusion}",
                     fusion=fusion,
                     pushdown=fusion,
                     cache=False,
-                )
+                ).raise_for_state()
 
             t_fused = bench(lambda: run_mode(True), warmup=1, iters=3)
             t_naive = bench(lambda: run_mode(False), warmup=1, iters=3)
@@ -53,8 +47,7 @@ def run(sizes=(10_000, 100_000, 500_000)) -> List[str]:
             res_n = run_mode(False)
         speedup = t_naive / t_fused
         io_ratio = (
-            res_n.stats["io"]["bytes_written"]
-            / max(res_f.stats["io"]["bytes_written"], 1)
+            res_n.io["bytes_written"] / max(res_f.io["bytes_written"], 1)
         )
         out.append(
             row(

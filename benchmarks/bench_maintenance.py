@@ -14,37 +14,18 @@ finish faster, with identical rows.
 """
 from __future__ import annotations
 
-import tempfile
 import time
 from typing import List
 
 import numpy as np
 
 from benchmarks.common import bench, row
-from repro.catalog import Catalog
-from repro.core import Pipeline, Runner, StageCacheRegistry, requirements
+from repro.api import Client
+from repro.core import Pipeline, requirements
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
 from repro.io import ObjectStore
-from repro.maintenance import EvictionPolicy, collect_garbage, compact_table, prune_cache
-from repro.runtime import ExecutorConfig, ServerlessExecutor
-from repro.table import Schema, TableFormat
+from repro.runtime import ExecutorConfig
 
-TAXI_SCHEMA = Schema.of(
-    pickup_at="int32",
-    pickup_location_id="int32",
-    passenger_count="int32",
-    dropoff_location_id="int32",
-)
-APRIL_1 = 17987
-
-
-def _make_data(n: int, rng: np.random.Generator):
-    days = np.sort(rng.integers(APRIL_1 - 60, APRIL_1 + 30, n)).astype(np.int32)
-    return {
-        "pickup_at": days,
-        "pickup_location_id": rng.integers(0, 64, n).astype(np.int32),
-        "passenger_count": rng.poisson(30.0, n).astype(np.int32),
-        "dropoff_location_id": rng.integers(0, 64, n).astype(np.int32),
-    }
 
 
 def _build_pipeline(since: str) -> Pipeline:
@@ -78,41 +59,38 @@ def _store_bytes(store: ObjectStore) -> int:
 
 
 def _bench_gc(n: int) -> List[str]:
-    store = ObjectStore(tempfile.mkdtemp())
-    catalog = Catalog(store)
-    fmt = TableFormat(store, shard_rows=16384)
     rng = np.random.default_rng(0)
-    snap = fmt.write("taxi_table", TAXI_SCHEMA, _make_data(n, rng))
-    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
-
     dates = ["2019-02-01", "2019-02-05", "2019-02-09", "2019-02-13"]
-    with ServerlessExecutor(ExecutorConfig(max_workers=2)) as ex:
-        runner = Runner(catalog, fmt, ex)
+    with Client.ephemeral(
+        shard_rows=16384, executor_config=ExecutorConfig(max_workers=2)
+    ) as client:
+        client.write_table("taxi_table", make_taxi_data(n, rng),
+                           schema=TAXI_SCHEMA)
         for since in dates:
-            res = runner.run(
+            res = client.run(
                 _build_pipeline(since), branch="main",
                 fusion=False, pushdown=False, cache=True,
-            )
-        baseline = runner.query("SELECT pickup_location_id, counts FROM pickups")
+            ).raise_for_state()
+        baseline = client.query("SELECT pickup_location_id, counts FROM pickups")
 
+        store = client.store
         before = _store_bytes(store)
-        registry = StageCacheRegistry(store)
         budget = sum(
-            e.output_bytes for e in registry.entries().values()
+            e.output_bytes for e in client.cache.stats()["items"].values()
             if e.run_id == res.run_id
         )
-        prune_cache(registry, EvictionPolicy(max_bytes=budget))
+        client.cache.prune(max_bytes=budget)
         t0 = time.perf_counter()
-        report = collect_garbage(store, catalog, fmt, history=1, grace_s=0.0)
+        report = client.gc(history=1, grace_s=0.0)
         gc_wall = time.perf_counter() - t0
         after = _store_bytes(store)
 
-        out = runner.query("SELECT pickup_location_id, counts FROM pickups")
+        out = client.query("SELECT pickup_location_id, counts FROM pickups")
         assert np.array_equal(out["counts"], baseline["counts"]), "gc broke the head!"
-        warm = runner.run(
+        warm = client.run(
             _build_pipeline(dates[-1]), branch="main",
             fusion=False, pushdown=False, cache=True,
-        )
+        ).raise_for_state()
 
     frac = 1.0 - after / before
     assert frac >= 0.5, f"gc only reclaimed {frac:.1%} (target >=50%)"
@@ -127,27 +105,22 @@ def _bench_gc(n: int) -> List[str]:
         row(
             f"gc_post_sweep_warm_run_n{n}",
             0.0,
-            f"cache_hits={warm.stats['cache']['hits']};"
-            f"stages_executed={warm.stats['cache']['stages_executed']};"
+            f"cache_hits={warm.cache['hits']};"
+            f"stages_executed={warm.cache['stages_executed']};"
             f"head_bit_identical=True",
         ),
     ]
 
 
 def _bench_compaction(n: int, append_rows: int) -> List[str]:
-    store = ObjectStore(tempfile.mkdtemp())
-    catalog = Catalog(store)
-    fmt = TableFormat(store, shard_rows=max(n, 1))
+    client = Client.ephemeral(shard_rows=max(n, 1))
+    store, catalog, fmt = client.store, client.catalog, client.fmt
     rng = np.random.default_rng(1)
-    data = _make_data(n, rng)
-    snap = None
+    data = make_taxi_data(n, rng)
     for start in range(0, n, append_rows):
         chunk = {c: v[start:start + append_rows] for c, v in data.items()}
-        snap = fmt.write(
-            "taxi_table", TAXI_SCHEMA, chunk,
-            parent=snap, append=snap is not None,
-        )
-    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+        client.write_table("taxi_table", chunk, schema=TAXI_SCHEMA,
+                           append=start > 0)
 
     def scan():
         key = catalog.table_key("taxi_table")
@@ -157,7 +130,7 @@ def _bench_compaction(n: int, append_rows: int) -> List[str]:
     t_before = bench(scan, warmup=1, iters=5)
     gets_before = (store.stats.gets - gets0) // 6
 
-    report = compact_table(catalog, fmt, "taxi_table")
+    report = client.compact("taxi_table")[0]
     fragmented = fmt.read(fmt.load_snapshot(
         catalog.table_key("taxi_table", commit_id=catalog.head("main").parent_id)
     ))

@@ -1,75 +1,64 @@
-"""Quickstart: the lakehouse in 60 seconds.
+"""Quickstart: the lakehouse in 60 seconds — one client, three decorators.
 
 Builds a lake, seeds a table, runs a two-node pipeline with an
 expectation on a feature branch, queries the result with time travel.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
-import tempfile
-
 import numpy as np
 
-from repro.catalog import Catalog
-from repro.core import Pipeline, Runner
-from repro.io import ObjectStore
-from repro.runtime import ServerlessExecutor
-from repro.table import Schema, TableFormat
+import repro
+
+# --- declare a pipeline: implicit DAG, one artifact per node
+revenue = repro.project("revenue_report")
+
+revenue.sql(
+    "big_orders",
+    "SELECT user_id, country, amount FROM orders WHERE amount >= 100",
+)
+
+
+@revenue.expectation()
+def big_orders_expectation(ctx, big_orders):
+    return big_orders.min("amount") >= 100.0  # audit the artifact
+
+
+revenue.sql(
+    "revenue_by_country",
+    "SELECT country, SUM(amount) AS revenue, COUNT(*) AS n "
+    "FROM big_orders GROUP BY country ORDER BY revenue DESC",
+)
 
 
 def main() -> None:
-    # --- a lake, a catalog, a serverless executor
-    store = ObjectStore(tempfile.mkdtemp())
-    catalog = Catalog(store)
-    fmt = TableFormat(store)
     rng = np.random.default_rng(0)
+    with repro.Client.ephemeral() as client:
+        # --- seed raw data on main
+        client.write_table(
+            "orders",
+            {
+                "user_id": rng.integers(0, 1000, 50_000).astype(np.int32),
+                "amount": (rng.random(50_000) * 200).astype(np.float32),
+                "country": rng.integers(0, 30, 50_000).astype(np.int32),
+            },
+            message="seed",
+        )
 
-    # --- seed raw data on main
-    schema = Schema.of(user_id="int32", amount="float32", country="int32")
-    snap = fmt.write(
-        "orders",
-        schema,
-        {
-            "user_id": rng.integers(0, 1000, 50_000).astype(np.int32),
-            "amount": (rng.random(50_000) * 200).astype(np.float32),
-            "country": rng.integers(0, 30, 50_000).astype(np.int32),
-        },
-    )
-    catalog.commit("main", {"orders": fmt.manifest_key(snap)}, message="seed")
-
-    # --- declare a pipeline: implicit DAG, one artifact per node
-    p = Pipeline("revenue_report")
-    p.sql(
-        "big_orders",
-        "SELECT user_id, country, amount FROM orders WHERE amount >= 100",
-    )
-
-    @p.python
-    def big_orders_expectation(ctx, big_orders):
-        return big_orders.min("amount") >= 100.0  # audit the artifact
-
-    p.sql(
-        "revenue_by_country",
-        "SELECT country, SUM(amount) AS revenue, COUNT(*) AS n "
-        "FROM big_orders GROUP BY country ORDER BY revenue DESC",
-    )
-
-    with ServerlessExecutor() as ex:
-        runner = Runner(catalog, fmt, ex)
-        result = runner.run(p, branch="feat_revenue")  # transform-audit-write
-        print(f"run {result.run_id}: merged={result.ok} checks={result.checks}")
+        # --- transform-audit-write on a feature branch (kept, not merged)
+        feat = client.branch("feat_revenue", ephemeral=False)
+        result = feat.run(revenue).raise_for_state()
+        print(f"run {result.run_id}: state={result.state} "
+              f"checks={result.checks}")
         print(result.plan.describe())
 
         # --- synchronous Query+Wrangle against the new artifact
-        top = runner.query(
-            "SELECT country, revenue FROM revenue_by_country LIMIT 3",
-            branch="feat_revenue",
-        )
+        top = feat.query("SELECT country, revenue FROM revenue_by_country LIMIT 3")
         print("top countries:", dict(zip(top["country"].tolist(),
                                          np.round(top["revenue"]).tolist())))
 
         # --- production (main) never saw any of it
-        assert "revenue_by_country" not in catalog.tables(branch="main")
-        print("main untouched:", sorted(catalog.tables(branch='main')))
+        assert "revenue_by_country" not in client.tables("main")
+        print("main untouched:", sorted(client.tables("main")))
 
 
 if __name__ == "__main__":

@@ -1,72 +1,109 @@
-"""The paper's Appendix pipeline, end to end (Fig. 3 + Fig. 4).
+"""The paper's Appendix pipeline, end to end — SDK edition (Fig. 3 + 4).
 
-SQL text is verbatim from the paper; the Python expectation uses the
-`@requirements` decorator exactly as printed.  Demonstrates: implicit
-DAG, filter pushdown + fusion (compare the two plans), ephemeral-branch
-atomicity on audit failure, and run replay.
+SQL text is verbatim from the paper; the expectation uses the
+``@repro.requirements`` decorator exactly as printed.  The whole platform
+is constructed through ``repro.Client`` and the DAG is assembled from
+decorator registrations — no ObjectStore/Catalog/Runner wiring, exactly
+the "functions are all you need" surface of 4.1.
 
-Run: PYTHONPATH=src:. python examples/taxi_pipeline.py
+Demonstrates: decorator-declared models, branch-scoped sessions
+(merge-on-success / rollback-on-audit-failure), fusion + pushdown
+(compare the two plans), typed RunHandles, and run replay.
+
+Run: PYTHONPATH=src python examples/taxi_pipeline.py
 """
-import sys
-import tempfile
-from pathlib import Path
-
 import numpy as np
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+import repro
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
 
-from repro.catalog import Catalog
-from repro.core import ExpectationFailed, Runner
-from repro.io import ObjectStore
-from repro.runtime import ServerlessExecutor
-from repro.table import TableFormat
-from tests.helpers_taxi import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
+# ----------------------------------------------------------------- the DAG
+taxi = repro.project("taxi_demo")
+
+taxi.sql(
+    "trips",
+    """
+    SELECT
+     pickup_location_id,
+     passenger_count as count,
+     dropoff_location_id
+    FROM
+     taxi_table
+    WHERE
+     pickup_at >= '2019-04-01'
+    """,
+)
+
+
+@taxi.expectation()
+@repro.requirements({"pandas": "2.0.0"})
+def trips_expectation(ctx, trips):
+    return trips.mean("count") > 10.0
+
+
+taxi.sql(
+    "pickups",
+    """
+    SELECT
+     pickup_location_id,
+     dropoff_location_id,
+     COUNT(*) AS counts
+    FROM
+     trips
+    GROUP BY
+     pickup_location_id,
+     dropoff_location_id
+    ORDER BY
+     counts DESC
+    """,
+)
 
 
 def main() -> None:
-    store = ObjectStore(tempfile.mkdtemp())
-    catalog = Catalog(store)
-    fmt = TableFormat(store, shard_rows=8192)
     rng = np.random.default_rng(0)
-    snap = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(100_000, rng))
-    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    with repro.Client.ephemeral(shard_rows=8192) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(100_000, rng), schema=TAXI_SCHEMA
+        )
 
-    with ServerlessExecutor() as ex:
-        runner = Runner(catalog, fmt, ex)
-
-        # fused run (the paper's optimized physical plan)
-        res = runner.run(build_taxi_pipeline(), branch="feat_1")
-        print("== fused plan ==")
-        print(res.plan.describe())
-        print(f"io: {res.stats['io']}")
+        # fused run on a feature branch (the paper's optimized plan);
+        # the branch handle merges into main on clean exit
+        with client.branch("feat_1") as branch:
+            res = branch.run(taxi).raise_for_state()
+            print("== fused plan ==")
+            print(res.plan.describe())
+            print(f"io: {res.io}")
+        assert "pickups" in client.tables("main")  # merged on success
 
         # naive isomorphic plan (the paper's first version) for contrast —
         # cache=False so the comparison measures genuine recompute (the
         # default-on node cache would plan around the fused run's outputs)
-        res_naive = runner.run(
-            build_taxi_pipeline(), branch="feat_naive", fusion=False,
-            pushdown=False, cache=False,
+        res_naive = client.run(
+            taxi, branch="feat_naive", fusion=False, pushdown=False,
+            cache=False,
         )
         print("== isomorphic plan ==")
         print(res_naive.plan.describe())
-        print(f"io: {res_naive.stats['io']}")
-        ratio = res_naive.stats["io"]["bytes_written"] / max(
-            res.stats["io"]["bytes_written"], 1
-        )
+        print(f"io: {res_naive.io}")
+        ratio = res_naive.io["bytes_written"] / max(res.io["bytes_written"], 1)
         print(f"fusion avoided {ratio:.1f}x object-store writes")
 
-        # audit failure → rollback (nothing merges)
+        # audit failure → typed AUDIT_FAILED handle, branch rolled back
         low = make_taxi_data(5_000, rng, mean_count=1.0)
-        bad = fmt.write("taxi_table", TAXI_SCHEMA, low)
-        catalog.commit("main", {"taxi_table": fmt.manifest_key(bad)})
-        try:
-            runner.run(build_taxi_pipeline(), branch="main")
-        except ExpectationFailed as e:
-            print(f"audit failed as expected: {e}")
-        assert "pickups" not in catalog.tables(branch="main")
+        main_head = client.catalog.head("main").commit_id
+        with client.branch("feat_bad") as bad_branch:
+            bad_branch.write_table("taxi_table", low, schema=TAXI_SCHEMA)
+            failed = bad_branch.run(taxi)
+            assert failed.state is repro.RunState.AUDIT_FAILED
+            print(f"audit failed as expected: {failed.failed_checks}")
+        # rollback: the branch is gone and main never saw the bad data —
+        # its head did not move and taxi_table still has the full 100k rows
+        assert "feat_bad" not in client.branches()
+        assert client.catalog.head("main").commit_id == main_head
+        assert client.query("SELECT COUNT(*) AS n FROM taxi_table")["n"][0] == 100_000
 
         # replay: same code, same data version, identical artifacts
-        again = runner.replay(build_taxi_pipeline(), res.run_id)
+        again = client.replay(res.run_id, taxi)
         assert again.artifacts == res.artifacts
         print(f"replay of run {res.run_id} is bit-identical "
               f"({len(again.artifacts)} artifacts)")

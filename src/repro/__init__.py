@@ -1,0 +1,77 @@
+"""repro — a serverless data lakehouse from spare parts (paper reproduction).
+
+The public SDK is deliberately tiny (the paper's "functions are all you
+need", 4.1): one client, three decorators, typed handles::
+
+    import repro
+
+    client = repro.Client("/path/to/lake")      # or Client.ephemeral()
+
+    repro.sql("trips", "SELECT ... FROM taxi_table WHERE ...")
+
+    @repro.model()
+    def pickups(ctx, trips): ...
+
+    @repro.expectation()
+    def trips_are_plausible(ctx, trips): ...
+
+    with client.branch("feat_1") as branch:     # merge-on-success
+        handle = branch.run("my_module")        # import a module, get a DAG
+        assert handle.state == repro.RunState.SUCCESS
+
+Imports are lazy (PEP 562) so ``import repro`` stays cheap; subsystem
+packages remain importable directly (``repro.core.Runner`` is the
+internal engine — ``repro.Runner`` is a deprecated alias of it).
+"""
+from typing import Any
+
+__version__ = "0.2.0"
+
+#: public name -> (module, attribute) — resolved on first access
+_EXPORTS = {
+    "Client": ("repro.api", "Client"),
+    "BranchHandle": ("repro.api", "BranchHandle"),
+    "RunHandle": ("repro.api", "RunHandle"),
+    "RunState": ("repro.api", "RunState"),
+    "RunFailed": ("repro.api", "RunFailed"),
+    "Project": ("repro.api", "Project"),
+    "project": ("repro.api", "project"),
+    "model": ("repro.api", "model"),
+    "expectation": ("repro.api", "expectation"),
+    "sql": ("repro.api", "sql"),
+    "requirements": ("repro.api", "requirements"),
+    "discover": ("repro.api", "discover"),
+    "Pipeline": ("repro.core", "Pipeline"),
+    "Schema": ("repro.table", "Schema"),
+}
+
+__all__ = ["__version__", *sorted(_EXPORTS)]
+
+
+def __getattr__(name: str) -> Any:
+    if name in _EXPORTS:
+        import importlib
+
+        module, attr = _EXPORTS[name]
+        value = getattr(importlib.import_module(module), attr)
+        globals()[name] = value  # cache: resolve once
+        return value
+    if name == "Runner":
+        # thin deprecation shim: the engine stays importable, the facade
+        # is the supported construction path
+        import warnings
+
+        warnings.warn(
+            "repro.Runner is deprecated — construct the platform through "
+            "repro.Client (the engine remains at repro.core.Runner)",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.core import Runner
+
+        return Runner
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__() -> list:
+    return sorted(set(globals()) | set(_EXPORTS) | {"Runner"})

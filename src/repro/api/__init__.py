@@ -1,0 +1,35 @@
+"""The unified SDK facade — ``repro.Client`` and the decorator surface.
+
+Everything user code needs lives here; the subsystem packages
+(``repro.core``, ``repro.catalog``, ``repro.table``, ``repro.runtime``,
+``repro.maintenance``) are the engine room.
+"""
+from repro.api.client import BranchHandle, CacheMaintenance, Client
+from repro.api.handles import RunFailed, RunHandle, RunState
+from repro.api.project import (
+    Project,
+    discover,
+    expectation,
+    model,
+    project,
+    requirements,
+    resolve_pipeline,
+    sql,
+)
+
+__all__ = [
+    "BranchHandle",
+    "CacheMaintenance",
+    "Client",
+    "Project",
+    "RunFailed",
+    "RunHandle",
+    "RunState",
+    "discover",
+    "expectation",
+    "model",
+    "project",
+    "requirements",
+    "resolve_pipeline",
+    "sql",
+]

@@ -1,0 +1,537 @@
+"""``repro.Client`` — the one construction path onto the platform.
+
+The paper's pitch (4.1, 4.6) is that the entire lakehouse hides behind a
+single Python client: no ``ObjectStore → Catalog → TableFormat →
+ServerlessExecutor → Runner`` constructor soup in user code.  The Client
+owns that wiring and exposes every surface on one object:
+
+* data:        ``write_table / query / tables / log / tag``
+* branches:    ``branch("feat_1")`` → a ``BranchHandle`` context manager
+  (ephemeral by default — merge on success, roll back on audit failure)
+* pipelines:   ``run / replay`` returning a typed ``RunHandle``
+* maintenance: ``gc() / compact() / cache.stats() / cache.prune()``
+
+``Runner`` remains importable from ``repro.core`` as the internal engine;
+``repro.Runner`` is a deprecation shim pointing here.
+
+On open the Client also loads the executor's per-fingerprint speculation
+latency history from the lake (``latencyhist`` namespace) and persists it
+back after every run — a fresh process inherits straggler baselines
+instead of re-learning them (ROADMAP item, closed).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from pathlib import Path
+from types import ModuleType
+from typing import Any, Dict, List, Optional, Union
+
+import numpy as np
+
+from repro.api.handles import RunHandle, RunState
+from repro.api.project import Project, resolve_pipeline
+from repro.catalog.nessie import Catalog, Commit
+from repro.core.physical import PlannerConfig
+from repro.core.pipeline import Pipeline
+from repro.core.runner import ExpectationFailed, Runner, RunResult
+from repro.core.snapshot import NodeCacheRegistry
+from repro.io.objectstore import ObjectStore
+from repro.maintenance import (
+    CompactionReport,
+    EvictionPolicy,
+    EvictionReport,
+    GCReport,
+    collect_garbage,
+    compact_branch,
+    compact_table,
+    prune_cache,
+)
+from repro.runtime.executor import ExecutorConfig, ServerlessExecutor
+from repro.table.format import Snapshot, TableFormat
+from repro.table.schema import Schema
+from repro.utils.logging import get_logger
+
+log = get_logger("api.client")
+
+#: lake namespace persisting the executor's per-fingerprint latency
+#: history (straggler-speculation baselines survive process restarts)
+_LATENCY_NS = "latencyhist"
+
+RunTarget = Union[Pipeline, Project, str, Path, ModuleType]
+
+
+class CacheMaintenance:
+    """``client.cache`` — the differential cache's maintenance face."""
+
+    def __init__(self, client: "Client"):
+        self._client = client
+
+    @property
+    def registry(self) -> NodeCacheRegistry:
+        # the registry is stateless over the store, so maintenance verbs
+        # must not force an executor/runner into existence to reach it
+        return self._client.cache_registry
+
+    def stats(self) -> Dict[str, Any]:
+        """Registry size + entry listing (what ``repro cache stats`` prints)."""
+        items = self.registry.entries()
+        return {
+            "entries": len(items),
+            "total_bytes": sum(e.output_bytes for e in items.values()),
+            "items": items,
+        }
+
+    def prune(
+        self,
+        *,
+        max_bytes: Optional[int] = None,
+        ttl_s: Optional[float] = None,
+        dry_run: bool = False,
+    ) -> EvictionReport:
+        """Evict entries by LRU within a byte budget and/or TTL."""
+        return prune_cache(
+            self.registry,
+            EvictionPolicy(max_bytes=max_bytes, ttl_s=ttl_s),
+            dry_run=dry_run,
+        )
+
+
+class Client:
+    """One object, the whole platform.  ``Client(path)`` opens (or
+    initializes) a lake at ``path``; ``Client.ephemeral()`` gives a
+    throwaway tempdir lake for examples/tests/benchmarks."""
+
+    def __init__(
+        self,
+        path: Union[str, Path, None] = None,
+        *,
+        shard_rows: Optional[int] = None,
+        executor_config: Optional[ExecutorConfig] = None,
+        executor: Optional[ServerlessExecutor] = None,
+    ):
+        if path is None:
+            path = tempfile.mkdtemp(prefix="repro_lake_")
+        self.path = Path(path)
+        self.store = ObjectStore(self.path)
+        self.catalog = Catalog(self.store)
+        self.fmt = (
+            TableFormat(self.store, shard_rows=shard_rows)
+            if shard_rows is not None
+            else TableFormat(self.store)
+        )
+        self._executor_config = executor_config
+        self._executor = executor
+        self._owns_executor = executor is None
+        self._runner: Optional[Runner] = None
+        self.cache_registry = NodeCacheRegistry(self.store)
+        self._closed = False
+        #: last-persisted latency histories (skip unchanged refs on save)
+        self._persisted_history: Dict[str, tuple] = {}
+        if executor is not None:
+            self._load_latency_history()
+        self.cache = CacheMaintenance(self)
+
+    @classmethod
+    def ephemeral(cls, **kwargs: Any) -> "Client":
+        """A lake in a fresh temp directory (examples and tests)."""
+        return cls(None, **kwargs)
+
+    # ---------------------------------------------------------- lifecycle
+    @property
+    def executor(self) -> ServerlessExecutor:
+        if self._executor is None:
+            self._executor = ServerlessExecutor(self._executor_config)
+            self._load_latency_history()
+        return self._executor
+
+    @property
+    def runner(self) -> Runner:
+        """The internal engine (transform-audit-write orchestrator)."""
+        if self._runner is None:
+            self._runner = Runner(
+                self.catalog, self.fmt, self.executor,
+                cache_registry=self.cache_registry,
+            )
+        return self._runner
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        if self._executor is not None:
+            self._save_latency_history()
+            if self._owns_executor:
+                self._executor.shutdown()
+
+    def __enter__(self) -> "Client":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.close()
+
+    def __repr__(self) -> str:
+        return f"Client({str(self.path)!r})"
+
+    # ------------------------------------------------- latency persistence
+    def _load_latency_history(self) -> None:
+        """Seed the executor's speculation baselines from the lake."""
+        assert self._executor is not None
+        history = {
+            fp: [float(d) for d in raw.get("durations", [])]
+            for fp, raw in self.store.list_refs(_LATENCY_NS).items()
+        }
+        if history:
+            self._executor.seed_latency_history(history)
+            log.info(
+                "loaded latency baselines for %d function fingerprint(s)",
+                len(history),
+            )
+        self._persisted_history = {
+            fp: tuple(ds) for fp, ds in history.items()
+        }
+
+    def _save_latency_history(self) -> None:
+        """Persist changed histories (tiny JSON refs, one per fingerprint)."""
+        if self._executor is None:
+            return
+        for fp, durations in self._executor.latency_history().items():
+            snap = tuple(durations)
+            if self._persisted_history.get(fp) == snap:
+                continue
+            self.store.set_ref(
+                _LATENCY_NS, fp,
+                {"durations": list(durations), "updated_at": time.time()},
+            )
+            self._persisted_history[fp] = snap
+
+    # ------------------------------------------------------------ branches
+    def branch(
+        self,
+        name: str,
+        *,
+        base: str = "main",
+        ephemeral: Optional[bool] = None,
+    ) -> "BranchHandle":
+        """A branch-scoped view of the platform (context manager).
+
+        ``ephemeral=None`` (default) resolves to True when the handle has
+        to create the branch: on a clean ``with`` exit the branch merges
+        into ``base`` and disappears; an exception or a non-SUCCESS run
+        rolls it back instead (delete, no merge).  A pre-existing branch
+        defaults to non-ephemeral — the handle scopes, the exit touches
+        nothing.
+        """
+        return BranchHandle(self, name, base=base, ephemeral=ephemeral)
+
+    def branches(self) -> List[str]:
+        return self.catalog.branches()
+
+    def create_branch(
+        self, name: str, *, from_branch: Optional[str] = None
+    ) -> Commit:
+        return self.catalog.create_branch(name, from_branch=from_branch)
+
+    def log(self, branch: str = "main", *, limit: int = 50) -> List[Commit]:
+        return self.catalog.log(branch, limit=limit)
+
+    def tables(self, branch: str = "main") -> Dict[str, str]:
+        return self.catalog.tables(branch=branch)
+
+    def tag(self, name: str, *, branch: str = "main",
+            commit_id: Optional[str] = None) -> str:
+        """Pin a name to a commit (GC root, time-travel anchor)."""
+        target = commit_id or self.catalog.head(branch).commit_id
+        self.catalog.tag(name, target)
+        return target
+
+    def tags(self) -> Dict[str, str]:
+        return self.catalog.tags()
+
+    # ---------------------------------------------------------------- data
+    def write_table(
+        self,
+        name: str,
+        data: Dict[str, np.ndarray],
+        *,
+        branch: str = "main",
+        schema: Optional[Schema] = None,
+        append: bool = False,
+        message: Optional[str] = None,
+        author: str = "user",
+    ) -> Snapshot:
+        """Write columnar data as a table version and commit it.
+
+        The schema is inferred from the arrays unless given; ``append``
+        extends the branch's current version via structural sharing.
+        """
+        if schema is None:
+            schema = Schema.of(
+                **{c: str(np.asarray(v).dtype) for c, v in data.items()}
+            )
+        parent: Optional[Snapshot] = None
+        if append:
+            head_tables = self.catalog.tables(branch=branch)
+            if name in head_tables:
+                parent = self.fmt.load_snapshot(head_tables[name])
+        snap = self.fmt.write(
+            name, schema, data, parent=parent, append=parent is not None
+        )
+        self.catalog.commit(
+            branch,
+            {name: self.fmt.manifest_key(snap)},
+            message=message or f"write_table {name}",
+            author=author,
+        )
+        return snap
+
+    def query(
+        self,
+        sql: str,
+        *,
+        branch: Optional[str] = None,
+        commit_id: Optional[str] = None,
+    ) -> Dict[str, np.ndarray]:
+        """Synchronous SQL against a branch head or any commit."""
+        return self.runner.query(sql, branch=branch, commit_id=commit_id)
+
+    # ---------------------------------------------------------------- runs
+    def run(
+        self,
+        target: RunTarget,
+        *,
+        branch: str = "main",
+        params: Optional[Dict[str, Any]] = None,
+        fusion: bool = True,
+        pushdown: bool = True,
+        cache: bool = True,
+        base_commit: Optional[str] = None,
+        author: str = "user",
+        planner_config: Optional[PlannerConfig] = None,
+        raise_errors: bool = True,
+    ) -> RunHandle:
+        """Execute a pipeline/project/module with transform-audit-write.
+
+        Always returns a ``RunHandle``; an audit failure is a typed
+        ``AUDIT_FAILED`` outcome (run rolled back), never an exception.
+        Infrastructure/user-code errors raise unless ``raise_errors=False``
+        captures them into an ``ERROR`` handle.
+        """
+        pipeline = resolve_pipeline(target)
+        try:
+            result = self.runner.run(
+                pipeline,
+                branch=branch,
+                params=params,
+                fusion=fusion,
+                pushdown=pushdown,
+                cache=cache,
+                base_commit=base_commit,
+                author=author,
+                planner_config=planner_config,
+            )
+        except ExpectationFailed as e:
+            self._save_latency_history()
+            rec = e.record
+            return RunHandle(
+                state=RunState.AUDIT_FAILED,
+                run_id=rec.run_id if rec else -1,
+                branch=branch,
+                merged_commit=None,
+                artifacts=dict(rec.artifacts) if rec else {},
+                checks=dict(rec.checks) if rec else {},
+                stats=dict(rec.stats) if rec else {},
+                plan=e.plan,
+                _fmt=self.fmt,
+            )
+        except Exception as e:
+            self._save_latency_history()
+            if raise_errors:
+                raise
+            return RunHandle(
+                state=RunState.ERROR,
+                run_id=-1,
+                branch=branch,
+                merged_commit=None,
+                error=e,
+                _fmt=self.fmt,
+            )
+        self._save_latency_history()
+        return self._handle_from_result(result)
+
+    def replay(
+        self,
+        run_id: int,
+        target: RunTarget,
+        *,
+        strict_code: bool = True,
+    ) -> RunHandle:
+        """Re-execute a recorded run: same code, same data version."""
+        pipeline = resolve_pipeline(target)
+        result = self.runner.replay(pipeline, run_id, strict_code=strict_code)
+        self._save_latency_history()
+        handle = self._handle_from_result(result, replay_of=run_id)
+        return handle
+
+    def _handle_from_result(
+        self, result: RunResult, *, replay_of: Optional[int] = None
+    ) -> RunHandle:
+        # a merged run always audited clean, but replay re-executes WITHOUT
+        # an audit gate (it never merges) — a reproduced failing check must
+        # surface as AUDIT_FAILED, not ride a hardcoded SUCCESS
+        ok = all(result.checks.values())
+        return RunHandle(
+            state=RunState.SUCCESS if ok else RunState.AUDIT_FAILED,
+            run_id=result.run_id,
+            branch=result.branch,
+            merged_commit=result.merged_commit,
+            artifacts=dict(result.artifacts),
+            checks=dict(result.checks),
+            stats=dict(result.stats),
+            plan=result.plan,
+            replay_of=replay_of,
+            _fmt=self.fmt,
+        )
+
+    # ---------------------------------------------------------- maintenance
+    def gc(
+        self,
+        *,
+        history: Optional[int] = None,
+        grace_s: float = 900.0,
+        pin_ttl_s: Optional[float] = 86400.0,
+        latency_ttl_s: Optional[float] = 30 * 86400.0,
+        dry_run: bool = False,
+    ) -> GCReport:
+        """Mark-and-sweep unreachable objects (the lakekeeper's GC)."""
+        return collect_garbage(
+            self.store, self.catalog, self.fmt,
+            history=history, grace_s=grace_s,
+            pin_ttl_s=pin_ttl_s, latency_ttl_s=latency_ttl_s,
+            dry_run=dry_run,
+        )
+
+    def compact(
+        self,
+        table: Optional[str] = None,
+        *,
+        branch: str = "main",
+        target_rows: Optional[int] = None,
+        min_fill: float = 0.5,
+        dry_run: bool = False,
+    ) -> List[CompactionReport]:
+        """Merge small shards into larger ones (one table or the branch)."""
+        if table is not None:
+            return [compact_table(
+                self.catalog, self.fmt, table, branch=branch,
+                target_rows=target_rows, min_fill=min_fill, dry_run=dry_run,
+            )]
+        return compact_branch(
+            self.catalog, self.fmt, branch=branch,
+            target_rows=target_rows, min_fill=min_fill, dry_run=dry_run,
+        )
+
+
+class BranchHandle:
+    """A branch-scoped facade: the Client's surface with ``branch=`` fixed.
+
+    As a context manager it gives the paper's feature-branch workflow the
+    transactional shape of a run, one level up (Fig. 4): work lands on the
+    branch; a clean exit merges it into ``base`` atomically and deletes
+    the branch; an exception — or any run that did not SUCCEED — rolls
+    the whole branch back instead.  Dirty artifacts never reach ``base``.
+    """
+
+    def __init__(
+        self,
+        client: Client,
+        name: str,
+        *,
+        base: str = "main",
+        ephemeral: Optional[bool] = None,
+    ):
+        self.client = client
+        self.name = name
+        self.base = base
+        self._ephemeral = ephemeral
+        self._created = False
+        self._failed = False
+        self._entered = False
+
+    # ----------------------------------------------------------- lifecycle
+    def _ensure(self) -> None:
+        if not self.client.catalog.has_branch(self.name):
+            self.client.catalog.create_branch(self.name, from_branch=self.base)
+            self._created = True
+
+    @property
+    def ephemeral(self) -> bool:
+        return self._created if self._ephemeral is None else self._ephemeral
+
+    def __enter__(self) -> "BranchHandle":
+        self._ensure()
+        self._entered = True
+        return self
+
+    def __exit__(self, exc_type: Any, exc: Any, tb: Any) -> None:
+        self._entered = False
+        if not self.ephemeral:
+            return
+        if exc_type is not None or self._failed:
+            # rollback: the branch (and everything only it referenced)
+            # vanishes; base never sees it.  Blobs go at the next gc.
+            self.client.catalog.delete_branch(self.name)
+            log.info("rolled back ephemeral branch %r", self.name)
+            return
+        self.client.catalog.merge(
+            self.name, self.base,
+            message=f"merge branch {self.name}",
+            delete_source=True,
+        )
+        log.info("merged ephemeral branch %r into %r", self.name, self.base)
+
+    # ------------------------------------------------------- scoped surface
+    def run(self, target: RunTarget, **kwargs: Any) -> RunHandle:
+        self._ensure()
+        kwargs.setdefault("raise_errors", False)
+        handle = self.client.run(target, branch=self.name, **kwargs)
+        if not handle.ok:
+            self._failed = True
+        return handle
+
+    def replay(self, run_id: int, target: RunTarget, **kwargs: Any) -> RunHandle:
+        return self.client.replay(run_id, target, **kwargs)
+
+    def query(self, sql: str, **kwargs: Any) -> Dict[str, np.ndarray]:
+        self._ensure()
+        kwargs.setdefault("branch", self.name)
+        return self.client.query(sql, **kwargs)
+
+    def write_table(self, name: str, data: Dict[str, np.ndarray],
+                    **kwargs: Any) -> Snapshot:
+        self._ensure()
+        kwargs.setdefault("branch", self.name)
+        return self.client.write_table(name, data, **kwargs)
+
+    def tables(self) -> Dict[str, str]:
+        self._ensure()
+        return self.client.tables(branch=self.name)
+
+    def log(self, **kwargs: Any) -> List[Commit]:
+        self._ensure()
+        return self.client.log(self.name, **kwargs)
+
+    def tag(self, name: str, **kwargs: Any) -> str:
+        self._ensure()
+        kwargs.setdefault("branch", self.name)
+        return self.client.tag(name, **kwargs)
+
+    def head(self) -> Commit:
+        self._ensure()
+        return self.client.catalog.head(self.name)
+
+    def __repr__(self) -> str:
+        return (
+            f"BranchHandle({self.name!r}, base={self.base!r}, "
+            f"ephemeral={self.ephemeral})"
+        )

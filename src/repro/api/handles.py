@@ -1,0 +1,122 @@
+"""Typed run results — one handle, three states, lazy artifact reads.
+
+``Client.run`` (and ``BranchHandle.run``) always hands back a
+``RunHandle`` instead of the legacy mix of ``RunResult`` on success and
+``ExpectationFailed`` raised on audit failure:
+
+* ``SUCCESS``       — transform-audit-write completed, merged_commit set;
+* ``AUDIT_FAILED``  — an expectation failed, the ephemeral branch was
+  rolled back, nothing merged (a *domain outcome*, not an exception);
+* ``ERROR``         — the run itself blew up (infrastructure/user code);
+  raised by default, captured into a handle with ``raise_errors=False``.
+
+``artifact(name)`` reads lazily through the table format — nothing is
+deserialized until asked for.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.physical import PhysicalPlan
+from repro.table.format import TableFormat
+
+
+class RunState(str, enum.Enum):
+    SUCCESS = "SUCCESS"
+    AUDIT_FAILED = "AUDIT_FAILED"
+    ERROR = "ERROR"
+
+    def __str__(self) -> str:  # `print(handle.state)` reads cleanly
+        return self.value
+
+
+class RunFailed(RuntimeError):
+    """Raised by ``RunHandle.raise_for_state()`` on a non-SUCCESS handle."""
+
+    def __init__(self, handle: "RunHandle"):
+        detail = (
+            f"failed checks: {handle.failed_checks}"
+            if handle.state is RunState.AUDIT_FAILED
+            else repr(handle.error)
+        )
+        super().__init__(f"run {handle.run_id}: {handle.state} ({detail})")
+        self.handle = handle
+
+
+@dataclass
+class RunHandle:
+    """Everything a caller can ask about one run, success or not."""
+
+    state: RunState
+    run_id: int
+    branch: str
+    merged_commit: Optional[str]
+    #: artifact name -> snapshot manifest key (content-addressed)
+    artifacts: Dict[str, str] = field(default_factory=dict)
+    checks: Dict[str, bool] = field(default_factory=dict)
+    stats: Dict[str, Any] = field(default_factory=dict)
+    plan: Optional[PhysicalPlan] = None
+    #: set when this handle replays an earlier run (never merges)
+    replay_of: Optional[int] = None
+    #: the captured exception for ERROR handles
+    error: Optional[BaseException] = None
+    #: reader for lazy artifact access (bound by the Client)
+    _fmt: Optional[TableFormat] = None
+
+    # ------------------------------------------------------------- status
+    @property
+    def ok(self) -> bool:
+        return self.state is RunState.SUCCESS
+
+    @property
+    def failed_checks(self) -> List[str]:
+        return sorted(k for k, v in self.checks.items() if not v)
+
+    def raise_for_state(self) -> "RunHandle":
+        """Raise ``RunFailed`` unless the run succeeded; chainable."""
+        if self.state is not RunState.SUCCESS:
+            if self.error is not None:
+                raise RunFailed(self) from self.error
+            raise RunFailed(self)
+        return self
+
+    # --------------------------------------------------------------- data
+    @property
+    def cache(self) -> Dict[str, Any]:
+        """Node-level cache accounting (hits/rehydrated/elided/...)."""
+        return dict(self.stats.get("cache", {}))
+
+    @property
+    def io(self) -> Dict[str, int]:
+        """Object-store traffic this run moved (bytes/puts/gets deltas)."""
+        return dict(self.stats.get("io", {}))
+
+    def artifact(self, name: str) -> Dict[str, np.ndarray]:
+        """Lazily read one produced artifact as columnar numpy arrays.
+
+        Works for merged runs and replays; for an AUDIT_FAILED run the
+        manifest keys still resolve until a GC sweep reclaims the rolled-
+        back blobs (they are not rooted by any branch).
+        """
+        if name not in self.artifacts:
+            raise KeyError(
+                f"run {self.run_id} produced no artifact {name!r} "
+                f"(have {sorted(self.artifacts)})"
+            )
+        if self._fmt is None:
+            raise RuntimeError("handle is not bound to a table format")
+        return self._fmt.read(self._fmt.load_snapshot(self.artifacts[name]))
+
+    def __repr__(self) -> str:
+        merged = (
+            self.merged_commit[:12] if self.merged_commit else None
+        )
+        return (
+            f"RunHandle(run_id={self.run_id}, state={self.state}, "
+            f"branch={self.branch!r}, merged={merged}, "
+            f"artifacts={sorted(self.artifacts)})"
+        )

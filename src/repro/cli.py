@@ -1,6 +1,9 @@
 """The CLI — the paper's primary interaction surface (4.6).
 
-Mirrors the two core commands plus the git-like helpers:
+A thin argparse skin over ``repro.Client``: every verb constructs the
+platform through the SDK facade (one construction path — the CLI has no
+wiring of its own).  Mirrors the two core commands plus the git-like
+helpers:
 
   python -m repro.cli --lake /path/to/lake query -q "SELECT ..." [-b branch]
   python -m repro.cli --lake ... run pipeline_module.py [-b branch]
@@ -17,33 +20,16 @@ plus the lakekeeper maintenance verbs (repro.maintenance):
   python -m repro.cli --lake ... cache {prune,stats}
                                       [--max-bytes N] [--ttl S] [--dry-run]
 
-A pipeline module is a plain Python file defining ``PIPELINE`` (a
-``repro.core.Pipeline``) — the paper's "code in the IDE of choice".
+A pipeline module is a plain Python file — either the decorator SDK
+(``@repro.model()`` / ``@repro.expectation()`` / ``repro.sql``) or the
+legacy ``PIPELINE = repro.Pipeline(...)`` global ("code in the IDE of
+choice").
 """
 from __future__ import annotations
 
 import argparse
-import importlib.util
-import sys
-from pathlib import Path
 
-import numpy as np
-
-from repro.catalog import Catalog
-from repro.core import ExpectationFailed, Pipeline, Runner
-from repro.io import ObjectStore
-from repro.runtime import ServerlessExecutor
-from repro.table import TableFormat
-
-
-def _load_pipeline(path: str) -> Pipeline:
-    spec = importlib.util.spec_from_file_location("user_pipeline", path)
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)  # type: ignore[union-attr]
-    pipeline = getattr(mod, "PIPELINE", None)
-    if not isinstance(pipeline, Pipeline):
-        raise SystemExit(f"{path} must define PIPELINE = repro.core.Pipeline(...)")
-    return pipeline
+from repro.api import Client, RunState, resolve_pipeline
 
 
 def _print_table(rows: dict, *, limit: int = 20) -> None:
@@ -72,7 +58,7 @@ def main(argv=None) -> None:
     q.add_argument("--commit", default=None, help="time travel to a commit")
 
     r = sub.add_parser("run", help="execute a pipeline (transform-audit-write)")
-    r.add_argument("pipeline", help="python file defining PIPELINE")
+    r.add_argument("pipeline", help="python file: decorator SDK or PIPELINE global")
     r.add_argument("-b", "--branch", default="main")
     r.add_argument("--no-fusion", action="store_true")
     r.add_argument("--replay", action="store_true")
@@ -110,6 +96,10 @@ def main(argv=None) -> None:
     g.add_argument("--pin-ttl", type=float, default=86400.0, metavar="S",
                    help="ignore run pins older than S seconds "
                    "(leaked by crashed runs; default 1 day)")
+    g.add_argument("--latency-ttl", type=float, default=30 * 86400.0,
+                   metavar="S",
+                   help="drop speculation latency baselines not refreshed "
+                   "for S seconds (stale code fingerprints; default 30 days)")
 
     co = sub.add_parser("compact", help="merge small shards into larger ones")
     co.add_argument("table", nargs="?", default=None,
@@ -132,118 +122,105 @@ def main(argv=None) -> None:
     ca_sub.add_parser("stats", help="registry size and entry listing")
 
     args = ap.parse_args(argv)
-    store = ObjectStore(Path(args.lake))
-    catalog = Catalog(store)
-    fmt = TableFormat(store)
 
-    if args.cmd == "branch":
-        if args.create:
-            catalog.create_branch(args.create, from_branch=args.from_branch)
-            print(f"created branch {args.create!r}")
-        for name in catalog.branches():
-            print(name)
-        return
+    with Client(args.lake) as client:
+        if args.cmd == "branch":
+            if args.create:
+                client.create_branch(args.create, from_branch=args.from_branch)
+                print(f"created branch {args.create!r}")
+            for name in client.branches():
+                print(name)
+            return
 
-    if args.cmd == "log":
-        for c in catalog.log(args.branch):
-            print(f"{c.commit_id[:12]}  {c.author:<8} {c.message}")
-        return
+        if args.cmd == "log":
+            for c in client.log(args.branch):
+                print(f"{c.commit_id[:12]}  {c.author:<8} {c.message}")
+            return
 
-    if args.cmd == "tables":
-        for name, key in sorted(catalog.tables(branch=args.branch).items()):
-            snap = fmt.load_snapshot(key)
-            print(f"{name:<32} {snap.num_rows:>10} rows  {key[:12]}")
-        return
+        if args.cmd == "tables":
+            for name, key in sorted(client.tables(args.branch).items()):
+                snap = client.fmt.load_snapshot(key)
+                print(f"{name:<32} {snap.num_rows:>10} rows  {key[:12]}")
+            return
 
-    if args.cmd == "gc":
-        from repro.maintenance import collect_garbage
-
-        if args.history is not None and args.history < 1:
-            raise SystemExit(
-                f"--history must be >= 1 (got {args.history}): history=N "
-                "keeps the last N commits per branch, 0 would keep nothing"
-            )
-        report = collect_garbage(
-            store, catalog, fmt,
-            history=args.history, grace_s=args.grace,
-            pin_ttl_s=args.pin_ttl, dry_run=args.dry_run,
-        )
-        print(report.describe())
-        return
-
-    if args.cmd == "compact":
-        from repro.maintenance import compact_branch, compact_table
-
-        if args.table:
-            reports = [compact_table(
-                catalog, fmt, args.table, branch=args.branch,
-                target_rows=args.target_rows, min_fill=args.min_fill,
-                dry_run=args.dry_run,
-            )]
-        else:
-            reports = compact_branch(
-                catalog, fmt, branch=args.branch,
-                target_rows=args.target_rows, min_fill=args.min_fill,
-                dry_run=args.dry_run,
-            )
-        for report in reports:
-            print(report.describe())
-        print(f"shards merged (lifetime): {store.stats.compact_shards_merged}")
-        return
-
-    if args.cmd == "cache":
-        from repro.core import NodeCacheRegistry
-        from repro.maintenance import EvictionPolicy, prune_cache
-
-        registry = NodeCacheRegistry(store)
-        if args.cache_cmd == "prune":
-            report = prune_cache(
-                registry,
-                EvictionPolicy(max_bytes=args.max_bytes, ttl_s=args.ttl),
-                dry_run=args.dry_run,
-            )
-            print(report.describe())
-        else:  # stats
-            entries = registry.entries()
-            print(f"{len(entries)} entries, {registry.total_bytes()} bytes")
-            for fp, e in sorted(
-                entries.items(), key=lambda kv: kv[1].last_used_at
-            ):
-                label = e.node or ",".join(sorted({*e.outputs, *e.checks}))
-                print(
-                    f"{fp[:16]}  {e.kind:<8} node={label:<24} "
-                    f"run={e.run_id:<4} bytes={e.output_bytes:<10} "
-                    f"outputs={sorted(e.outputs)}"
+        if args.cmd == "gc":
+            if args.history is not None and args.history < 1:
+                raise SystemExit(
+                    f"--history must be >= 1 (got {args.history}): history=N "
+                    "keeps the last N commits per branch, 0 would keep nothing"
                 )
-        return
+            report = client.gc(
+                history=args.history, grace_s=args.grace,
+                pin_ttl_s=args.pin_ttl, latency_ttl_s=args.latency_ttl,
+                dry_run=args.dry_run,
+            )
+            print(report.describe())
+            return
 
-    with ServerlessExecutor() as ex:
-        runner = Runner(catalog, fmt, ex)
+        if args.cmd == "compact":
+            reports = client.compact(
+                args.table, branch=args.branch,
+                target_rows=args.target_rows, min_fill=args.min_fill,
+                dry_run=args.dry_run,
+            )
+            for report in reports:
+                print(report.describe())
+            print(f"shards merged (lifetime): "
+                  f"{client.store.stats.compact_shards_merged}")
+            return
+
+        if args.cmd == "cache":
+            if args.cache_cmd == "prune":
+                report = client.cache.prune(
+                    max_bytes=args.max_bytes, ttl_s=args.ttl,
+                    dry_run=args.dry_run,
+                )
+                print(report.describe())
+            else:  # stats
+                stats = client.cache.stats()
+                print(f"{stats['entries']} entries, "
+                      f"{stats['total_bytes']} bytes")
+                for fp, e in sorted(
+                    stats["items"].items(), key=lambda kv: kv[1].last_used_at
+                ):
+                    label = e.node or ",".join(sorted({*e.outputs, *e.checks}))
+                    print(
+                        f"{fp[:16]}  {e.kind:<8} node={label:<24} "
+                        f"run={e.run_id:<4} bytes={e.output_bytes:<10} "
+                        f"outputs={sorted(e.outputs)}"
+                    )
+            return
+
         if args.cmd == "query":
-            out = runner.query(args.sql, branch=args.branch, commit_id=args.commit)
+            out = client.query(
+                args.sql, branch=args.branch, commit_id=args.commit
+            )
             _print_table(out)
             return
+
         # run / replay
-        pipeline = _load_pipeline(args.pipeline)
+        pipeline = resolve_pipeline(args.pipeline)
         if args.replay:
             if args.run_id is None:
                 raise SystemExit("--replay needs --run-id")
-            res = runner.replay(pipeline, args.run_id)
+            res = client.replay(args.run_id, pipeline)
             print(f"replayed run {args.run_id} as {res.run_id}: "
                   f"artifacts={sorted(res.artifacts)}")
             return
-        try:
-            res = runner.run(
-                pipeline, branch=args.branch, fusion=not args.no_fusion,
-                pushdown=not args.no_fusion, cache=args.cache,
+        res = client.run(
+            pipeline, branch=args.branch, fusion=not args.no_fusion,
+            pushdown=not args.no_fusion, cache=args.cache,
+        )
+        if res.state is RunState.AUDIT_FAILED:
+            raise SystemExit(
+                f"AUDIT FAILED: expectations failed: {res.failed_checks} "
+                f"— run {res.run_id} rolled back"
             )
-        except ExpectationFailed as e:
-            raise SystemExit(f"AUDIT FAILED: {e}")
         print(f"run {res.run_id} merged to {args.branch!r} "
               f"@ {res.merged_commit[:12]}")
         print(f"artifacts: {sorted(res.artifacts)}  checks: {res.checks}")
         print(f"wall: {res.stats['wall_s']:.2f}s  io: {res.stats['io']}")
-        cache = res.stats.get("cache", {})
+        cache = res.cache
         if cache.get("enabled"):
             total = cache["hits"] + cache["nodes_executed"]
             print(

@@ -90,6 +90,12 @@ class Pipeline:
                 raise PipelineError(f"node {node.name!r} references itself")
         self.nodes[node.name] = node
 
+    def add_node(self, node: Node) -> Node:
+        """Add a fully-formed node (the SDK's ``Project`` assembles nodes
+        from decorator registrations and installs them through here)."""
+        self._add(node)
+        return node
+
     def sql(self, name: str, sql_text: str, *, materialize: bool = False) -> Node:
         """Declare a SQL artifact; its parent is the FROM table."""
         query = parse_sql(sql_text)

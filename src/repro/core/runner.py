@@ -51,9 +51,19 @@ log = get_logger("core.runner")
 
 
 class ExpectationFailed(RuntimeError):
-    def __init__(self, failed: List[str]):
+    def __init__(
+        self,
+        failed: List[str],
+        record: Optional[RunRecord] = None,
+        plan: Optional[PhysicalPlan] = None,
+    ):
         super().__init__(f"expectations failed: {failed} — run rolled back")
         self.failed = failed
+        #: the rolled-back run's record (run_id, stats, artifact keys) — the
+        #: SDK's ``Client.run`` turns this into an AUDIT_FAILED ``RunHandle``
+        #: instead of letting the exception escape
+        self.record = record
+        self.plan = plan
 
 
 class RunContext:
@@ -219,7 +229,7 @@ class Runner:
                     run_id, pipeline, branch, base.commit_id, params,
                     result, merged=None, t_start=t_start,
                 )
-                raise ExpectationFailed(failed)
+                raise ExpectationFailed(failed, record=rec, plan=result["plan"])
 
             # 5. write: atomic merge + ephemeral cleanup
             merged = self.catalog.merge(

@@ -1,0 +1,15 @@
+"""Shared example fixtures that ship with the package.
+
+Examples, benchmarks and tests all exercise the paper's NYC-taxi working
+example (4.1, Appendix A); keeping the schema/data-generator/pipeline
+builder here means ``examples/`` runs without the test tree on
+``sys.path`` (tests/helpers_taxi.py is now a re-export of this module).
+"""
+from repro.examples_data.taxi import (
+    APRIL_1,
+    TAXI_SCHEMA,
+    build_taxi_pipeline,
+    make_taxi_data,
+)
+
+__all__ = ["APRIL_1", "TAXI_SCHEMA", "build_taxi_pipeline", "make_taxi_data"]

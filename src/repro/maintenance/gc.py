@@ -47,13 +47,16 @@ class GCReport:
     dry_run: bool
     #: content-fingerprint memo refs pruned for expired snapshots
     swept_content_refs: int = 0
+    #: speculation latency baselines dropped for long-unused fingerprints
+    swept_latency_refs: int = 0
 
     def describe(self) -> str:
         verb = "would reclaim" if self.dry_run else "reclaimed"
         return (
             f"gc: {verb} {self.swept_objects} objects "
             f"({self.bytes_reclaimed} bytes) + {self.swept_commits} commit refs "
-            f"+ {self.swept_content_refs} content-hash memos; "
+            f"+ {self.swept_content_refs} content-hash memos "
+            f"+ {self.swept_latency_refs} latency baselines; "
             f"live: {self.live_commits} commits / {self.live_objects} objects; "
             f"spared {self.kept_young} in-grace objects; roots: {self.roots}"
         )
@@ -67,6 +70,7 @@ def collect_garbage(
     history: Optional[int] = None,
     grace_s: float = 0.0,
     pin_ttl_s: Optional[float] = None,
+    latency_ttl_s: Optional[float] = 30 * 86400.0,
     dry_run: bool = False,
 ) -> GCReport:
     """One full mark-and-sweep pass.  Idempotent and crash-safe: every
@@ -104,6 +108,19 @@ def collect_garbage(
         live.snapshot_ids, dry_run=dry_run
     )
 
+    # speculation latency baselines (written by the SDK Client) are keyed
+    # by *function* fingerprint — every code edit mints a new one and no
+    # catalog walk can prove liveness, so they expire by disuse: a ref not
+    # refreshed for latency_ttl_s belongs to code nobody runs anymore.
+    # Pure telemetry cache — dropping one costs a re-learned baseline.
+    swept_latency = 0
+    if latency_ttl_s is not None:
+        for name, raw in store.list_refs("latencyhist").items():
+            if now - raw.get("updated_at", 0.0) > latency_ttl_s:
+                swept_latency += 1
+                if not dry_run:
+                    store.delete_ref("latencyhist", name)
+
     report = GCReport(
         roots=live.roots,
         live_commits=len(live.commits),
@@ -114,6 +131,7 @@ def collect_garbage(
         kept_young=result.kept_young,
         dry_run=dry_run,
         swept_content_refs=swept_content,
+        swept_latency_refs=swept_latency,
     )
     log.info("%s", report.describe())
     return report

@@ -185,6 +185,32 @@ class ServerlessExecutor:
     def submit(self, spec: FunctionSpec, *args: Any) -> "Future[Any]":
         return self._pool.submit(self._run_with_retries, spec, args)
 
+    # ------------------------------------------------- latency baselines
+    def seed_latency_history(
+        self, history: Dict[str, Sequence[float]]
+    ) -> None:
+        """Install persisted per-fingerprint latency baselines.
+
+        Called by the SDK Client when it opens a lake, with the histories
+        a previous process recorded — a fresh process speculates against
+        inherited medians instead of re-learning them.  Locally-observed
+        durations win: fingerprints this executor has already timed are
+        left untouched.
+        """
+        size = self.config.latency_history_size
+        with self._lock:
+            for fp, durations in history.items():
+                if fp not in self._latency_history:
+                    self._latency_history[fp] = [
+                        float(d) for d in list(durations)[-size:]
+                    ]
+
+    def latency_history(self) -> Dict[str, List[float]]:
+        """Snapshot of the per-fingerprint completed-duration histories
+        (what the SDK Client persists into the lake after each run)."""
+        with self._lock:
+            return {fp: list(ds) for fp, ds in self._latency_history.items()}
+
     def _historical_baseline(self, spec: FunctionSpec) -> Optional[float]:
         """Median completed duration of prior runs of this function, or
         None below ``speculation_min_samples`` (no evidence, no backup)."""

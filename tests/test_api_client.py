@@ -1,0 +1,447 @@
+"""The SDK facade: Client/BranchHandle/RunHandle, decorators, parity.
+
+The acceptance matrix (ISSUE 4): ``Client.run()`` and the legacy
+``Runner.run()`` must be *the same engine behind different doors* —
+identical artifact manifests (content-addressed), identical checks,
+identical node-cache hit accounting, across the cache/fusion config
+matrix; plus the typed AUDIT_FAILED rollback path, branch-scoped
+sessions, decorator-registered projects, and the persisted speculation
+latency history.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import Client, RunState
+from repro.catalog import Catalog
+from repro.core import Runner
+from repro.io import ObjectStore
+from repro.runtime import ExecutorConfig, ServerlessExecutor
+from repro.table import TableFormat
+from tests.helpers_taxi import TAXI_SCHEMA, build_taxi_pipeline, make_taxi_data
+
+_CFG = ExecutorConfig(max_workers=2)
+
+
+def _seed(client: Client, n: int = 2000, *, mean_count: float = 30.0,
+          seed: int = 0) -> None:
+    client.write_table(
+        "taxi_table",
+        make_taxi_data(n, np.random.default_rng(seed), mean_count=mean_count),
+        schema=TAXI_SCHEMA,
+    )
+
+
+@pytest.fixture
+def client(tmp_path):
+    with Client(tmp_path / "lake", shard_rows=128,
+                executor_config=_CFG) as c:
+        yield c
+
+
+# ------------------------------------------------------------- public API
+def test_public_api_surface():
+    assert repro.Client is Client
+    assert callable(repro.model)
+    assert callable(repro.expectation)
+    assert callable(repro.requirements)
+    assert callable(repro.sql)
+    assert repro.RunState.SUCCESS.value == "SUCCESS"
+    assert isinstance(repro.__version__, str)
+
+
+def test_runner_shim_warns_but_works():
+    import repro as r
+    r.__dict__.pop("Runner", None)  # undo any cached resolution
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        shim = r.Runner
+    assert shim is Runner
+    assert any(w.category is DeprecationWarning for w in caught)
+
+
+# ----------------------------------------------------- Client/Runner parity
+@pytest.mark.parametrize("cache", [True, False])
+@pytest.mark.parametrize("fusion", [True, False])
+def test_client_runner_parity_matrix(tmp_path, cache, fusion):
+    """Same pipeline, same data, two construction paths — identical runs.
+
+    Two cold runs then one warm re-run per path: artifacts, checks, node
+    cache hit counts and branch-head table mappings must all agree
+    (commit *ids* differ — they hash wall-clock timestamps — so parity is
+    asserted on the content-addressed tables a commit points at).
+    """
+    # SDK path
+    api = Client(tmp_path / "api", shard_rows=128, executor_config=_CFG)
+    _seed(api)
+    h1 = api.run(build_taxi_pipeline(), branch="feat",
+                 fusion=fusion, pushdown=fusion, cache=cache)
+    h2 = api.run(build_taxi_pipeline(), branch="feat",
+                 fusion=fusion, pushdown=fusion, cache=cache)
+
+    # legacy engine path
+    store = ObjectStore(tmp_path / "legacy")
+    catalog = Catalog(store)
+    fmt = TableFormat(store, shard_rows=128)
+    snap = fmt.write(
+        "taxi_table", TAXI_SCHEMA, make_taxi_data(2000, np.random.default_rng(0))
+    )
+    catalog.commit("main", {"taxi_table": fmt.manifest_key(snap)})
+    with ServerlessExecutor(_CFG) as ex:
+        runner = Runner(catalog, fmt, ex)
+        r1 = runner.run(build_taxi_pipeline(), branch="feat",
+                        fusion=fusion, pushdown=fusion, cache=cache)
+        r2 = runner.run(build_taxi_pipeline(), branch="feat",
+                        fusion=fusion, pushdown=fusion, cache=cache)
+
+    for h, r in ((h1, r1), (h2, r2)):
+        assert h.state is RunState.SUCCESS and r.ok
+        assert h.artifacts == r.artifacts  # content-addressed equality
+        assert h.checks == r.checks
+        assert h.stats["cache"] == r.stats["cache"]  # hit counts included
+        assert len(h.plan.stages) == len(r.plan.stages)
+    # warm-run accounting matches: same hits/rehydrated/elided/executed
+    if cache:
+        assert h2.cache["hits"] == r2.stats["cache"]["hits"] > 0
+        assert h2.cache["nodes_executed"] == 0
+    else:
+        assert h2.cache["hits"] == 0 and h2.cache["enabled"] is False
+    # the branch heads point at the same content
+    assert api.tables("feat") == catalog.tables(branch="feat")
+    api.close()
+
+
+# ------------------------------------------------------------- RunHandle
+def test_audit_failure_is_typed_and_rolled_back(client):
+    _seed(client, 500, mean_count=1.0)  # mean ~1 < threshold 10
+    before = client.catalog.head("main").commit_id
+    handle = client.run(build_taxi_pipeline(), branch="main")
+    assert handle.state is RunState.AUDIT_FAILED
+    assert not handle.ok
+    assert handle.merged_commit is None
+    assert handle.failed_checks == ["trips_expectation"]
+    assert handle.run_id > 0  # the rolled-back run is still recorded
+    with pytest.raises(repro.RunFailed):
+        handle.raise_for_state()
+    # rollback: head unmoved, no artifacts visible, no ephemeral branches
+    assert client.catalog.head("main").commit_id == before
+    assert "pickups" not in client.tables("main")
+    assert all(not b.startswith("run_") for b in client.branches())
+
+
+def test_run_error_state_captured_when_asked(client):
+    # no taxi_table seeded -> the engine raises KeyError at planning
+    with pytest.raises(KeyError):
+        client.run(build_taxi_pipeline(), branch="main")
+    handle = client.run(build_taxi_pipeline(), branch="main",
+                        raise_errors=False)
+    assert handle.state is RunState.ERROR
+    assert isinstance(handle.error, KeyError)
+    with pytest.raises(repro.RunFailed):
+        handle.raise_for_state()
+
+
+def test_runhandle_lazy_artifact_read(client):
+    _seed(client)
+    handle = client.run(build_taxi_pipeline(), branch="feat")
+    out = handle.artifact("pickups")
+    assert set(out) == {"pickup_location_id", "dropoff_location_id", "counts"}
+    assert (np.sort(out["counts"])[::-1] == out["counts"]).all()
+    with pytest.raises(KeyError):
+        handle.artifact("nope")
+
+
+def test_replay_through_client(client):
+    _seed(client)
+    first = client.run(build_taxi_pipeline(), branch="feat")
+    again = client.replay(first.run_id, build_taxi_pipeline())
+    assert again.state is RunState.SUCCESS
+    assert again.replay_of == first.run_id
+    assert again.merged_commit is None  # replay never moves branches
+    assert again.artifacts == first.artifacts
+
+
+# ----------------------------------------------------------- BranchHandle
+def test_branch_merges_on_success(client):
+    _seed(client)
+    with client.branch("feat_1") as branch:
+        handle = branch.run(build_taxi_pipeline())
+        assert handle.ok
+        assert "pickups" in branch.tables()
+        assert "pickups" not in client.tables("main")  # not yet
+    # clean exit: merged into main, branch gone
+    assert "pickups" in client.tables("main")
+    assert "feat_1" not in client.branches()
+
+
+def test_branch_rolls_back_on_audit_failure(client):
+    _seed(client)
+    with client.branch("feat_bad") as branch:
+        branch.write_table(
+            "taxi_table",
+            make_taxi_data(300, np.random.default_rng(7), mean_count=1.0),
+            schema=TAXI_SCHEMA,
+        )
+        handle = branch.run(build_taxi_pipeline())
+        assert handle.state is RunState.AUDIT_FAILED
+    # rollback: branch deleted, nothing merged
+    assert "feat_bad" not in client.branches()
+    assert "pickups" not in client.tables("main")
+
+
+def test_branch_rolls_back_on_exception(client):
+    _seed(client)
+    with pytest.raises(RuntimeError, match="boom"):
+        with client.branch("feat_exc") as branch:
+            branch.write_table(
+                "extra",
+                {"x": np.arange(4, dtype=np.int32)},
+            )
+            raise RuntimeError("boom")
+    assert "feat_exc" not in client.branches()
+    assert "extra" not in client.tables("main")
+
+
+def test_preexisting_branch_is_not_ephemeral(client):
+    _seed(client)
+    client.create_branch("longlived")
+    with client.branch("longlived") as branch:
+        branch.run(build_taxi_pipeline()).raise_for_state()
+    # attached handle: exit leaves the branch (and main) untouched
+    assert "longlived" in client.branches()
+    assert "pickups" in client.tables("longlived")
+    assert "pickups" not in client.tables("main")
+
+
+def test_branch_scoped_query_log_tag(client):
+    _seed(client)
+    feat = client.branch("feat_q", ephemeral=False)
+    feat.run(build_taxi_pipeline()).raise_for_state()
+    out = feat.query("SELECT COUNT(*) AS n FROM pickups")
+    assert out["n"][0] > 0
+    assert any("run 1" in c.message for c in feat.log())
+    tagged = feat.tag("v1")
+    assert client.tags()["v1"] == tagged == feat.head().commit_id
+
+
+# ----------------------------------------------- decorators + discovery
+def test_decorator_project_matches_legacy_pipeline(client):
+    _seed(client)
+    proj = repro.project("taxi_decorated")
+    proj.clear()  # test isolation: module-level registry is global
+    proj.sql(
+        "trips",
+        "SELECT pickup_location_id, passenger_count as count, "
+        "dropoff_location_id FROM taxi_table WHERE pickup_at >= '2019-04-01'",
+    )
+
+    @proj.expectation(name="trips_expectation")
+    @repro.requirements({"pandas": "2.0.0"})
+    def trips_are_plausible(ctx, trips):
+        return trips.mean("count") > 10.0
+
+    proj.sql(
+        "pickups",
+        "SELECT pickup_location_id, dropoff_location_id, COUNT(*) AS counts "
+        "FROM trips GROUP BY pickup_location_id, dropoff_location_id "
+        "ORDER BY counts DESC",
+    )
+    decorated = client.run(proj, branch="dec", cache=False)
+    legacy = client.run(build_taxi_pipeline(), branch="leg", cache=False)
+    assert decorated.state is RunState.SUCCESS
+    assert decorated.artifacts == legacy.artifacts
+    assert decorated.checks == legacy.checks
+
+
+def test_expectation_name_needs_no_suffix(client):
+    _seed(client)
+    proj = repro.project("taxi_free_names")
+    proj.clear()
+    proj.sql(
+        "trips",
+        "SELECT pickup_location_id, passenger_count as count FROM taxi_table",
+    )
+
+    @proj.expectation()
+    def trips_have_riders(ctx, trips):  # no _expectation suffix
+        return trips.mean("count") > 10.0
+
+    handle = client.run(proj, branch="free")
+    assert handle.checks == {"trips_have_riders": True}
+    pipeline = proj.pipeline()
+    assert pipeline.expectations == ["trips_have_riders"]
+
+
+def test_redefinition_overwrites_not_collides(client):
+    _seed(client)
+    proj = repro.project("taxi_redef")
+    proj.clear()
+    proj.sql("trips", "SELECT pickup_location_id FROM taxi_table")
+    proj.sql("trips", "SELECT dropoff_location_id FROM taxi_table")
+    assert len(proj) == 1
+    pipeline = proj.pipeline()
+    assert pipeline.nodes["trips"].query.projections[0][0] == (
+        "dropoff_location_id"
+    )
+
+
+def test_discover_module_file(client, tmp_path):
+    _seed(client)
+    mod = tmp_path / "my_pipeline.py"
+    mod.write_text(
+        "import repro\n"
+        "repro.sql('trips', \"SELECT pickup_location_id, passenger_count as "
+        "count FROM taxi_table\")\n"
+        "@repro.expectation()\n"
+        "def sane(ctx, trips):\n"
+        "    return trips.count() > 0\n"
+    )
+    handle = client.run(str(mod), branch="disc")
+    assert handle.state is RunState.SUCCESS
+    assert handle.checks == {"sane": True}
+    # loading the same file again re-registers without colliding
+    handle2 = client.run(str(mod), branch="disc")
+    assert handle2.state is RunState.SUCCESS
+
+
+def test_same_stem_files_get_distinct_projects(client, tmp_path):
+    """Two pipeline files sharing a stem must not leak nodes into each
+    other's DAG (discovery keys default projects by resolved path)."""
+    _seed(client)
+    a = tmp_path / "pa" / "pipe.py"
+    b = tmp_path / "pb" / "pipe.py"
+    a.parent.mkdir()
+    b.parent.mkdir()
+    a.write_text(
+        "import repro\n"
+        "repro.sql('a_node', 'SELECT pickup_location_id FROM taxi_table')\n"
+    )
+    b.write_text(
+        "import repro\n"
+        "repro.sql('b_node', 'SELECT dropoff_location_id FROM taxi_table')\n"
+    )
+    ha = client.run(str(a), branch="pa")
+    hb = client.run(str(b), branch="pb")
+    assert sorted(ha.artifacts) == ["a_node"]
+    assert sorted(hb.artifacts) == ["b_node"]
+    # and paths that only differ in separator-vs-underscore ("a_b.py" vs
+    # "a/b.py") must not collide either (module names hash the full path)
+    c = tmp_path / "a_b.py"
+    d = tmp_path / "a" / "b.py"
+    d.parent.mkdir()
+    c.write_text(
+        "import repro\n"
+        "repro.sql('c_node', 'SELECT pickup_location_id FROM taxi_table')\n"
+    )
+    d.write_text(
+        "import repro\n"
+        "repro.sql('d_node', 'SELECT dropoff_location_id FROM taxi_table')\n"
+    )
+    assert sorted(client.run(str(c), branch="pc").artifacts) == ["c_node"]
+    assert sorted(client.run(str(d), branch="pd").artifacts) == ["d_node"]
+    assert sorted(client.run(str(c), branch="pc2").artifacts) == ["c_node"]
+
+
+def test_rediscovery_drops_deleted_nodes(client, tmp_path):
+    """Editing a file and re-running it must not resurrect removed nodes."""
+    _seed(client)
+    mod = tmp_path / "evolving.py"
+    mod.write_text(
+        "import repro\n"
+        "repro.sql('old_node', 'SELECT pickup_location_id FROM taxi_table')\n"
+    )
+    assert sorted(client.run(str(mod), branch="v1").artifacts) == ["old_node"]
+    mod.write_text(
+        "import repro\n"
+        "repro.sql('new_node', 'SELECT dropoff_location_id FROM taxi_table')\n"
+    )
+    assert sorted(client.run(str(mod), branch="v2").artifacts) == ["new_node"]
+
+
+def test_legacy_pipeline_global_still_loads(client, tmp_path):
+    _seed(client)
+    mod = tmp_path / "legacy_pipeline.py"
+    mod.write_text(
+        "from repro.core import Pipeline\n"
+        "PIPELINE = Pipeline('legacy')\n"
+        "PIPELINE.sql('trips', 'SELECT pickup_location_id FROM taxi_table')\n"
+    )
+    handle = client.run(str(mod), branch="old")
+    assert handle.state is RunState.SUCCESS
+    assert "trips" in handle.artifacts
+
+
+# ------------------------------------------------- latency history (lake)
+def test_latency_history_survives_process_restart(tmp_path):
+    """ROADMAP item: a fresh process inherits speculation baselines."""
+    lake = tmp_path / "lake"
+    with Client(lake, shard_rows=128, executor_config=_CFG) as c1:
+        _seed(c1)
+        # cache=False so every run genuinely executes (and times) the stage
+        for i in range(3):
+            c1.run(build_taxi_pipeline(), branch=f"b{i}", cache=False)
+        history = c1.executor.latency_history()
+    assert history, "executor recorded no durations"
+    fp, durations = max(history.items(), key=lambda kv: len(kv[1]))
+    assert len(durations) >= 3  # enough samples to form a median baseline
+
+    # a brand-new Client (fresh process stand-in) inherits the baselines
+    with Client(lake, shard_rows=128, executor_config=_CFG) as c2:
+        inherited = c2.executor.latency_history()
+        assert inherited[fp] == pytest.approx(durations)
+        # locally-observed durations are preferred over stale seeds
+        c2.executor.seed_latency_history({fp: [999.0]})
+        assert c2.executor.latency_history()[fp] == pytest.approx(durations)
+
+
+def test_replay_of_failing_run_reports_audit_failed(client):
+    """Replay re-executes without an audit gate — a reproduced failing
+    check must surface as AUDIT_FAILED on the handle, not SUCCESS."""
+    _seed(client, 500, mean_count=1.0)
+    failed = client.run(build_taxi_pipeline(), branch="main")
+    assert failed.state is RunState.AUDIT_FAILED
+    again = client.replay(failed.run_id, build_taxi_pipeline())
+    assert again.state is RunState.AUDIT_FAILED
+    assert again.replay_of == failed.run_id
+    assert again.checks == {"trips_expectation": False}
+    assert again.merged_commit is None
+
+
+def test_gc_prunes_stale_latency_baselines(client):
+    _seed(client)
+    client.run(build_taxi_pipeline(), branch="b", cache=False)
+    client._save_latency_history()
+    fresh = client.store.list_refs("latencyhist")
+    assert fresh
+    client.store.set_ref(
+        "latencyhist", "deadbeef_stale",
+        {"durations": [0.5], "updated_at": 1.0},  # epoch — long expired
+    )
+    report = client.gc(grace_s=0.0, latency_ttl_s=3600.0)
+    assert report.swept_latency_refs == 1
+    left = client.store.list_refs("latencyhist")
+    assert "deadbeef_stale" not in left
+    assert set(fresh) <= set(left)  # fresh baselines survive
+    # and latency_ttl_s=None disables the pruning stage entirely
+    client.store.set_ref(
+        "latencyhist", "deadbeef_stale",
+        {"durations": [0.5], "updated_at": 1.0},
+    )
+    report = client.gc(grace_s=0.0, latency_ttl_s=None)
+    assert report.swept_latency_refs == 0
+
+
+def test_write_table_infers_schema_and_appends(client):
+    client.write_table(
+        "events", {"ts": np.arange(10, dtype=np.int64).astype(np.int32),
+                   "value": np.ones(10, dtype=np.float32)},
+    )
+    client.write_table(
+        "events", {"ts": np.arange(10, 20, dtype=np.int32),
+                   "value": np.zeros(10, dtype=np.float32)},
+        append=True,
+    )
+    out = client.query("SELECT COUNT(*) AS n FROM events")
+    assert out["n"][0] == 20
