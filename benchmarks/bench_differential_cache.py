@@ -31,7 +31,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import perf_meta, row
 from repro.api import Client
 from repro.core import Pipeline, PlannerConfig, requirements
 from repro.examples_data import TAXI_SCHEMA, make_taxi_data
@@ -82,7 +82,7 @@ def run(n: int = 400_000, json_path: Optional[str] = None) -> List[str]:
 
     with Client.ephemeral(
         shard_rows=65536,
-        executor_config=ExecutorConfig(max_workers=2),
+        executor_config=ExecutorConfig(max_workers=2, max_concurrent_stages=2),
     ) as client:
         client.write_table("taxi_table", make_taxi_data(n, rng),
                            schema=TAXI_SCHEMA)
@@ -163,9 +163,13 @@ def run(n: int = 400_000, json_path: Optional[str] = None) -> List[str]:
     if json_path is not None:
         results = {
             "n": n,
+            # perf-trajectory comparability: this bench runs its stages
+            # through the wave scheduler at the executor's configured
+            # concurrency (see benchmarks/common.perf_meta)
+            "parallelism": 2,
             "scenarios": {
                 name: {
-                    "wall_s": walls[name],
+                    **perf_meta(parallelism=2, wall_s=walls[name]),
                     "hits": s["hits"],
                     "nodes_executed": s["nodes_executed"],
                     "rehydrated": s["rehydrated"],

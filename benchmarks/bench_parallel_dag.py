@@ -1,0 +1,272 @@
+"""Wave-parallel DAG execution: wall-clock speedup from concurrent stages.
+
+The paper's serverless pitch is that independent pipeline work fans out
+across function invocations.  This benchmark pins the wave scheduler's
+share of that claim with two scenarios:
+
+* **fan_out** — an 8-way fan-out pipeline (independent "model" nodes over
+  the taxi fixture, each invoking an external scorer — a host callback
+  with realistic remote-inference latency, the serverless analog of
+  bench_speculation's straggler sleeps) executed at parallelism 1, 2, 4
+  and 8.  Acceptance: **>= 2x wall-clock at parallelism >= 4 vs the
+  sequential (parallelism 1) run**, with byte-identical artifact
+  manifests at every level — parallelism is a throughput knob, never a
+  semantics knob.
+* **wide_scan** — ``execute_scan`` over a deliberately many-sharded
+  snapshot with object-store GET latency restored (the paper's lake is
+  S3; the local stand-in hides the round trip the pool overlaps), serial
+  vs pooled shard reads.
+
+Also runnable standalone for the CI smoke-bench job::
+
+    python -m benchmarks.bench_parallel_dag --smoke --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import perf_meta, row
+from repro.api import Client
+from repro.core import Pipeline
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
+from repro.io import ObjectStore
+from repro.runtime import ExecutorConfig
+from repro.table import Predicate, TableFormat, execute_scan, plan_scan
+
+#: fan-out width (the paper's "independent models" count)
+FAN_OUT = 8
+#: parallelism levels measured; 1 is the sequential baseline
+LEVELS = (1, 2, 4, 8)
+
+
+def _external_scorer(latency_s: float, salt: int):
+    """Simulated remote model inference: a host-side callback with
+    invocation latency.  Deterministic in its inputs — the top-k sum is a
+    stand-in for a model score — so artifacts stay byte-identical across
+    parallelism levels while the *latency* (the serverless cost the wave
+    scheduler overlaps) stays realistic."""
+
+    def scorer(counts: np.ndarray) -> np.ndarray:
+        time.sleep(latency_s)
+        top = np.sort(np.asarray(counts, dtype=np.float32))[-32:]
+        return np.float32(top.sum() + salt)
+
+    return scorer
+
+
+def build_fanout_pipeline(k: int = FAN_OUT, *, latency_s: float = 0.12) -> Pipeline:
+    """``k`` independent model nodes over the taxi fixture — every stage
+    is unblocked from the start, the wave scheduler's best case."""
+    p = Pipeline("parallel_dag_bench")
+    for i in range(k):
+
+        def make_model(i: int):
+            def fn(ctx, taxi_table):
+                counts = taxi_table.column("passenger_count")
+                score = jax.pure_callback(
+                    _external_scorer(latency_s, i),
+                    jax.ShapeDtypeStruct((), jnp.float32),
+                    counts,
+                )
+                return {"score": score[None]}
+
+            fn.__name__ = f"model_{i}"
+            return fn
+
+        p.python(make_model(i))
+    return p
+
+
+def _run_level(
+    data: Dict[str, np.ndarray], pipeline: Pipeline, parallelism: int
+) -> Dict:
+    """One fresh lake, one cold run at ``parallelism`` stages in flight."""
+    with Client.ephemeral(
+        executor_config=ExecutorConfig(
+            max_workers=max(4, FAN_OUT),
+            max_concurrent_stages=parallelism,
+        ),
+    ) as client:
+        client.write_table("taxi_table", data, schema=TAXI_SCHEMA)
+        t0 = time.perf_counter()
+        handle = client.run(pipeline, cache=False, parallelism=parallelism)
+        wall = time.perf_counter() - t0
+        handle.raise_for_state()
+        return {
+            "wall_s": wall,
+            "artifacts": dict(handle.artifacts),
+            "stages_executed": handle.stats["stages_executed"],
+            "reported_parallelism": handle.stats["parallelism"],
+        }
+
+
+class _S3LikeStore(ObjectStore):
+    """The local stand-in with object-store GET latency layered back on.
+
+    The paper's lake lives on S3 where every blob GET pays a network
+    round trip — exactly the latency parallel shard reads overlap.  The
+    local filesystem hides it (reads are page-cache memcpys, where a
+    thread pool is a wash), so the wide-scan scenario restores a
+    conservative per-GET cost to measure what production would see.
+    """
+
+    GET_LATENCY_S = 0.004
+
+    def get(self, key: str) -> bytes:
+        time.sleep(self.GET_LATENCY_S)
+        return super().get(key)
+
+
+def _wide_scan(n: int, rng: np.random.Generator) -> Dict:
+    """Serial vs pooled shard reads over a many-sharded snapshot."""
+    import tempfile
+    from concurrent.futures import ThreadPoolExecutor
+
+    from benchmarks.common import bench
+
+    n_scan = max(n * 4, 400_000)
+    shard_rows = max(4096, n_scan // 32)  # ~32 substantial shards
+    fmt = TableFormat(
+        _S3LikeStore(tempfile.mkdtemp(prefix="repro_scanbench_")),
+        shard_rows=shard_rows,
+    )
+    snap = fmt.write("taxi_table", TAXI_SCHEMA, make_taxi_data(n_scan, rng))
+    plan = plan_scan(
+        snap,
+        columns=["pickup_location_id", "passenger_count"],
+        predicates=[Predicate("passenger_count", ">", 5)],
+    )
+    with ThreadPoolExecutor(max_workers=8, thread_name_prefix="scan") as pool:
+        serial = execute_scan(fmt, plan)
+        pooled = execute_scan(fmt, plan, pool=pool)
+        for c in serial:
+            np.testing.assert_array_equal(serial[c], pooled[c])
+        assert set(serial) == {"pickup_location_id", "passenger_count"}, (
+            "scan must return only the projection"
+        )
+        t_serial = bench(lambda: execute_scan(fmt, plan), warmup=1, iters=3)
+        t_pooled = bench(
+            lambda: execute_scan(fmt, plan, pool=pool), warmup=1, iters=3
+        )
+    speedup = t_serial / max(t_pooled, 1e-9)
+    assert speedup >= 1.5, (
+        f"pooled wide scan speedup {speedup:.2f}x < 1.5x sanity floor"
+    )
+    return {
+        "rows": n_scan,
+        "shards": len(plan.shards),
+        "get_latency_s": _S3LikeStore.GET_LATENCY_S,
+        "serial_wall_s": t_serial,
+        "pooled_wall_s": t_pooled,
+        "speedup": speedup,
+    }
+
+
+def run(
+    n: int = 200_000,
+    latency_s: float = 0.12,
+    json_path: Optional[str] = None,
+) -> List[str]:
+    rng = np.random.default_rng(0)
+    data = make_taxi_data(n, rng)
+
+    levels: Dict[int, Dict] = {}
+    for parallelism in LEVELS:
+        levels[parallelism] = _run_level(
+            data, build_fanout_pipeline(latency_s=latency_s), parallelism
+        )
+
+    sequential = levels[1]
+    for parallelism, res in levels.items():
+        assert res["artifacts"] == sequential["artifacts"], (
+            f"parallelism {parallelism} changed artifact manifests — "
+            "parallelism must never be a semantics knob"
+        )
+        assert res["stages_executed"] == FAN_OUT
+
+    speedups = {
+        p: sequential["wall_s"] / max(res["wall_s"], 1e-9)
+        for p, res in levels.items()
+    }
+    # acceptance: the 8-way fan-out is >= 2x faster at parallelism >= 4
+    assert speedups[4] >= 2.0, (
+        f"parallelism 4 speedup {speedups[4]:.2f}x < 2x acceptance target"
+    )
+
+    scan = _wide_scan(n, rng)
+
+    out: List[str] = []
+    for parallelism, res in sorted(levels.items()):
+        out.append(
+            row(
+                f"parallel_dag_fanout{FAN_OUT}_p{parallelism}_n{n}",
+                res["wall_s"] * 1e6,
+                f"speedup={speedups[parallelism]:.2f}x;"
+                f"stages={res['stages_executed']};target>=2x@p>=4;"
+                f"identical_artifacts=True",
+            )
+        )
+    out.append(
+        row(
+            f"parallel_dag_wide_scan_{scan['shards']}shards_n{scan['rows']}",
+            scan["pooled_wall_s"] * 1e6,
+            f"serial={scan['serial_wall_s'] * 1e6:.0f}us;"
+            f"speedup={scan['speedup']:.2f}x;parallel_shard_reads=True;"
+            f"s3_like_get={scan['get_latency_s'] * 1e3:.0f}ms",
+        )
+    )
+
+    if json_path is not None:
+        results = {
+            "n": n,
+            "fan_out": FAN_OUT,
+            "invoke_latency_s": latency_s,
+            "scenarios": {
+                f"fanout_p{p}": {
+                    **perf_meta(
+                        parallelism=p,
+                        wall_s=res["wall_s"],
+                        sequential_wall_s=sequential["wall_s"],
+                    ),
+                    "stages_executed": res["stages_executed"],
+                }
+                for p, res in sorted(levels.items())
+            },
+            "wide_scan": scan,
+            "speedup_at_parallelism_4": speedups[4],
+            "speedup_at_parallelism_8": speedups[8],
+        }
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--n", type=int, default=200_000, help="taxi rows")
+    ap.add_argument("--latency-ms", type=float, default=120.0,
+                    help="simulated remote-inference latency per model")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fixture + shorter latencies (CI smoke job)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write scenario metrics as JSON (CI artifact)")
+    args = ap.parse_args()
+    # smoke keeps the fixture small but the invocation latency realistic:
+    # the speedup target needs latency (what the scheduler overlaps) to
+    # dominate fixed overhead even on a loaded 2-core CI runner
+    n = 50_000 if args.smoke else args.n
+    latency_s = (140.0 if args.smoke else args.latency_ms) / 1e3
+    print("name,us_per_call,derived")
+    for line in run(n=n, latency_s=latency_s, json_path=args.json):
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 
 def bench(fn: Callable[[], None], *, warmup: int = 2, iters: int = 5) -> float:
@@ -20,3 +20,26 @@ def bench(fn: Callable[[], None], *, warmup: int = 2, iters: int = 5) -> float:
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def perf_meta(
+    *,
+    parallelism: int,
+    wall_s: float,
+    sequential_wall_s: Optional[float] = None,
+) -> Dict[str, float]:
+    """Standard perf-trajectory fields for emitted bench JSON.
+
+    Every benchmark that writes a ``BENCH_*.json`` / CI artifact should
+    stamp its scenarios with these so wall-clock numbers stay comparable
+    across PRs: the parallelism level the scenario ran at, its wall
+    seconds, and (when a parallelism-1 baseline exists) the speedup
+    against that sequential run.
+    """
+    meta: Dict[str, float] = {
+        "parallelism": parallelism,
+        "wall_s": wall_s,
+    }
+    if sequential_wall_s is not None:
+        meta["speedup_vs_sequential"] = sequential_wall_s / max(wall_s, 1e-9)
+    return meta

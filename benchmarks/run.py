@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_differential_cache  warm re-runs skip clean stages (arXiv 2411.08203)
   bench_maintenance       lakekeeper: gc bytes reclaimed, compaction speedup
   bench_speculation       straggler-tail savings from backup requests
+  bench_parallel_dag      wave scheduler: fan-out speedup vs sequential
   bench_dryrun_summary    deliverables (e)+(g): dry-run + roofline headlines
 
 Run: ``PYTHONPATH=src:. python -m benchmarks.run [--only NAME]``
@@ -27,6 +28,7 @@ SUITES = [
     "bench_differential_cache",
     "bench_maintenance",
     "bench_speculation",
+    "bench_parallel_dag",
     "bench_dryrun_summary",
 ]
 

@@ -25,12 +25,13 @@ internal engine — ``repro.Runner`` is a deprecated alias of it).
 """
 from typing import Any
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 #: public name -> (module, attribute) — resolved on first access
 _EXPORTS = {
     "Client": ("repro.api", "Client"),
     "BranchHandle": ("repro.api", "BranchHandle"),
+    "AsyncRunHandle": ("repro.api", "AsyncRunHandle"),
     "RunHandle": ("repro.api", "RunHandle"),
     "RunState": ("repro.api", "RunState"),
     "RunFailed": ("repro.api", "RunFailed"),

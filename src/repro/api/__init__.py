@@ -5,7 +5,7 @@ Everything user code needs lives here; the subsystem packages
 ``repro.maintenance``) are the engine room.
 """
 from repro.api.client import BranchHandle, CacheMaintenance, Client
-from repro.api.handles import RunFailed, RunHandle, RunState
+from repro.api.handles import AsyncRunHandle, RunFailed, RunHandle, RunState
 from repro.api.project import (
     Project,
     discover,
@@ -18,6 +18,7 @@ from repro.api.project import (
 )
 
 __all__ = [
+    "AsyncRunHandle",
     "BranchHandle",
     "CacheMaintenance",
     "Client",

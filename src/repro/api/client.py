@@ -8,7 +8,8 @@ owns that wiring and exposes every surface on one object:
 * data:        ``write_table / query / tables / log / tag``
 * branches:    ``branch("feat_1")`` → a ``BranchHandle`` context manager
   (ephemeral by default — merge on success, roll back on audit failure)
-* pipelines:   ``run / replay`` returning a typed ``RunHandle``
+* pipelines:   ``run / replay`` returning a typed ``RunHandle``, and
+  ``run_async`` returning a future-like ``AsyncRunHandle``
 * maintenance: ``gc() / compact() / cache.stats() / cache.prune()``
 
 ``Runner`` remains importable from ``repro.core`` as the internal engine;
@@ -22,14 +23,16 @@ instead of re-learning them (ROADMAP item, closed).
 from __future__ import annotations
 
 import tempfile
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from types import ModuleType
 from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.api.handles import RunHandle, RunState
+from repro.api.handles import AsyncRunHandle, RunHandle, RunState
 from repro.api.project import Project, resolve_pipeline
 from repro.catalog.nessie import Catalog, Commit
 from repro.core.physical import PlannerConfig
@@ -126,7 +129,17 @@ class Client:
         self._runner: Optional[Runner] = None
         self.cache_registry = NodeCacheRegistry(self.store)
         self._closed = False
-        #: last-persisted latency histories (skip unchanged refs on save)
+        #: guards lazy executor/runner construction — two concurrent
+        #: run_async calls on a fresh Client must not build two fleets
+        self._init_lock = threading.Lock()
+        #: background lane for run_async (lazily created, joined on close);
+        #: ``_closed`` is read/written under ``_async_lock`` so a racing
+        #: run_async cannot recreate the pool after close() joined it
+        self._async_pool: Optional[ThreadPoolExecutor] = None
+        self._async_lock = threading.Lock()
+        #: last-persisted latency histories (skip unchanged refs on save);
+        #: guarded by ``_history_lock`` — concurrent async runs save too
+        self._history_lock = threading.Lock()
         self._persisted_history: Dict[str, tuple] = {}
         if executor is not None:
             self._load_latency_history()
@@ -140,25 +153,34 @@ class Client:
     # ---------------------------------------------------------- lifecycle
     @property
     def executor(self) -> ServerlessExecutor:
-        if self._executor is None:
-            self._executor = ServerlessExecutor(self._executor_config)
-            self._load_latency_history()
-        return self._executor
+        with self._init_lock:
+            if self._executor is None:
+                self._executor = ServerlessExecutor(self._executor_config)
+                self._load_latency_history()
+            return self._executor
 
     @property
     def runner(self) -> Runner:
         """The internal engine (transform-audit-write orchestrator)."""
-        if self._runner is None:
-            self._runner = Runner(
-                self.catalog, self.fmt, self.executor,
-                cache_registry=self.cache_registry,
-            )
-        return self._runner
+        executor = self.executor
+        with self._init_lock:
+            if self._runner is None:
+                self._runner = Runner(
+                    self.catalog, self.fmt, executor,
+                    cache_registry=self.cache_registry,
+                )
+            return self._runner
 
     def close(self) -> None:
-        if self._closed:
-            return
-        self._closed = True
+        with self._async_lock:
+            if self._closed:
+                return
+            self._closed = True
+            pool, self._async_pool = self._async_pool, None
+        if pool is not None:
+            # join in-flight async runs BEFORE tearing the executor down —
+            # a run mid-flight must never lose its container fleet
+            pool.shutdown(wait=True)
         if self._executor is not None:
             self._save_latency_history()
             if self._owns_executor:
@@ -195,15 +217,16 @@ class Client:
         """Persist changed histories (tiny JSON refs, one per fingerprint)."""
         if self._executor is None:
             return
-        for fp, durations in self._executor.latency_history().items():
-            snap = tuple(durations)
-            if self._persisted_history.get(fp) == snap:
-                continue
-            self.store.set_ref(
-                _LATENCY_NS, fp,
-                {"durations": list(durations), "updated_at": time.time()},
-            )
-            self._persisted_history[fp] = snap
+        with self._history_lock:
+            for fp, durations in self._executor.latency_history().items():
+                snap = tuple(durations)
+                if self._persisted_history.get(fp) == snap:
+                    continue
+                self.store.set_ref(
+                    _LATENCY_NS, fp,
+                    {"durations": list(durations), "updated_at": time.time()},
+                )
+                self._persisted_history[fp] = snap
 
     # ------------------------------------------------------------ branches
     def branch(
@@ -309,6 +332,7 @@ class Client:
         author: str = "user",
         planner_config: Optional[PlannerConfig] = None,
         raise_errors: bool = True,
+        parallelism: Optional[int] = None,
     ) -> RunHandle:
         """Execute a pipeline/project/module with transform-audit-write.
 
@@ -316,6 +340,11 @@ class Client:
         ``AUDIT_FAILED`` outcome (run rolled back), never an exception.
         Infrastructure/user-code errors raise unless ``raise_errors=False``
         captures them into an ``ERROR`` handle.
+
+        ``parallelism`` caps how many independent stages the wave
+        scheduler keeps in flight (default: the executor config's
+        ``max_concurrent_stages``); results are byte-identical at every
+        level — it is purely a throughput knob.
         """
         pipeline = resolve_pipeline(target)
         try:
@@ -329,6 +358,7 @@ class Client:
                 base_commit=base_commit,
                 author=author,
                 planner_config=planner_config,
+                parallelism=parallelism,
             )
         except ExpectationFailed as e:
             self._save_latency_history()
@@ -358,6 +388,68 @@ class Client:
             )
         self._save_latency_history()
         return self._handle_from_result(result)
+
+    def run_async(
+        self,
+        target: RunTarget,
+        *,
+        branch: str = "main",
+        params: Optional[Dict[str, Any]] = None,
+        fusion: bool = True,
+        pushdown: bool = True,
+        cache: bool = True,
+        base_commit: Optional[str] = None,
+        author: str = "user",
+        planner_config: Optional[PlannerConfig] = None,
+        raise_errors: bool = False,
+        parallelism: Optional[int] = None,
+    ) -> AsyncRunHandle:
+        """``run()`` without the wait (paper Table 1's async runs).
+
+        Submits the run to a background thread and returns immediately
+        with a future-like ``AsyncRunHandle``: ``.state`` reads
+        ``RUNNING`` until the run resolves, ``.poll()`` probes without
+        blocking, ``.result()`` joins and yields the same typed
+        ``RunHandle`` a synchronous ``run()`` would have returned —
+        identical SUCCESS/AUDIT_FAILED/ERROR semantics, transform-audit-
+        write included.  ``raise_errors`` defaults to **False** here so
+        infrastructure errors resolve into an ``ERROR`` handle instead of
+        detonating inside the background thread; pass ``True`` to have
+        ``result()`` re-raise them.
+
+        Concurrent async runs are safe — branch heads move via CAS, run
+        ids are allocated atomically, and the executor fleet is shared —
+        but per-run ``io`` deltas are store-global and may include a
+        concurrent run's traffic.  ``close()`` joins in-flight runs.
+        """
+        # resolve on the caller's thread: module imports (and their
+        # side-effectful project registration) don't belong on the lane
+        pipeline = resolve_pipeline(target)
+        with self._async_lock:
+            # checked under the lock: a racing close() must not leave a
+            # freshly-built pool (and a run against a dead fleet) behind
+            if self._closed:
+                raise RuntimeError("client is closed")
+            if self._async_pool is None:
+                self._async_pool = ThreadPoolExecutor(
+                    max_workers=4, thread_name_prefix="run-async"
+                )
+            pool = self._async_pool
+        future = pool.submit(
+            self.run,
+            pipeline,
+            branch=branch,
+            params=params,
+            fusion=fusion,
+            pushdown=pushdown,
+            cache=cache,
+            base_commit=base_commit,
+            author=author,
+            planner_config=planner_config,
+            raise_errors=raise_errors,
+            parallelism=parallelism,
+        )
+        return AsyncRunHandle(future, branch=branch)
 
     def replay(
         self,
@@ -457,6 +549,9 @@ class BranchHandle:
         self._created = False
         self._failed = False
         self._entered = False
+        #: async runs launched through this handle — joined at exit so
+        #: the merge/rollback decision never races an in-flight run
+        self._async_handles: List[AsyncRunHandle] = []
 
     # ----------------------------------------------------------- lifecycle
     def _ensure(self) -> None:
@@ -475,6 +570,18 @@ class BranchHandle:
 
     def __exit__(self, exc_type: Any, exc: Any, tb: Any) -> None:
         self._entered = False
+        # join in-flight async runs FIRST: the exit-time merge/rollback
+        # decision must see their outcomes (and their merges into this
+        # branch must not race its deletion).  The outcome is read off the
+        # joined future directly — done-callbacks may still be in flight
+        for handle in self._async_handles:
+            try:
+                ok = handle._future.result().ok
+            except BaseException:
+                ok = False  # an escaped infra error rolls the branch back
+            if not ok:
+                self._failed = True
+        self._async_handles.clear()
         if not self.ephemeral:
             return
         if exc_type is not None or self._failed:
@@ -497,6 +604,25 @@ class BranchHandle:
         handle = self.client.run(target, branch=self.name, **kwargs)
         if not handle.ok:
             self._failed = True
+        return handle
+
+    def run_async(self, target: RunTarget, **kwargs: Any) -> AsyncRunHandle:
+        """Async run scoped to this branch.  Any handle still in flight
+        when the ``with`` block exits is joined there, so the exit-time
+        merge/rollback decision always sees the run's outcome."""
+        self._ensure()
+        handle = self.client.run_async(target, branch=self.name, **kwargs)
+
+        def _note_outcome(fut: Any) -> None:
+            try:
+                ok = fut.result().ok
+            except BaseException:
+                ok = False
+            if not ok:
+                self._failed = True
+
+        handle._future.add_done_callback(_note_outcome)
+        self._async_handles.append(handle)
         return handle
 
     def replay(self, run_id: int, target: RunTarget, **kwargs: Any) -> RunHandle:

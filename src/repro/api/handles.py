@@ -12,9 +12,15 @@
 
 ``artifact(name)`` reads lazily through the table format — nothing is
 deserialized until asked for.
+
+``Client.run_async`` returns an ``AsyncRunHandle`` instead: a future-like
+wrapper (``.state`` reads ``RUNNING`` until resolution, ``.poll()`` is
+the non-blocking probe, ``.result()`` the blocking join) that resolves to
+exactly the same typed ``RunHandle``.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import enum
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
@@ -29,6 +35,9 @@ class RunState(str, enum.Enum):
     SUCCESS = "SUCCESS"
     AUDIT_FAILED = "AUDIT_FAILED"
     ERROR = "ERROR"
+    #: an async run still executing (``AsyncRunHandle.state`` only —
+    #: a resolved ``RunHandle`` is always one of the three final states)
+    RUNNING = "RUNNING"
 
     def __str__(self) -> str:  # `print(handle.state)` reads cleanly
         return self.value
@@ -120,3 +129,60 @@ class RunHandle:
             f"branch={self.branch!r}, merged={merged}, "
             f"artifacts={sorted(self.artifacts)})"
         )
+
+
+class AsyncRunHandle:
+    """Future-like handle for ``Client.run_async`` (paper Table 1).
+
+    The run executes on a background thread; this handle wraps its
+    future.  ``state`` is ``RunState.RUNNING`` until the run resolves,
+    then the underlying ``RunHandle``'s state (``SUCCESS`` /
+    ``AUDIT_FAILED`` / ``ERROR``) — same semantics as a synchronous run.
+    ``poll()`` is the non-blocking probe (``None`` while running),
+    ``result()`` the blocking join.
+    """
+
+    def __init__(self, future: "cf.Future[RunHandle]", *, branch: str):
+        self._future = future
+        self.branch = branch
+
+    # ------------------------------------------------------------- status
+    def done(self) -> bool:
+        return self._future.done()
+
+    @property
+    def state(self) -> RunState:
+        """Non-blocking: RUNNING until resolved, then the final state."""
+        if not self._future.done():
+            return RunState.RUNNING
+        if self._future.exception() is not None:
+            # run_async(raise_errors=True) let an infra error escape; the
+            # exception itself surfaces on result()
+            return RunState.ERROR
+        return self._future.result().state
+
+    @property
+    def running(self) -> bool:
+        return not self._future.done()
+
+    # -------------------------------------------------------------- joins
+    def poll(self) -> Optional[RunHandle]:
+        """The resolved ``RunHandle``, or ``None`` while still running.
+        Re-raises the run's exception if one escaped capture."""
+        if not self._future.done():
+            return None
+        return self._future.result()
+
+    def result(self, timeout: Optional[float] = None) -> RunHandle:
+        """Block until the run resolves and return its ``RunHandle``
+        (raises ``concurrent.futures.TimeoutError`` on timeout)."""
+        return self._future.result(timeout)
+
+    def raise_for_state(self) -> RunHandle:
+        """Block, then raise ``RunFailed`` unless the run succeeded."""
+        return self.result().raise_for_state()
+
+    def __repr__(self) -> str:
+        if not self._future.done():
+            return f"AsyncRunHandle(branch={self.branch!r}, state=RUNNING)"
+        return f"AsyncRunHandle(resolved={self.poll()!r})"

@@ -8,6 +8,7 @@ helpers:
   python -m repro.cli --lake /path/to/lake query -q "SELECT ..." [-b branch]
   python -m repro.cli --lake ... run pipeline_module.py [-b branch]
                                       [--no-fusion] [--run-id N --replay]
+                                      [--parallelism N] [--no-cache]
   python -m repro.cli --lake ... branch [--create NAME] [--from BASE]
   python -m repro.cli --lake ... log [-b branch]
   python -m repro.cli --lake ... tables [-b branch]
@@ -30,6 +31,7 @@ from __future__ import annotations
 import argparse
 
 from repro.api import Client, RunState, resolve_pipeline
+from repro.runtime import ExecutorConfig
 
 
 def _print_table(rows: dict, *, limit: int = 20) -> None:
@@ -63,6 +65,13 @@ def main(argv=None) -> None:
     r.add_argument("--no-fusion", action="store_true")
     r.add_argument("--replay", action="store_true")
     r.add_argument("--run-id", type=int, default=None)
+    r.add_argument(
+        "--parallelism", type=int, default=None, metavar="N",
+        help="max independent stages in flight at once (wave scheduler; "
+        "default: executor max_concurrent_stages). Results are "
+        "byte-identical at every level — this is a throughput knob, "
+        "never a semantics knob",
+    )
     r.add_argument(
         "--cache",
         action=argparse.BooleanOptionalAction,
@@ -123,7 +132,20 @@ def main(argv=None) -> None:
 
     args = ap.parse_args(argv)
 
-    with Client(args.lake) as client:
+    # --parallelism N widens the whole fleet: N stages in flight needs at
+    # least N containers for their stage functions (plus headroom for
+    # speculation backups and parallel shard reads)
+    executor_config = None
+    parallelism = getattr(args, "parallelism", None)
+    if parallelism is not None:
+        if parallelism < 1:
+            raise SystemExit(f"--parallelism must be >= 1 (got {parallelism})")
+        executor_config = ExecutorConfig(
+            max_workers=max(4, parallelism),
+            max_concurrent_stages=parallelism,
+        )
+
+    with Client(args.lake, executor_config=executor_config) as client:
         if args.cmd == "branch":
             if args.create:
                 client.create_branch(args.create, from_branch=args.from_branch)
@@ -210,6 +232,7 @@ def main(argv=None) -> None:
         res = client.run(
             pipeline, branch=args.branch, fusion=not args.no_fusion,
             pushdown=not args.no_fusion, cache=args.cache,
+            parallelism=parallelism,
         )
         if res.state is RunState.AUDIT_FAILED:
             raise SystemExit(
@@ -219,7 +242,9 @@ def main(argv=None) -> None:
         print(f"run {res.run_id} merged to {args.branch!r} "
               f"@ {res.merged_commit[:12]}")
         print(f"artifacts: {sorted(res.artifacts)}  checks: {res.checks}")
-        print(f"wall: {res.stats['wall_s']:.2f}s  io: {res.stats['io']}")
+        print(f"wall: {res.stats['wall_s']:.2f}s  "
+              f"parallelism: {res.stats.get('parallelism', 1)}  "
+              f"io: {res.stats['io']}")
         cache = res.cache
         if cache.get("enabled"):
             total = cache["hits"] + cache["nodes_executed"]

@@ -85,6 +85,10 @@ class Stage:
     #: stage-keyed entries written by old lakes can still be matched and
     #: upgraded (``CacheView.adopt_legacy``).
     transitive_fingerprint: str = ""
+    #: stage ids whose outputs feed this stage — the dependency edges the
+    #: wave scheduler walks (always lower than this stage's id; restored
+    #: cache inputs are not edges, they are committed before any stage runs)
+    parent_stages: Tuple[int, ...] = ()
 
     @property
     def input_order(self) -> Tuple[str, ...]:
@@ -638,6 +642,7 @@ def build_physical_plan(
                 resources=cost_model.request_for_scan(total_bytes),
                 fingerprint="-".join(logical.nodes[n].fingerprint for n in names),
                 transitive_fingerprint=transitive[sid],
+                parent_stages=tuple(parent_stages),
             )
         )
     executed = {n for names in stage_nodes for n in names}

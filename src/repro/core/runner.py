@@ -15,16 +15,29 @@ Stage execution goes through the serverless executor (retries, warm
 starts, speculation); artifacts flow between stages in memory within a
 run (data locality, 4.5) and hit the object store only at stage
 boundaries/outputs.
+
+Since PR 5 stages are *wave-scheduled*: every stage whose parents have
+completed is submitted to the executor's stage lane immediately (in-flight
+bounded by ``parallelism`` / ``ExecutorConfig.max_concurrent_stages``),
+so independent fan-out stages run concurrently — the serverless promise
+of the paper, on the single-host build.  Parallelism never changes
+semantics: artifact manifests, check verdicts and cache entries are
+byte-identical at every level, and per-stage catalog commits are applied
+in stage-id order so branch history stays linear and deterministic.
 """
 from __future__ import annotations
 
+import heapq
+import threading
 import time
+from concurrent.futures import FIRST_COMPLETED, Future
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.catalog.nessie import Catalog
+from repro.catalog.nessie import Catalog, CatalogError
 from repro.core.logical import LogicalPlan, build_logical_plan
 from repro.core.physical import (
     PhysicalPlan,
@@ -151,7 +164,9 @@ class Runner:
         if columns == []:  # pure COUNT(*): any one column carries the rows
             columns = [snapshot.schema.names[0]]
         scan = plan_scan(snapshot, columns=columns, predicates=pushed)
-        rel = Columnar.from_numpy(execute_scan(self.fmt, scan))
+        rel = Columnar.from_numpy(
+            execute_scan(self.fmt, scan, pool=self.executor.io_pool)
+        )
         residual_query = _replace(query, filter_expr=residual)
         out = compile_query(residual_query)(rel)
         return out.to_numpy()
@@ -169,6 +184,7 @@ class Runner:
         author: str = "user",
         cache: bool = True,
         planner_config: Optional[PlannerConfig] = None,
+        parallelism: Optional[int] = None,
     ) -> RunResult:
         """Execute ``pipeline`` with transform-audit-write semantics.
 
@@ -184,14 +200,25 @@ class Runner:
         when the caller needs full control (e.g. ``max_stage_nodes``) —
         thanks to node-granular cache keys, replanning under a different
         config still reuses every cached node.
+
+        ``parallelism`` bounds how many independent physical stages the
+        wave scheduler keeps in flight at once (default: the executor's
+        ``max_concurrent_stages``).  Every level produces byte-identical
+        artifact manifests, check verdicts and cache entries — parallelism
+        is a throughput knob, never a semantics knob.
         """
         t_start = time.perf_counter()
         params = dict(params or {})
 
-        # 1. branch handling (auto-create like the paper's git detection)
+        # 1. branch handling (auto-create like the paper's git detection);
+        # tolerate a concurrent run creating the same branch first
         if not self.catalog.has_branch(branch):
-            self.catalog.create_branch(branch)
-            log.info("created catalog branch %r from main", branch)
+            try:
+                self.catalog.create_branch(branch)
+                log.info("created catalog branch %r from main", branch)
+            except CatalogError:
+                if not self.catalog.has_branch(branch):
+                    raise
         base = (
             self.catalog.get_commit(base_commit)
             if base_commit
@@ -213,6 +240,7 @@ class Runner:
                     or PlannerConfig(fusion=fusion, pushdown=pushdown),
                     run_id,
                     use_cache=cache,
+                    parallelism=parallelism,
                 )
             except Exception:
                 # any failure: discard the ephemeral branch — prod stays clean
@@ -270,6 +298,7 @@ class Runner:
         run_id: int,
         *,
         strict_code: bool = True,
+        parallelism: Optional[int] = None,
     ) -> RunResult:
         """Re-execute run ``run_id``: same code, same data version (4.6).
 
@@ -294,6 +323,7 @@ class Runner:
                 pipeline, rec.branch, ephemeral, rec.base_commit,
                 dict(rec.params), PlannerConfig(fusion=rec.fused), replay_id,
                 use_cache=False,
+                parallelism=parallelism,
             )
         finally:
             self.catalog.delete_branch(ephemeral)
@@ -320,6 +350,7 @@ class Runner:
         run_id: int,
         *,
         use_cache: bool = False,
+        parallelism: Optional[int] = None,
     ) -> Dict[str, Any]:
         # 2. code intelligence: logical plan pinned to the base commit
         tables_at_base = self.catalog.get_commit(base_commit).tables
@@ -359,7 +390,6 @@ class Runner:
         env: Dict[str, Columnar] = {}  # in-memory artifact cache (locality)
         artifacts: Dict[str, str] = {}
         checks: Dict[str, bool] = {}
-        stages_executed = 0
         bytes_saved = 0
         new_entries: Dict[str, NodeCacheEntry] = {}
         bytes_before = self.fmt.store.stats.snapshot()
@@ -399,19 +429,57 @@ class Runner:
                 len(plan.elided),
             )
 
-        for stage in plan.stages:
+        # 3b. wave/eager scheduling: every stage whose parent stages have
+        # completed is submitted to the executor's stage lane (in-flight
+        # bounded by ``parallelism``); completions unblock dependents
+        # immediately — no barrier between waves.  Shared run state (env,
+        # artifacts, checks, cache candidates, counters) is guarded by
+        # ``state_lock``; catalog commits are funneled through
+        # ``pending_commits`` and applied in stage-id order, so the
+        # ephemeral branch's history is linear and identical to a
+        # sequential run's, whatever order stages actually finish in.
+        workers = max(
+            1,
+            parallelism
+            if parallelism is not None
+            else self.executor.config.max_concurrent_stages,
+        )
+        state_lock = threading.Lock()
+        counters = {"stages_executed": 0}
+        pending_commits: Dict[int, Dict[str, Optional[str]]] = {}
+        next_commit = [0]
+
+        def flush_commits_locked() -> None:
+            # called with state_lock held: drain the contiguous prefix of
+            # completed stages (the commit queue's epoch advance)
+            while next_commit[0] in pending_commits:
+                sid = next_commit[0]
+                updates = pending_commits.pop(sid)
+                if updates:
+                    self.catalog.commit(
+                        ephemeral, updates,
+                        message=f"run {run_id} stage {sid}",
+                        author="runner",
+                    )
+                next_commit[0] += 1
+
+        def run_stage(stage) -> None:
             inputs: List[Columnar] = []
             for table in sorted(stage.scans):
-                data = execute_scan(self.fmt, stage.scans[table].plan)
+                data = execute_scan(
+                    self.fmt, stage.scans[table].plan,
+                    pool=self.executor.io_pool,
+                )
                 inputs.append(Columnar.from_numpy(data))
             for name in stage.internal_inputs:
-                if name in env:  # data locality: reuse in-memory artifact
-                    inputs.append(env[name])
-                else:  # fallback: read back from the ephemeral branch
+                with state_lock:  # data locality: reuse in-memory artifact
+                    rel = env.get(name)
+                if rel is None:  # fallback: read from the ephemeral branch
                     key = self.catalog.table_key(name, branch=ephemeral)
-                    inputs.append(
-                        Columnar.from_numpy(self.fmt.read(self.fmt.load_snapshot(key)))
+                    rel = Columnar.from_numpy(
+                        self.fmt.read(self.fmt.load_snapshot(key))
                     )
+                inputs.append(rel)
             spec = FunctionSpec(
                 name=f"{pipeline.name}/stage{stage.stage_id}",
                 fn=stage.fn,
@@ -419,16 +487,13 @@ class Runner:
                 resources=stage.resources,
             )
             outputs, stage_checks = self.executor.run(spec, *inputs)
-            stages_executed += 1
-            this_stage_checks: Dict[str, bool] = {}
-            for cname, val in stage_checks.items():
-                verdict = bool(np.asarray(val))
-                checks[cname] = verdict
-                this_stage_checks[cname] = verdict
+            # store I/O (artifact writes) runs outside the state lock so
+            # concurrent stages overlap their writes; only the publication
+            # of results + the ordered commit drain is serialized
             updates: Dict[str, Optional[str]] = {}
             node_bytes: Dict[str, int] = {}
+            written: Dict[str, Any] = {}
             for name, rel in outputs.items():
-                env[name] = rel
                 compact = rel.to_numpy(compact=True)
                 node_bytes[name] = sum(arr.nbytes for arr in compact.values())
                 schema = Schema(
@@ -438,43 +503,90 @@ class Runner:
                 )
                 snap = self.fmt.write(name, schema, compact)
                 key = self.fmt.manifest_key(snap)
-                artifacts[name] = key
                 updates[name] = key
-            if updates:
-                self.catalog.commit(
-                    ephemeral, updates,
-                    message=f"run {run_id} stage {stage.stage_id}",
-                    author="runner",
-                )
-            if use_cache:
-                # candidate node entries — persisted by run() only if the
-                # audit passes (failed audits must not poison future runs).
-                # One entry per materialized artifact and one per evaluated
-                # expectation, keyed by the fusion-independent node
-                # fingerprint, so any future plan shape can reuse them.
-                now = time.time()
-                for name in stage.outputs:
-                    fp = plan.node_fingerprints[name]
-                    new_entries[fp] = NodeCacheEntry(
-                        fingerprint=fp,
-                        outputs={name: artifacts[name]},
-                        checks={},
-                        output_bytes=node_bytes.get(name, 0),
-                        run_id=run_id,
-                        created_at=now,
-                        node=name,
-                    )
-                for cname, verdict in this_stage_checks.items():
-                    fp = plan.node_fingerprints[cname]
-                    new_entries[fp] = NodeCacheEntry(
-                        fingerprint=fp,
-                        outputs={},
-                        checks={cname: verdict},
-                        output_bytes=0,
-                        run_id=run_id,
-                        created_at=now,
-                        node=cname,
-                    )
+                written[name] = (rel, key)
+            now = time.time()
+            with state_lock:
+                counters["stages_executed"] += 1
+                for name, (rel, key) in written.items():
+                    env[name] = rel
+                    artifacts[name] = key
+                this_stage_checks: Dict[str, bool] = {}
+                for cname, val in stage_checks.items():
+                    verdict = bool(np.asarray(val))
+                    checks[cname] = verdict
+                    this_stage_checks[cname] = verdict
+                if use_cache:
+                    # candidate node entries — persisted by run() only if
+                    # the audit passes (failed audits must not poison
+                    # future runs).  One entry per materialized artifact
+                    # and one per evaluated expectation, keyed by the
+                    # fusion-independent node fingerprint, so any future
+                    # plan shape can reuse them.
+                    for name in stage.outputs:
+                        fp = plan.node_fingerprints[name]
+                        new_entries[fp] = NodeCacheEntry(
+                            fingerprint=fp,
+                            outputs={name: artifacts[name]},
+                            checks={},
+                            output_bytes=node_bytes.get(name, 0),
+                            run_id=run_id,
+                            created_at=now,
+                            node=name,
+                        )
+                    for cname, verdict in this_stage_checks.items():
+                        fp = plan.node_fingerprints[cname]
+                        new_entries[fp] = NodeCacheEntry(
+                            fingerprint=fp,
+                            outputs={},
+                            checks={cname: verdict},
+                            output_bytes=0,
+                            run_id=run_id,
+                            created_at=now,
+                            node=cname,
+                        )
+                pending_commits[stage.stage_id] = updates
+                flush_commits_locked()
+
+        stage_by_id = {s.stage_id: s for s in plan.stages}
+        deps = {s.stage_id: set(s.parent_stages) for s in plan.stages}
+        dependents: Dict[int, List[int]] = {}
+        for s in plan.stages:
+            for p in s.parent_stages:
+                dependents.setdefault(p, []).append(s.stage_id)
+        # min-heap keeps the ready set in ascending stage-id order: at
+        # parallelism 1 this degenerates to exactly the old sequential
+        # stage loop (the determinism-parity baseline)
+        ready = [sid for sid in deps if not deps[sid]]
+        heapq.heapify(ready)
+        in_flight: Dict[Future, int] = {}
+        failures: Dict[int, BaseException] = {}
+        while ready or in_flight:
+            while ready and len(in_flight) < workers and not failures:
+                sid = heapq.heappop(ready)
+                fut = self.executor.submit_stage(run_stage, stage_by_id[sid])
+                in_flight[fut] = sid
+            if not in_flight:
+                break  # a failure stopped submissions; nothing to drain
+            done, _ = futures_wait(
+                set(in_flight), return_when=FIRST_COMPLETED
+            )
+            for fut in done:
+                sid = in_flight.pop(fut)
+                err = fut.exception()
+                if err is not None:
+                    # stop scheduling, drain in-flight stages, then raise
+                    failures[sid] = err
+                    continue
+                for child in dependents.get(sid, ()):
+                    deps[child].discard(sid)
+                    if not deps[child]:
+                        heapq.heappush(ready, child)
+        if failures:
+            # deterministic surfacing: raise the lowest failed stage id —
+            # what the sequential loop would have hit first
+            raise failures[min(failures)]
+        stages_executed = counters["stages_executed"]
         bytes_after = self.fmt.store.stats.snapshot()
         # cache_* counters are run-level telemetry (reported under "cache")
         # and gc_*/compact_* belong to the lakekeeper, not bytes moved by
@@ -489,6 +601,7 @@ class Runner:
             "artifacts": artifacts,
             "checks": checks,
             "io": io_delta,
+            "parallelism": workers,
             "cache": {
                 "enabled": use_cache,
                 # node-granular hit accounting: every cache-satisfied
@@ -532,6 +645,7 @@ class Runner:
                 "wall_s": time.perf_counter() - t_start,
                 "stages": len(result["plan"].stages),
                 "stages_executed": cache["stages_executed"],
+                "parallelism": result.get("parallelism", 1),
                 "io": result["io"],
                 "executor": self.executor.stats(),
                 "cache": {

@@ -28,7 +28,13 @@ from repro.utils.hashing import content_hash
 
 @dataclass
 class StoreStats:
-    """Telemetry: the 'bytes moved' ledger used by planner + benchmarks."""
+    """Telemetry: the 'bytes moved' ledger used by planner + benchmarks.
+
+    Counter updates are atomic under the ledger's own lock (``bump``), so
+    concurrently executing stages — the wave scheduler runs shard reads
+    and artifact writes from many threads — can never lose I/O accounting,
+    regardless of which component holds the ``ObjectStore`` lock.
+    """
 
     puts: int = 0
     gets: int = 0
@@ -47,20 +53,31 @@ class StoreStats:
     cache_entries_evicted: int = 0
     compact_shards_merged: int = 0
 
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
+    def bump(self, **deltas: int) -> None:
+        """Atomically increment counters by name — the single mutation
+        path; every writer goes through here."""
+        with self._lock:
+            for name, delta in deltas.items():
+                setattr(self, name, getattr(self, name) + delta)
+
     def snapshot(self) -> Dict[str, int]:
-        return {
-            "puts": self.puts,
-            "gets": self.gets,
-            "bytes_written": self.bytes_written,
-            "bytes_read": self.bytes_read,
-            "ref_updates": self.ref_updates,
-            "cache_hits": self.cache_hits,
-            "cache_bytes_saved": self.cache_bytes_saved,
-            "gc_objects_swept": self.gc_objects_swept,
-            "gc_bytes_reclaimed": self.gc_bytes_reclaimed,
-            "cache_entries_evicted": self.cache_entries_evicted,
-            "compact_shards_merged": self.compact_shards_merged,
-        }
+        with self._lock:
+            return {
+                "puts": self.puts,
+                "gets": self.gets,
+                "bytes_written": self.bytes_written,
+                "bytes_read": self.bytes_read,
+                "ref_updates": self.ref_updates,
+                "cache_hits": self.cache_hits,
+                "cache_bytes_saved": self.cache_bytes_saved,
+                "gc_objects_swept": self.gc_objects_swept,
+                "gc_bytes_reclaimed": self.gc_bytes_reclaimed,
+                "cache_entries_evicted": self.cache_entries_evicted,
+                "compact_shards_merged": self.compact_shards_merged,
+            }
 
 
 @dataclass(frozen=True)
@@ -93,8 +110,8 @@ class ObjectStore:
         self.root = Path(self.root)
         (self.root / "objects").mkdir(parents=True, exist_ok=True)
         (self.root / "refs").mkdir(parents=True, exist_ok=True)
-        # RLock: compare_and_set_ref holds the lock across get_ref/set_ref,
-        # and set_ref bumps stats under the same lock.
+        # RLock: compare_and_set_ref holds the lock across get_ref/set_ref
+        # (stats counters have their own lock inside StoreStats).
         self._lock = threading.RLock()
 
     # ------------------------------------------------------------------ blobs
@@ -105,9 +122,7 @@ class ObjectStore:
         """Store a blob, return its content address. Idempotent."""
         key = content_hash(data)
         path = self._object_path(key)
-        with self._lock:
-            self.stats.puts += 1
-            self.stats.bytes_written += len(data)
+        self.stats.bump(puts=1, bytes_written=len(data))
         if path.exists():  # content-addressed: already present...
             # ...but refresh its mtime: the GC grace period keys off object
             # age, and a writer deduping onto an old *unreachable* blob
@@ -137,9 +152,7 @@ class ObjectStore:
         actual = content_hash(data)
         if actual != key:
             raise IOError(f"object store corruption: key={key} hash={actual}")
-        with self._lock:
-            self.stats.gets += 1
-            self.stats.bytes_read += len(data)
+        self.stats.bump(gets=1, bytes_read=len(data))
         return data
 
     def exists(self, key: str) -> bool:
@@ -148,15 +161,12 @@ class ObjectStore:
     def record_cache_hit(self, bytes_saved: int) -> None:
         """Count a differential-cache restore: one stage skipped,
         ``bytes_saved`` output bytes NOT re-written to the store."""
-        with self._lock:
-            self.stats.cache_hits += 1
-            self.stats.cache_bytes_saved += bytes_saved
+        self.stats.bump(cache_hits=1, cache_bytes_saved=bytes_saved)
 
     def bump_stat(self, counter: str, n: int = 1) -> None:
         """Thread-safe increment of a StoreStats counter by name (the
         maintenance services report through this)."""
-        with self._lock:
-            setattr(self.stats, counter, getattr(self.stats, counter) + n)
+        self.stats.bump(**{counter: n})
 
     def keys(self) -> Iterator[str]:
         objects = self.root / "objects"
@@ -239,9 +249,9 @@ class ObjectStore:
             swept += 1
             bytes_reclaimed += size
         if not dry_run:
-            with self._lock:
-                self.stats.gc_objects_swept += swept
-                self.stats.gc_bytes_reclaimed += bytes_reclaimed
+            self.stats.bump(
+                gc_objects_swept=swept, gc_bytes_reclaimed=bytes_reclaimed
+            )
         return SweepResult(swept, bytes_reclaimed, kept_young, dry_run)
 
     # ------------------------------------------------------------------- refs
@@ -260,8 +270,7 @@ class ObjectStore:
         finally:
             if os.path.exists(tmp):
                 os.unlink(tmp)
-        with self._lock:
-            self.stats.ref_updates += 1
+        self.stats.bump(ref_updates=1)
 
     def get_ref(self, namespace: str, name: str) -> Optional[Dict]:
         path = self._ref_path(namespace, name)

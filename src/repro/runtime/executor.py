@@ -24,13 +24,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from concurrent.futures import (
-    FIRST_COMPLETED,
-    Future,
-    ThreadPoolExecutor,
-    TimeoutError as FuturesTimeoutError,
-    wait,
-)
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -61,6 +55,11 @@ class ExecutorConfig:
     #: baseline single-task speculation falls back to when a task has no
     #: completed siblings to take a median over
     latency_history_size: int = 64
+    #: upper bound on pipeline stages the wave scheduler keeps in flight at
+    #: once (the CLI's ``--parallelism``).  Stage *functions* still execute
+    #: on the container pool, so effective compute parallelism is
+    #: ``min(max_concurrent_stages, max_workers)``.
+    max_concurrent_stages: int = 4
 
 
 @dataclass
@@ -122,6 +121,12 @@ class ServerlessExecutor:
         self._pool = ThreadPoolExecutor(
             max_workers=self.config.max_workers, thread_name_prefix="container"
         )
+        #: drivers of whole pipeline stages (scan → execute → write) run in
+        #: their own lane: they *block* on container-pool futures, so giving
+        #: them container workers could deadlock a full fleet.  Sized above
+        #: ``max_concurrent_stages`` because the lane only provides threads —
+        #: the wave scheduler enforces the actual in-flight bound.
+        self._stage_pool: Optional[ThreadPoolExecutor] = None
         self._durations: List[float] = []
         self._speculations = 0  # duplicates launched, lifetime of the pool
         #: function fingerprint -> recent completed durations (the prior-run
@@ -131,6 +136,10 @@ class ServerlessExecutor:
 
     # ----------------------------------------------------------- lifecycle
     def shutdown(self) -> None:
+        with self._lock:
+            stage_pool, self._stage_pool = self._stage_pool, None
+        if stage_pool is not None:
+            stage_pool.shutdown(wait=True)
         self._pool.shutdown(wait=True)
 
     def __enter__(self) -> "ServerlessExecutor":
@@ -185,6 +194,28 @@ class ServerlessExecutor:
     def submit(self, spec: FunctionSpec, *args: Any) -> "Future[Any]":
         return self._pool.submit(self._run_with_retries, spec, args)
 
+    def submit_stage(self, fn: Callable[..., Any], *args: Any) -> "Future[Any]":
+        """Submit one stage *driver* (scan → execute → write) to the stage
+        lane.  Drivers block on container-pool futures (``run`` /
+        ``submit_speculative``) and on parallel shard reads, so they get
+        their own threads — a fleet of busy containers can never deadlock
+        the wave scheduler."""
+        with self._lock:
+            if self._stage_pool is None:
+                self._stage_pool = ThreadPoolExecutor(
+                    max_workers=max(self.config.max_concurrent_stages, 32),
+                    thread_name_prefix="stage",
+                )
+            pool = self._stage_pool
+        return pool.submit(fn, *args)
+
+    @property
+    def io_pool(self) -> ThreadPoolExecutor:
+        """Leaf-task lane for parallel shard reads (``execute_scan``'s
+        ``pool``).  Shares the container pool — shard reads never block on
+        other futures, so they are always safe to queue there."""
+        return self._pool
+
     # ------------------------------------------------- latency baselines
     def seed_latency_history(
         self, history: Dict[str, Sequence[float]]
@@ -220,55 +251,91 @@ class ServerlessExecutor:
             return None
         return sorted(history)[len(history) // 2]
 
-    def run(self, spec: FunctionSpec, *args: Any) -> Any:
-        """Run one task synchronously, speculating against its own history.
+    def submit_speculative(self, spec: FunctionSpec, *args: Any) -> "Future[Any]":
+        """Future-returning ``run()``: primary submitted now, straggler
+        backup armed against the per-fingerprint latency history.
 
         A single task has no completed siblings to take a median over, so
-        the straggler baseline is the per-fingerprint latency history of
-        prior runs: once the primary exceeds ``speculation_factor`` × that
-        median, ONE duplicate launches and the first successful finisher
-        wins.  With no history the primary just runs to completion — the
-        pre-speculation behaviour, byte for byte.
+        the straggler baseline is the latency history of prior runs: once
+        the primary exceeds ``speculation_factor`` × that median, ONE
+        duplicate launches and the first successful finisher wins.  With
+        no history the primary just runs to completion.  Because the
+        deadline is a timer (not a blocking wait), any number of
+        concurrently submitted stages each keep their own speculation —
+        this is what lets straggler backup requests compose with the wave
+        scheduler's concurrent stage submissions.
         """
+        result: "Future[Any]" = Future()
+        state_lock = threading.Lock()
         with self._lock:
             # records before this invocation (baseline-building successes
             # included) must not count toward this task's attempt ledger
             start_idx = len(self.records)
-        primary = self.submit(spec, *args)
-        baseline = self._historical_baseline(spec)
-        if baseline is None:
-            return primary.result()
-        cfg = self.config
-        deadline = cfg.speculation_factor * max(baseline, 1e-4)
-        try:
-            return primary.result(timeout=deadline)
-        except TaskFailure:
-            raise  # every retry failed before the deadline — no twin to wait on
-        except FuturesTimeoutError:
-            log.info("speculating single straggler task %s", spec.name)
-        with self._lock:
-            self._speculations += 1
-        racers: List[Future] = [
-            primary, self._pool.submit(self._run_with_retries, spec, args, True)
-        ]
-        pending = set(racers)
-        while pending:
-            done, pending = wait(pending, return_when=FIRST_COMPLETED)
-            for fut in done:
+        racers: List[Future] = []
+        timer: List[Optional[threading.Timer]] = [None]
+
+        def on_racer_done(fut: "Future[Any]") -> None:
+            with state_lock:
+                if result.done():
+                    return
                 if fut.exception() is None:
-                    return fut.result()
-        # every racer failed — one TaskFailure, attempts accounted across
-        # the original and its duplicate (this invocation only)
-        with self._lock:
-            attempts = sum(
-                r.attempts
-                for r in self.records[start_idx:]
-                if r.name == spec.name
-            )
-        raise TaskFailure(
-            f"task {spec.name!r} failed on all {len(racers)} container(s) "
-            f"after {attempts} total attempts"
-        ) from racers[-1].exception()
+                    if timer[0] is not None:
+                        timer[0].cancel()
+                    result.set_result(fut.result())
+                    return
+                if not all(r.done() for r in racers):
+                    return  # a twin is still running — it may yet win
+                if timer[0] is not None:
+                    timer[0].cancel()
+                if len(racers) == 1:
+                    # every retry failed before the deadline — no twin to
+                    # wait on; surface the primary's TaskFailure as-is
+                    result.set_exception(fut.exception())
+                    return
+                # every racer failed — one TaskFailure, attempts accounted
+                # across the original and its duplicate (this invocation)
+                with self._lock:
+                    attempts = sum(
+                        r.attempts
+                        for r in self.records[start_idx:]
+                        if r.name == spec.name
+                    )
+                failure = TaskFailure(
+                    f"task {spec.name!r} failed on all {len(racers)} "
+                    f"container(s) after {attempts} total attempts"
+                )
+                failure.__cause__ = racers[-1].exception()
+                result.set_exception(failure)
+
+        def arm_backup() -> None:
+            with state_lock:
+                if result.done() or racers[0].done():
+                    return
+                log.info("speculating single straggler task %s", spec.name)
+                with self._lock:
+                    self._speculations += 1
+                backup = self._pool.submit(
+                    self._run_with_retries, spec, args, True
+                )
+                racers.append(backup)
+            backup.add_done_callback(on_racer_done)
+
+        primary = self._pool.submit(self._run_with_retries, spec, args)
+        racers.append(primary)
+        baseline = self._historical_baseline(spec)
+        if baseline is not None:
+            deadline = self.config.speculation_factor * max(baseline, 1e-4)
+            t = threading.Timer(deadline, arm_backup)
+            t.daemon = True
+            timer[0] = t
+            t.start()
+        primary.add_done_callback(on_racer_done)
+        return result
+
+    def run(self, spec: FunctionSpec, *args: Any) -> Any:
+        """Run one task synchronously, speculating against its own history
+        (blocking face of ``submit_speculative``)."""
+        return self.submit_speculative(spec, *args).result()
 
     # -------------------------------------------------- bulk + speculation
     def map_with_speculation(

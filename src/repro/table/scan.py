@@ -8,6 +8,7 @@ fused stages see an already-small in-memory table.
 """
 from __future__ import annotations
 
+from concurrent.futures import Executor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -73,11 +74,21 @@ class ScanPlan:
     """Output of planning: which shards survive, which columns to read."""
 
     snapshot: Snapshot
+    #: columns to READ — the requested projection plus any predicate-only
+    #: columns needed for residual filtering
     columns: List[str]
     predicates: Tuple[Predicate, ...]
     shards: List[ShardMeta]
     pruned_shards: int = 0
     pruned_columns: int = 0
+    #: columns to RETURN (the caller's projection); predicate-only columns
+    #: are read for filtering but dropped from the result.  ``None`` means
+    #: everything read is projected (pre-projection plans deserialize so).
+    projection: Optional[List[str]] = None
+
+    @property
+    def output_columns(self) -> List[str]:
+        return self.columns if self.projection is None else self.projection
 
     @property
     def rows_to_read(self) -> int:
@@ -106,6 +117,7 @@ def plan_scan(
         shards=keep,
         pruned_shards=len(snapshot.shards) - len(keep),
         pruned_columns=len(all_cols) - len(read_cols),
+        projection=needed,
     )
 
 
@@ -127,15 +139,28 @@ def pruning_effectiveness(
     return 1.0 - plan.rows_to_read / total
 
 
-def execute_scan(fmt: TableFormat, plan: ScanPlan) -> TableData:
-    """Read surviving shards, apply the residual row-level predicate."""
+def execute_scan(
+    fmt: TableFormat,
+    plan: ScanPlan,
+    *,
+    pool: Optional[Executor] = None,
+) -> TableData:
+    """Read surviving shards, apply the residual row-level predicate.
+
+    Returns only the plan's *projection* — predicate-only columns are read
+    for filtering and then dropped.  ``pool`` (any
+    ``concurrent.futures.Executor``) parallelizes the per-shard read +
+    residual filter; shard order is preserved, so the concatenated result
+    is byte-identical to the serial read.
+    """
+    out_cols = plan.output_columns
     if not plan.shards:
         return {
             c: np.empty((0,), dtype=plan.snapshot.schema.dtype_of(c))
-            for c in plan.columns
+            for c in out_cols
         }
-    parts: List[TableData] = []
-    for shard in plan.shards:
+
+    def read_one(shard: ShardMeta) -> TableData:
         part = fmt.read_shard(shard, plan.columns)
         if plan.predicates:
             mask = np.ones(shard.num_rows, dtype=bool)
@@ -143,5 +168,25 @@ def execute_scan(fmt: TableFormat, plan: ScanPlan) -> TableData:
                 mask &= p.mask(part[p.column])
             if not mask.all():
                 part = {c: v[mask] for c, v in part.items()}
-        parts.append(part)
-    return {c: np.concatenate([p[c] for p in parts]) for c in plan.columns}
+        return part
+
+    if pool is not None and len(plan.shards) > 1:
+        # batch shards into at most ~16 work items: many tiny shards
+        # would otherwise pay one pool round-trip each and lose to the
+        # serial read (ThreadPoolExecutor.map ignores chunksize, so the
+        # batching is done by hand; order is preserved either way)
+        step = -(-len(plan.shards) // 16)  # ceil division
+        chunks = [
+            plan.shards[i : i + step]
+            for i in range(0, len(plan.shards), step)
+        ]
+        parts = [
+            part
+            for chunk_parts in pool.map(
+                lambda shards: [read_one(s) for s in shards], chunks
+            )
+            for part in chunk_parts
+        ]
+    else:
+        parts = [read_one(shard) for shard in plan.shards]
+    return {c: np.concatenate([p[c] for p in parts]) for c in out_cols}

@@ -1,0 +1,340 @@
+"""Wave-parallel DAG execution: determinism parity, rollback, run_async.
+
+The scheduler contract under test: **parallelism is a throughput knob,
+never a semantics knob**.  A run at parallelism 1 (which degenerates to
+the old sequential stage loop, stage-id order and all) and runs at
+parallelism 2 / 8 must produce byte-identical artifact manifests,
+identical check verdicts, identical node-cache entries and fingerprints —
+and a mid-DAG audit failure must roll back identically.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import AsyncRunHandle, Client, RunState
+from repro.core import Pipeline
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
+from repro.io import ObjectStore, StoreStats
+from repro.runtime import ExecutorConfig
+
+N_ROWS = 4_000
+PARALLELISMS = (1, 2, 8)
+
+
+def _client(parallelism: int) -> Client:
+    return Client.ephemeral(
+        shard_rows=512,
+        executor_config=ExecutorConfig(
+            max_workers=8, max_concurrent_stages=parallelism
+        ),
+    )
+
+
+def build_fanout_pipeline(threshold: float = 10.0) -> Pipeline:
+    """A diamond with an 3-way fan-out middle: source -> (m0, m1, m2) ->
+    combine, plus an audit — enough structure that waves genuinely
+    overlap and a dependent stage must wait for two parents."""
+    p = Pipeline("parallel_parity")
+    p.sql(
+        "trips",
+        """
+        SELECT pickup_location_id, passenger_count as count,
+               dropoff_location_id
+        FROM taxi_table
+        WHERE pickup_at >= '2019-04-01'
+        """,
+    )
+
+    @p.python
+    def trips_expectation(ctx, trips):
+        return trips.mean("count") > threshold
+
+    for i in range(3):
+
+        def make_model(i):
+            def fn(ctx, trips):
+                import jax.numpy as jnp
+
+                col = trips.column("count").astype(jnp.float32)
+                return {"stat": jnp.sort(col) * (i + 1)}
+
+            fn.__name__ = f"m{i}"
+            return fn
+
+        p.python(make_model(i))
+
+    @p.python
+    def combine(ctx, m0, m1):
+        import jax.numpy as jnp
+
+        return {"delta": m1.column("stat") - m0.column("stat")}
+
+    return p
+
+
+def _run_once(parallelism: int, *, threshold: float = 10.0):
+    rng = np.random.default_rng(7)
+    with _client(parallelism) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        handle = client.run(
+            build_fanout_pipeline(threshold),
+            fusion=False,
+            pushdown=False,
+            parallelism=parallelism,
+            raise_errors=False,
+        )
+        cache_entries = {
+            fp: dict(e.outputs)
+            for fp, e in client.cache_registry.entries().items()
+        }
+        return {
+            "state": handle.state,
+            "artifacts": dict(handle.artifacts),
+            "checks": dict(handle.checks),
+            "cache_entries": cache_entries,
+            "node_fps": dict(handle.plan.node_fingerprints),
+            "parallelism": handle.stats.get("parallelism"),
+            "branches": client.branches(),
+            "head_tables": client.tables(),
+        }
+
+
+def test_parallelism_parity_matrix():
+    """Parallelism 1 (the sequential baseline) vs 2 vs 8: byte-identical
+    artifact manifests (content-addressed keys), identical verdicts,
+    identical node-cache entries and fingerprints."""
+    results = {p: _run_once(p) for p in PARALLELISMS}
+    base = results[1]
+    assert base["state"] is RunState.SUCCESS
+    assert base["parallelism"] == 1
+    for p in PARALLELISMS[1:]:
+        got = results[p]
+        assert got["state"] is RunState.SUCCESS
+        assert got["parallelism"] == p
+        assert got["artifacts"] == base["artifacts"]
+        assert got["checks"] == base["checks"]
+        assert got["cache_entries"] == base["cache_entries"]
+        assert got["node_fps"] == base["node_fps"]
+        assert got["head_tables"] == base["head_tables"]
+    # something actually fanned out: 6 nodes -> 6 isomorphic stages
+    assert len(base["artifacts"]) == 5  # trips, m0..m2, combine
+
+
+def test_parallel_audit_failure_rolls_back_identically():
+    """Mid-DAG audit failure under concurrency: AUDIT_FAILED handle, head
+    unmoved, ephemeral branch gone, zero cache entries persisted — same
+    as the sequential rollback."""
+    for parallelism in (1, 8):
+        res = _run_once(parallelism, threshold=10_000.0)  # audit must fail
+        assert res["state"] is RunState.AUDIT_FAILED
+        assert res["checks"]["trips_expectation"] is False
+        # rollback: nothing merged, nothing cached, no run_* branch leaked
+        assert res["head_tables"] == {"taxi_table": res["head_tables"]["taxi_table"]}
+        assert res["cache_entries"] == {}
+        assert [b for b in res["branches"] if b.startswith("run_")] == []
+
+
+def test_parallel_commit_history_is_linear_and_ordered():
+    """The commit queue applies per-stage commits in stage-id order: the
+    merged run's ephemeral lineage reads 'stage 0, stage 1, ...' whatever
+    order the stages actually finished in."""
+    rng = np.random.default_rng(3)
+    with _client(8) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        handle = client.run(
+            build_fanout_pipeline(), fusion=False, pushdown=False,
+            parallelism=8,
+        ).raise_for_state()
+        merge = client.catalog.get_commit(handle.merged_commit)
+        # walk the ephemeral side of the merge: stage commits, newest first
+        messages = []
+        cur = client.catalog.get_commit_opt(merge.extra_parent_id)
+        while cur is not None and cur.author == "runner":
+            messages.append(cur.message)
+            cur = client.catalog.get_commit_opt(cur.parent_id)
+        stage_messages = [
+            m for m in reversed(messages)
+            if f"run {handle.run_id} stage" in m
+        ]
+        expected = [
+            f"run {handle.run_id} stage {sid}"
+            for sid in range(len(handle.plan.stages))
+            if handle.plan.stages[sid].outputs
+        ]
+        assert stage_messages == expected
+
+
+def test_dependent_stage_waits_for_both_parents():
+    """`combine` consumes m0 and m1 — the wave scheduler must not launch
+    it until both complete; the output proves it saw real inputs."""
+    rng = np.random.default_rng(5)
+    with _client(8) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        handle = client.run(
+            build_fanout_pipeline(), fusion=False, pushdown=False,
+            parallelism=8,
+        ).raise_for_state()
+        delta = handle.artifact("combine")["delta"]
+        m0 = handle.artifact("m0")["stat"]
+        np.testing.assert_allclose(delta, m0)  # m1 = 2*m0, so delta = m0
+
+
+def test_run_async_resolves_to_same_handle_semantics():
+    rng = np.random.default_rng(7)  # same fixture as _run_once (parity)
+    with _client(4) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        async_handle = client.run_async(
+            build_fanout_pipeline(), fusion=False, pushdown=False
+        )
+        assert isinstance(async_handle, AsyncRunHandle)
+        assert async_handle.state in (RunState.RUNNING, RunState.SUCCESS)
+        resolved = async_handle.result(timeout=120)
+        assert resolved.state is RunState.SUCCESS
+        assert async_handle.state is RunState.SUCCESS
+        assert async_handle.done() and not async_handle.running
+        assert async_handle.poll() is resolved
+        # the async run merged for real
+        assert "combine" in client.tables()
+        # parity with a synchronous run on a fresh lake
+        sync = _run_once(4)
+        assert dict(resolved.artifacts) == sync["artifacts"]
+
+
+def test_run_async_audit_failure_and_error_capture():
+    rng = np.random.default_rng(13)
+    with _client(4) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        failed = client.run_async(
+            build_fanout_pipeline(threshold=10_000.0),
+            fusion=False, pushdown=False,
+        ).result(timeout=120)
+        assert failed.state is RunState.AUDIT_FAILED
+        assert client.branches() == ["main"]  # rolled back, nothing leaked
+
+        # infra error (missing source table): captured, not raised
+        p = Pipeline("missing_source")
+        p.sql("x", "SELECT pickup_at FROM no_such_table")
+        err = client.run_async(p).result(timeout=120)
+        assert err.state is RunState.ERROR
+        assert isinstance(err.error, KeyError)
+
+
+def test_run_async_poll_is_nonblocking():
+    """poll() returns None while the run is in flight (a slow stage keeps
+    it busy long enough to observe RUNNING deterministically)."""
+    p = Pipeline("slow")
+    evt = threading.Event()
+
+    @p.python
+    def slow_model(ctx, taxi_table):
+        import jax
+
+        def wait_host(x):
+            evt.wait(10.0)
+            return np.float32(0.0)
+
+        import jax.numpy as jnp
+
+        score = jax.pure_callback(
+            wait_host, jax.ShapeDtypeStruct((), jnp.float32),
+            taxi_table.column("passenger_count"),
+        )
+        return {"score": score[None]}
+
+    rng = np.random.default_rng(17)
+    with _client(2) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(512, rng), schema=TAXI_SCHEMA
+        )
+        handle = client.run_async(p)
+        try:
+            assert handle.poll() is None
+            assert handle.state is RunState.RUNNING
+        finally:
+            evt.set()
+        assert handle.result(timeout=120).state is RunState.SUCCESS
+
+
+def test_branch_handle_run_async_rolls_back_on_failure():
+    rng = np.random.default_rng(19)
+    with _client(4) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        with client.branch("feat_async") as branch:
+            h = branch.run_async(
+                build_fanout_pipeline(threshold=10_000.0),
+                fusion=False, pushdown=False,
+            )
+            assert h.result(timeout=120).state is RunState.AUDIT_FAILED
+        # ephemeral branch rolled back (deleted, not merged)
+        assert client.branches() == ["main"]
+        assert "combine" not in client.tables()
+
+
+def test_branch_handle_exit_joins_inflight_async_run():
+    """Leaving the `with` block while an async run is still in flight
+    must JOIN it first — the merge/rollback decision sees the outcome,
+    and the run's merge never races the branch's deletion."""
+    rng = np.random.default_rng(23)
+    with _client(4) as client:
+        client.write_table(
+            "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+        )
+        with client.branch("feat_join") as branch:
+            handle = branch.run_async(
+                build_fanout_pipeline(), fusion=False, pushdown=False
+            )
+            # deliberately no result(): __exit__ must join for us
+        assert handle.result(timeout=1).state is RunState.SUCCESS
+        assert client.branches() == ["main"]  # merged + deleted
+        assert "combine" in client.tables()
+
+
+def test_store_stats_bump_is_atomic_under_threads():
+    """The satellite regression: hammer one counter from many threads;
+    no increment may be lost."""
+    stats = StoreStats()
+    threads = [
+        threading.Thread(
+            target=lambda: [stats.bump(puts=1, bytes_written=3) for _ in range(500)]
+        )
+        for _ in range(8)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = stats.snapshot()
+    assert snap["puts"] == 8 * 500
+    assert snap["bytes_written"] == 8 * 500 * 3
+
+
+def test_object_store_io_accounting_from_concurrent_writers(tmp_path):
+    store = ObjectStore(tmp_path / "lake")
+    payloads = [bytes([i]) * 1000 for i in range(32)]
+
+    def write_all():
+        for b in payloads:
+            store.put(b)
+
+    threads = [threading.Thread(target=write_all) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = store.stats.snapshot()
+    assert snap["puts"] == 4 * len(payloads)
+    assert snap["bytes_written"] == 4 * sum(len(b) for b in payloads)

@@ -238,6 +238,48 @@ def test_single_task_speculation_all_racers_fail():
         assert sum(r.attempts for r in failed) == 4  # 2 racers x 2 attempts
 
 
+def test_submit_speculative_future_api_and_concurrent_speculation():
+    """The wave scheduler's primitive: a future-returning run() whose
+    straggler backup is a timer, so MANY concurrently submitted tasks
+    each keep their own speculation (no blocking wait per task)."""
+    _CallState.calls = 0
+
+    def task(x):
+        _CallState.calls += 1
+        if _CallState.calls == 4:  # one straggler among the submissions
+            time.sleep(0.8)
+        return np.asarray(x) + 1
+
+    cfg = ExecutorConfig(
+        max_workers=4, speculation_factor=3.0, speculation_min_samples=3
+    )
+    spec = FunctionSpec(name="stage", fn=task, jit=False)
+    with ServerlessExecutor(cfg) as ex:
+        for _ in range(3):  # build the per-fingerprint baseline
+            ex.submit_speculative(spec, np.ones(2)).result()
+        t0 = time.perf_counter()
+        futs = [ex.submit_speculative(spec, np.ones(2)) for _ in range(3)]
+        for f in futs:
+            np.testing.assert_allclose(np.asarray(f.result()), 2.0)
+        # the straggler's backup won: nobody waited out the 0.8 s sleep
+        assert time.perf_counter() - t0 < 0.6
+        assert ex.stats()["speculated"] >= 1
+
+
+def test_submit_stage_lane_does_not_starve_containers():
+    """Stage drivers block on container futures from their own lane — a
+    full wave of drivers must still make progress."""
+    cfg = ExecutorConfig(max_workers=2, max_concurrent_stages=8)
+    spec = FunctionSpec(name="leaf", fn=lambda x: np.asarray(x) * 2, jit=False)
+    with ServerlessExecutor(cfg) as ex:
+
+        def driver(i):
+            return np.asarray(ex.run(spec, np.full(4, i))).sum()
+
+        futs = [ex.submit_stage(driver, i) for i in range(8)]
+        assert [f.result(timeout=30) for f in futs] == [i * 8 for i in range(8)]
+
+
 def test_cost_model_tiers():
     cm = CostModel()
     small = cm.request_for_scan(10 << 20)  # 10MB scan

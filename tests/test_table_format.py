@@ -86,6 +86,51 @@ def test_scan_shard_pruning_with_sorted_column(fmt):
     assert len(out["pickup_location_id"]) == n - 900
 
 
+def test_scan_returns_only_projection(fmt, rng):
+    """Regression: predicate columns are read for filtering but must NOT
+    leak into the result when the caller didn't project them."""
+    data = make_table(300, rng)
+    snap = fmt.write("t", SCHEMA, data)
+    plan = plan_scan(
+        snap,
+        columns=["fare"],
+        predicates=[Predicate("passenger_count", ">", 3)],
+    )
+    assert "passenger_count" in plan.columns  # read for filtering...
+    assert plan.projection == ["fare"]
+    out = execute_scan(fmt, plan)
+    assert set(out) == {"fare"}  # ...but dropped from the result
+    np.testing.assert_array_equal(
+        out["fare"], data["fare"][data["passenger_count"] > 3]
+    )
+    # the all-shards-pruned path honours the projection too
+    empty = execute_scan(
+        fmt,
+        plan_scan(
+            snap,
+            columns=["fare"],
+            predicates=[Predicate("passenger_count", ">", 1000)],
+        ),
+    )
+    assert set(empty) == {"fare"} and len(empty["fare"]) == 0
+
+
+def test_parallel_shard_reads_match_serial(fmt, rng):
+    """execute_scan(pool=...) preserves shard order: byte-identical
+    output to the serial read, residual filter included."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    data = make_table(1500, rng)  # ~12 shards at 128 rows
+    snap = fmt.write("t", SCHEMA, data)
+    plan = plan_scan(snap, predicates=[Predicate("fare", "<", 50.0)])
+    serial = execute_scan(fmt, plan)
+    with ThreadPoolExecutor(max_workers=4) as pool:
+        pooled = execute_scan(fmt, plan, pool=pool)
+    assert set(serial) == set(pooled)
+    for c in serial:
+        np.testing.assert_array_equal(serial[c], pooled[c])
+
+
 def test_scan_residual_predicate_exact(fmt, rng):
     data = make_table(300, rng)
     snap = fmt.write("t", SCHEMA, data)
