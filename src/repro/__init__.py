@@ -44,6 +44,11 @@ _EXPORTS = {
     "discover": ("repro.api", "discover"),
     "Pipeline": ("repro.core", "Pipeline"),
     "Schema": ("repro.table", "Schema"),
+    "LintReport": ("repro.analysis", "LintReport"),
+    "Finding": ("repro.analysis", "Finding"),
+    "Severity": ("repro.analysis", "Severity"),
+    "LintFailed": ("repro.analysis", "LintFailed"),
+    "lint_pipeline": ("repro.analysis", "lint_pipeline"),
 }
 
 __all__ = ["__version__", *sorted(_EXPORTS)]

@@ -1,0 +1,22 @@
+"""Static pipeline analysis — lineage, cache-poison rules, plan diagnostics.
+
+Everything in this package runs with zero execution and zero store
+writes: the inputs are a resolved :class:`~repro.core.pipeline.Pipeline`
+and (optionally) catalog schemas; the output is a typed
+:class:`LintReport`.
+"""
+from repro.analysis.lint import GRAPH_RULES, lint_pipeline
+from repro.analysis.report import Finding, LintFailed, LintReport, Severity
+from repro.analysis.rules import FUNCTION_RULES, RULES_BY_ID, Rule
+
+__all__ = [
+    "Finding",
+    "FUNCTION_RULES",
+    "GRAPH_RULES",
+    "LintFailed",
+    "LintReport",
+    "Rule",
+    "RULES_BY_ID",
+    "Severity",
+    "lint_pipeline",
+]

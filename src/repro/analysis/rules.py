@@ -1,0 +1,200 @@
+"""Cache-poison / nondeterminism rules over node function ASTs (D1xx).
+
+Why these exist: the differential cache (PR 3) keys node results on
+*code + inputs + params*.  "FaaS and Furious" shows that only pays off
+when node functions are pure — a node that reads the wall clock, draws
+unseeded randomness, or peeks at the environment produces different
+output under the SAME fingerprint, so a warm cache silently serves stale
+(or simply wrong) artifacts.  These rules flag the constructs *before*
+a run instead of after a confusing replay mismatch.
+
+Each rule is data (id, severity, summary, example) so the CLI/README rule
+catalog is generated from the same table the engine matches against.
+Suppress a deliberate use with ``# repro: noqa[D102]`` on the offending
+line (see astpass.py).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, Iterator, List, Optional, Tuple
+
+from repro.analysis.astpass import FnSource, dotted_name, root_name
+from repro.analysis.report import Finding, Severity
+
+
+@dataclass(frozen=True)
+class Rule:
+    id: str
+    severity: Severity
+    summary: str
+    example: str
+    suppression: str = "# repro: noqa[<id>]"
+
+
+FUNCTION_RULES: Tuple[Rule, ...] = (
+    Rule(
+        "D101", Severity.WARNING,
+        "wall-clock read — time/datetime calls make node output "
+        "run-dependent, poisoning its cache fingerprint",
+        "ts = time.time()",
+    ),
+    Rule(
+        "D102", Severity.WARNING,
+        "unseeded randomness — random/np.random without an explicit seed "
+        "produces different artifacts under the same fingerprint",
+        "rng = np.random.default_rng()  # no seed",
+    ),
+    Rule(
+        "D103", Severity.WARNING,
+        "uuid generation — uuids are fresh every run; derive ids from "
+        "content hashes instead",
+        "uuid.uuid4()",
+    ),
+    Rule(
+        "D104", Severity.WARNING,
+        "environment read — os.environ/os.getenv smuggles config past the "
+        "fingerprint; pass it through run params instead",
+        "os.environ['MODE']",
+    ),
+    Rule(
+        "D105", Severity.WARNING,
+        "file I/O — reading/writing paths bypasses the versioned lake; "
+        "inputs must come from parent tables",
+        "open('side_channel.csv')",
+    ),
+    Rule(
+        "D106", Severity.WARNING,
+        "global-state mutation — global/nonlocal writes leak state "
+        "between stages and across fused plans",
+        "global counter",
+    ),
+    Rule(
+        "D107", Severity.WARNING,
+        "input-table mutation — writing into a parent relation corrupts "
+        "siblings that fuse over the same in-memory input",
+        "trips.columns['count'] = fixed",
+    ),
+)
+
+RULES_BY_ID = {r.id: r for r in FUNCTION_RULES}
+
+# ------------------------------------------------------------- matchers
+_TIME_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+}
+_TIME_ATTRS = {"now", "utcnow", "today"}  # datetime.now / date.today / ...
+_SEEDLESS_OK = {"seed", "default_rng", "Generator", "SeedSequence", "PRNGKey"}
+_UUID_CALLS = {"uuid1", "uuid3", "uuid4", "uuid5"}
+_IO_METHODS = {"read_text", "read_bytes", "write_text", "write_bytes"}
+_NP_IO = {"np.load", "np.save", "np.savez", "numpy.load", "numpy.save"}
+
+
+def _call_findings(
+    node: ast.Call, parents: Tuple[str, ...]
+) -> Iterator[Tuple[str, str]]:
+    """Yield ``(rule_id, detail)`` for one call site."""
+    name = dotted_name(node.func)
+    attr = node.func.attr if isinstance(node.func, ast.Attribute) else None
+
+    if name in _TIME_CALLS or (
+        name is not None
+        and attr in _TIME_ATTRS
+        and ("datetime" in name or name.split(".")[0] in ("date", "dt"))
+    ):
+        yield "D101", f"calls {name}()"
+        return
+    if name is not None:
+        head, _, tail = name.partition(".")
+        if head == "random" and tail and tail not in ("seed", "Random"):
+            yield "D102", f"calls {name}() (seed the generator instead)"
+            return
+        if name.startswith(("np.random.", "numpy.random.", "jax.random.")):
+            # np.random.<fn> legacy globals; a local Generator's .random()
+            # is NOT matched — the seed (or lack of it) lives at its
+            # default_rng() construction site, flagged there instead
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf == "default_rng":
+                if not node.args and not node.keywords:
+                    yield "D102", f"{name}() called without a seed"
+                return
+            if leaf not in _SEEDLESS_OK:
+                yield "D102", f"calls {name}() (global unseeded stream)"
+                return
+        if name.rsplit(".", 1)[-1] in _UUID_CALLS and head in ("uuid",):
+            yield "D103", f"calls {name}()"
+            return
+        if name in ("os.getenv", "os.environ.get"):
+            yield "D104", f"calls {name}()"
+            return
+        if name in _NP_IO:
+            yield "D105", f"calls {name}()"
+            return
+    if isinstance(node.func, ast.Name) and node.func.id == "open":
+        yield "D105", "calls open()"
+        return
+    if attr in _IO_METHODS:
+        yield "D105", f"calls .{attr}()"
+
+
+def _env_read(node: ast.AST) -> bool:
+    """Bare ``os.environ`` access (subscript or attribute load)."""
+    return dotted_name(node) == "os.environ"
+
+
+def run_function_rules(
+    src: FnSource,
+    node_name: str,
+    parents: Tuple[str, ...],
+) -> Tuple[List[Finding], int]:
+    """All D-rule findings for one node function; returns
+    ``(findings, suppressed_count)``."""
+    findings: List[Finding] = []
+    suppressed = 0
+    seen = set()  # (rule, line): os.environ.get fires call+attr matchers
+
+    def emit(rule_id: str, detail: str, at: ast.AST) -> None:
+        nonlocal suppressed
+        line = src.abs_line(at)
+        if (rule_id, line) in seen:
+            return
+        seen.add((rule_id, line))
+        if src.suppressed(rule_id, line):
+            suppressed += 1
+            return
+        rule = RULES_BY_ID[rule_id]
+        findings.append(
+            Finding(
+                rule=rule.id,
+                severity=rule.severity,
+                message=f"{rule.summary.split(' — ')[0]}: {detail}",
+                node=node_name,
+                file=src.file,
+                line=line,
+                snippet=src.snippet(at),
+            )
+        )
+
+    parent_set = set(parents)
+    for stmt in ast.walk(src.fn_def):
+        if isinstance(stmt, ast.Call):
+            for rule_id, detail in _call_findings(stmt, parents):
+                emit(rule_id, detail, stmt)
+        elif isinstance(stmt, (ast.Global, ast.Nonlocal)):
+            kw = "global" if isinstance(stmt, ast.Global) else "nonlocal"
+            emit("D106", f"{kw} {', '.join(stmt.names)}", stmt)
+        elif isinstance(stmt, ast.Subscript) and isinstance(
+            stmt.ctx, (ast.Store, ast.Del)
+        ):
+            base = root_name(stmt)
+            if base in parent_set:
+                emit("D107", f"writes into input table {base!r}", stmt)
+        elif isinstance(stmt, ast.Attribute):
+            if isinstance(stmt.ctx, (ast.Store, ast.Del)):
+                base = root_name(stmt)
+                if base in parent_set:
+                    emit("D107", f"writes attribute of input table {base!r}", stmt)
+            elif _env_read(stmt):
+                emit("D104", "reads os.environ", stmt)
+    return findings, suppressed

@@ -4,10 +4,12 @@ Everything user code needs lives here; the subsystem packages
 (``repro.core``, ``repro.catalog``, ``repro.table``, ``repro.runtime``,
 ``repro.maintenance``) are the engine room.
 """
+from repro.analysis import Finding, LintFailed, LintReport, Severity
 from repro.api.client import BranchHandle, CacheMaintenance, Client
 from repro.api.handles import AsyncRunHandle, RunFailed, RunHandle, RunState
 from repro.api.project import (
     Project,
+    RedefinitionWarning,
     discover,
     expectation,
     model,
@@ -22,10 +24,15 @@ __all__ = [
     "BranchHandle",
     "CacheMaintenance",
     "Client",
+    "Finding",
+    "LintFailed",
+    "LintReport",
     "Project",
+    "RedefinitionWarning",
     "RunFailed",
     "RunHandle",
     "RunState",
+    "Severity",
     "discover",
     "expectation",
     "model",

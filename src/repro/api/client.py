@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional, Union
 
 import numpy as np
 
+from repro.analysis import LintFailed, LintReport, lint_pipeline
 from repro.api.handles import AsyncRunHandle, RunHandle, RunState
 from repro.api.project import Project, resolve_pipeline
 from repro.catalog.nessie import Catalog, Commit
@@ -318,6 +319,32 @@ class Client:
         """Synchronous SQL against a branch head or any commit."""
         return self.runner.query(sql, branch=branch, commit_id=commit_id)
 
+    # ---------------------------------------------------------------- lint
+    def lint(
+        self,
+        target: RunTarget,
+        *,
+        branch: str = "main",
+    ) -> LintReport:
+        """Static preflight over a pipeline: lineage + schema checks,
+        cache-poison rules, plan diagnostics, blast radius.
+
+        Executes nothing and writes nothing — the only reads are catalog
+        refs and table manifests, to resolve the schemas of external
+        source tables at the ``branch`` head (falling back to ``main``
+        when the branch does not exist yet).
+        """
+        pipeline = resolve_pipeline(target)
+        lookup = branch if self.catalog.has_branch(branch) else "main"
+        head_tables = self.catalog.tables(branch=lookup)
+        schemas: Dict[str, Optional[Schema]] = {}
+        for table in pipeline.external_sources():
+            if table in head_tables:
+                schemas[table] = self.fmt.load_snapshot(
+                    head_tables[table]
+                ).schema
+        return lint_pipeline(pipeline, external_schemas=schemas)
+
     # ---------------------------------------------------------------- runs
     def run(
         self,
@@ -333,6 +360,7 @@ class Client:
         planner_config: Optional[PlannerConfig] = None,
         raise_errors: bool = True,
         parallelism: Optional[int] = None,
+        preflight: bool = False,
     ) -> RunHandle:
         """Execute a pipeline/project/module with transform-audit-write.
 
@@ -341,12 +369,31 @@ class Client:
         Infrastructure/user-code errors raise unless ``raise_errors=False``
         captures them into an ``ERROR`` handle.
 
+        ``preflight=True`` lints the pipeline first (``Client.lint``) and
+        refuses to launch on any error-severity finding — ``LintFailed``
+        carries the full report (captured into an ``ERROR`` handle when
+        ``raise_errors=False``).  Warnings never block a run.
+
         ``parallelism`` caps how many independent stages the wave
         scheduler keeps in flight (default: the executor config's
         ``max_concurrent_stages``); results are byte-identical at every
         level — it is purely a throughput knob.
         """
         pipeline = resolve_pipeline(target)
+        if preflight:
+            report = self.lint(pipeline, branch=branch)
+            if report.errors:
+                err = LintFailed(report)
+                if raise_errors:
+                    raise err
+                return RunHandle(
+                    state=RunState.ERROR,
+                    run_id=-1,
+                    branch=branch,
+                    merged_commit=None,
+                    error=err,
+                    _fmt=self.fmt,
+                )
         try:
             result = self.runner.run(
                 pipeline,
@@ -403,6 +450,7 @@ class Client:
         planner_config: Optional[PlannerConfig] = None,
         raise_errors: bool = False,
         parallelism: Optional[int] = None,
+        preflight: bool = False,
     ) -> AsyncRunHandle:
         """``run()`` without the wait (paper Table 1's async runs).
 
@@ -448,6 +496,7 @@ class Client:
             planner_config=planner_config,
             raise_errors=raise_errors,
             parallelism=parallelism,
+            preflight=preflight,
         )
         return AsyncRunHandle(future, branch=branch)
 
@@ -624,6 +673,11 @@ class BranchHandle:
         handle._future.add_done_callback(_note_outcome)
         self._async_handles.append(handle)
         return handle
+
+    def lint(self, target: RunTarget) -> LintReport:
+        """Preflight against this branch's table schemas."""
+        self._ensure()
+        return self.client.lint(target, branch=self.name)
 
     def replay(self, run_id: int, target: RunTarget, **kwargs: Any) -> RunHandle:
         return self.client.replay(run_id, target, **kwargs)

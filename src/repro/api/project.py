@@ -26,9 +26,10 @@ import importlib.util
 import inspect
 import sys
 import threading
+import warnings
 from pathlib import Path
 from types import ModuleType
-from typing import Callable, Dict, List, Optional, Union
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.core.pipeline import Node, Pipeline, PipelineError, requirements
 from repro.engine.sql import parse_sql
@@ -36,6 +37,7 @@ from repro.utils.hashing import stable_hash
 
 __all__ = [
     "Project",
+    "RedefinitionWarning",
     "project",
     "model",
     "expectation",
@@ -44,6 +46,14 @@ __all__ = [
     "discover",
     "resolve_pipeline",
 ]
+
+
+class RedefinitionWarning(UserWarning):
+    """A node name was re-registered with *different* code.
+
+    Re-importing the same module re-registers identical nodes silently
+    (same fingerprint, nothing changed); this fires only when the new
+    definition would quietly shadow a different one."""
 
 #: global project registry — module-level decorators register here
 _PROJECTS: Dict[str, "Project"] = {}
@@ -63,11 +73,25 @@ class Project:
         self._nodes: Dict[str, Node] = {}
         #: modules that registered nodes here (discovery bookkeeping)
         self.modules: set = set()
+        #: node name -> (old location, new location) for names that were
+        #: re-registered with DIFFERENT code; the linter reports these (G304)
+        self.redefinitions: Dict[str, Tuple[str, str]] = {}
 
     # ------------------------------------------------------- registration
     def _register(self, node: Node, module: Optional[str]) -> None:
         if node.name in node.parents:
             raise PipelineError(f"node {node.name!r} references itself")
+        old = self._nodes.get(node.name)
+        if old is not None and old.fingerprint != node.fingerprint:
+            old_loc = _loc_str(old)
+            new_loc = _loc_str(node)
+            self.redefinitions[node.name] = (old_loc, new_loc)
+            warnings.warn(
+                f"project {self.name!r}: node {node.name!r} redefined with "
+                f"different code — {new_loc} replaces {old_loc}",
+                RedefinitionWarning,
+                stacklevel=3,
+            )
         self._nodes[node.name] = node  # overwrite = redefinition
         if module:
             self.modules.add(module)
@@ -91,6 +115,8 @@ class Project:
                     fn=f,
                     requirements=getattr(f, "__repro_requirements__", {}),
                     materialize=materialize,
+                    source_file=getattr(f.__code__, "co_filename", None),
+                    source_line=getattr(f.__code__, "co_firstlineno", None),
                 ),
                 f.__module__,
             )
@@ -112,6 +138,8 @@ class Project:
                     parents=parents,
                     fn=f,
                     requirements=getattr(f, "__repro_requirements__", {}),
+                    source_file=getattr(f.__code__, "co_filename", None),
+                    source_line=getattr(f.__code__, "co_firstlineno", None),
                 ),
                 f.__module__,
             )
@@ -126,9 +154,17 @@ class Project:
         *,
         materialize: bool = False,
         _module: Optional[str] = None,
+        _source: Optional[Tuple[Optional[str], Optional[int]]] = None,
     ) -> None:
         """Declare a SQL artifact; its parent is the ``FROM`` table."""
         query = parse_sql(sql_text)
+        if _source is None:
+            caller = sys._getframe(1) if hasattr(sys, "_getframe") else None
+            _source = (
+                (caller.f_code.co_filename, caller.f_lineno)
+                if caller is not None
+                else (None, None)
+            )
         self._register(
             Node(
                 name=name,
@@ -136,6 +172,8 @@ class Project:
                 parents=(query.source,),
                 query=query,
                 materialize=materialize,
+                source_file=_source[0],
+                source_line=_source[1],
             ),
             _module or _caller_module(),
         )
@@ -148,6 +186,9 @@ class Project:
         p = Pipeline(self.name)
         for node in self._nodes.values():
             p.add_node(node)
+        # plain attribute, not part of Pipeline's contract: the linter
+        # surfaces these as G304 findings
+        p.redefinitions = dict(self.redefinitions)
         return p
 
     @property
@@ -157,6 +198,7 @@ class Project:
     def clear(self) -> None:
         self._nodes.clear()
         self.modules.clear()
+        self.redefinitions.clear()
 
     def __len__(self) -> int:
         return len(self._nodes)
@@ -177,6 +219,12 @@ def project(name: str) -> Project:
 def _caller_module(depth: int = 2) -> Optional[str]:
     frame = sys._getframe(depth) if hasattr(sys, "_getframe") else None
     return frame.f_globals.get("__name__") if frame is not None else None
+
+
+def _loc_str(node: Node) -> str:
+    if node.source_file:
+        return f"{node.source_file}:{node.source_line}"
+    return "<unknown location>"
 
 
 def _fn_signature(f: Callable, name: Optional[str]):
@@ -242,8 +290,14 @@ def sql(
 ) -> None:
     """``repro.sql("trips", "SELECT ...")`` — register a SQL artifact."""
     module = _caller_module()
+    caller = sys._getframe(1) if hasattr(sys, "_getframe") else None
+    source = (
+        (caller.f_code.co_filename, caller.f_lineno)
+        if caller is not None
+        else (None, None)
+    )
     _resolve_project(project, module).sql(
-        name, sql_text, materialize=materialize, _module=module
+        name, sql_text, materialize=materialize, _module=module, _source=source
     )
 
 

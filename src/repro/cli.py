@@ -9,6 +9,9 @@ helpers:
   python -m repro.cli --lake ... run pipeline_module.py [-b branch]
                                       [--no-fusion] [--run-id N --replay]
                                       [--parallelism N] [--no-cache]
+                                      [--preflight]
+  python -m repro.cli --lake ... lint pipeline_module.py [-b branch]
+                                      [--strict] [--json PATH]
   python -m repro.cli --lake ... branch [--create NAME] [--from BASE]
   python -m repro.cli --lake ... log [-b branch]
   python -m repro.cli --lake ... tables [-b branch]
@@ -30,7 +33,7 @@ from __future__ import annotations
 
 import argparse
 
-from repro.api import Client, RunState, resolve_pipeline
+from repro.api import Client, LintFailed, RunState, resolve_pipeline
 from repro.runtime import ExecutorConfig
 
 
@@ -73,6 +76,11 @@ def main(argv=None) -> None:
         "never a semantics knob",
     )
     r.add_argument(
+        "--preflight", action="store_true",
+        help="lint the pipeline first and refuse to launch on any "
+        "error-severity finding (repro lint, wired into run)",
+    )
+    r.add_argument(
         "--cache",
         action=argparse.BooleanOptionalAction,
         default=True,
@@ -82,6 +90,19 @@ def main(argv=None) -> None:
         "fast path is the default path; --no-cache forces a full "
         "recompute and persists nothing)",
     )
+
+    li = sub.add_parser(
+        "lint", help="static preflight: lineage, cache-poison, diagnostics"
+    )
+    li.add_argument(
+        "pipeline", help="python file: decorator SDK or PIPELINE global"
+    )
+    li.add_argument("-b", "--branch", default="main",
+                    help="branch whose table schemas ground the checks")
+    li.add_argument("--strict", action="store_true",
+                    help="warnings also fail the lint (exit 1)")
+    li.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the full report as JSON to PATH")
 
     b = sub.add_parser("branch", help="list/create branches")
     b.add_argument("--create", default=None)
@@ -213,6 +234,20 @@ def main(argv=None) -> None:
                     )
             return
 
+        if args.cmd == "lint":
+            report = client.lint(args.pipeline, branch=args.branch)
+            print(report.describe())
+            if args.json:
+                import json
+
+                with open(args.json, "w") as fh:
+                    json.dump(report.to_json_dict(), fh, indent=2)
+                print(f"json report written to {args.json}")
+            if not report.ok(strict=args.strict):
+                raise SystemExit(1)
+            print("preflight clean — pipeline is clear to run")
+            return
+
         if args.cmd == "query":
             out = client.query(
                 args.sql, branch=args.branch, commit_id=args.commit
@@ -229,11 +264,15 @@ def main(argv=None) -> None:
             print(f"replayed run {args.run_id} as {res.run_id}: "
                   f"artifacts={sorted(res.artifacts)}")
             return
-        res = client.run(
-            pipeline, branch=args.branch, fusion=not args.no_fusion,
-            pushdown=not args.no_fusion, cache=args.cache,
-            parallelism=parallelism,
-        )
+        try:
+            res = client.run(
+                pipeline, branch=args.branch, fusion=not args.no_fusion,
+                pushdown=not args.no_fusion, cache=args.cache,
+                parallelism=parallelism, preflight=args.preflight,
+            )
+        except LintFailed as e:
+            print(e.report.describe())
+            raise SystemExit(f"PREFLIGHT FAILED: {e}")
         if res.state is RunState.AUDIT_FAILED:
             raise SystemExit(
                 f"AUDIT FAILED: expectations failed: {res.failed_checks} "

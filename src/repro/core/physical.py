@@ -197,6 +197,8 @@ def compute_node_fingerprints(
     logical: LogicalPlan,
     input_fingerprints: Dict[str, str],
     run_params: Dict[str, Any],
+    *,
+    edited_node: Optional[str] = None,
 ) -> Dict[str, str]:
     """Per-node transitive identity, independent of fusion grouping.
 
@@ -207,6 +209,11 @@ def compute_node_fingerprints(
     ``input_fingerprints`` should be sharding-invariant content hashes
     (``TableFormat.content_fingerprint``) so compaction doesn't bust the
     cache; snapshot ids are an acceptable conservative fallback.
+
+    ``edited_node`` salts exactly that node's payload, simulating a code
+    edit; the baseline hashing path is byte-identical when it is unset
+    (the payload only gains a key for the salted node).  The lint pass
+    uses this to compute cache-invalidation blast radii.
     """
     fps: Dict[str, str] = {}
     for name in logical.order:
@@ -218,15 +225,46 @@ def compute_node_fingerprints(
                 parents[p] = fps[p]
             else:
                 scans[p] = input_fingerprints[p]
-        fps[name] = stable_hash(
-            {
-                "node": node.fingerprint,
-                "parents": parents,
-                "scans": scans,
-                "params": run_params,
-            }
-        )
+        payload = {
+            "node": node.fingerprint,
+            "parents": parents,
+            "scans": scans,
+            "params": run_params,
+        }
+        if name == edited_node:
+            payload["edited"] = True
+        fps[name] = stable_hash(payload)
     return fps
+
+
+def fingerprint_blast_radius(
+    logical: LogicalPlan,
+    input_fingerprints: Optional[Dict[str, str]] = None,
+    run_params: Optional[Dict[str, Any]] = None,
+) -> Dict[str, List[str]]:
+    """For every node: the downstream nodes whose transitive fingerprint
+    changes when that node's code is edited — i.e. the differential
+    cache's invalidation set.  Pure hash arithmetic, no I/O: the actual
+    input fingerprints don't matter for *which* hashes move, only that
+    they are fixed across the comparison, so dummy values are fine.
+    """
+    inputs = dict(input_fingerprints or {})
+    for name in logical.order:
+        for p in logical.nodes[name].parents:
+            if p not in logical.nodes:
+                inputs.setdefault(p, f"radius:{p}")
+    params = run_params or {}
+    baseline = compute_node_fingerprints(logical, inputs, params)
+    radius: Dict[str, List[str]] = {}
+    for name in logical.order:
+        perturbed = compute_node_fingerprints(
+            logical, inputs, params, edited_node=name
+        )
+        radius[name] = [
+            n for n in logical.order
+            if n != name and perturbed[n] != baseline[n]
+        ]
+    return radius
 
 
 def _greedy_stages(

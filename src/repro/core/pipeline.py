@@ -37,6 +37,10 @@ class Node:
     requirements: Dict[str, str] = field(default_factory=dict)
     #: force materialization of this artifact even if fused past
     materialize: bool = False
+    #: where the node was declared (decoration/registration site) — lint
+    #: diagnostics only, deliberately excluded from the fingerprint
+    source_file: Optional[str] = field(default=None, compare=False)
+    source_line: Optional[int] = field(default=None, compare=False)
 
     @property
     def is_expectation(self) -> bool:
@@ -99,12 +103,15 @@ class Pipeline:
     def sql(self, name: str, sql_text: str, *, materialize: bool = False) -> Node:
         """Declare a SQL artifact; its parent is the FROM table."""
         query = parse_sql(sql_text)
+        caller = inspect.currentframe().f_back
         node = Node(
             name=name,
             kind="sql",
             parents=(query.source,),
             query=query,
             materialize=materialize,
+            source_file=caller.f_code.co_filename if caller else None,
+            source_line=caller.f_lineno if caller else None,
         )
         self._add(node)
         return node
@@ -142,6 +149,8 @@ class Pipeline:
                 fn=f,
                 requirements=getattr(f, "__repro_requirements__", {}),
                 materialize=materialize and kind != "expectation",
+                source_file=getattr(f.__code__, "co_filename", None),
+                source_line=getattr(f.__code__, "co_firstlineno", None),
             )
             self._add(node)
             return f

@@ -6,10 +6,13 @@ compiles to a single XLA program.  Group-by uses a sort + segment-scatter
 formulation (radix-style grouping adapted to TPU-friendly dense ops: sort,
 cumsum, scatter-add are all well-supported lax primitives).
 
-The Pallas kernel in kernels/fused_filter_agg is a drop-in for the
-filter+group+sum hot path; `execute_query` uses the pure-jnp path by
-default so results are platform-independent (the kernel is validated
-against it in tests).
+The Pallas kernel in kernels/fused_filter_agg covers the
+filter+group+sum hot path and is validated against this module's
+pure-jnp results in tests, but it is NOT wired into `execute_query` —
+every query runs the jnp path below, so results stay platform-
+independent.  Routing eligible scan→filter→agg stages through the
+kernel is the ROADMAP "SQL v2" item; until then the kernel is a
+benchmarked spare part, not an active code path.
 """
 from __future__ import annotations
 

@@ -47,6 +47,10 @@ class Query:
     aggregates: Tuple[Agg, ...] = ()
     order_by: Tuple[Tuple[str, bool], ...] = ()  # (column, descending)
     limit: Optional[int] = None
+    #: the SQL text this query was parsed from, when it came from the SQL
+    #: front-end — diagnostics only, excluded from equality and from
+    #: ``to_json_dict`` so node fingerprints stay formatting-independent
+    raw_sql: Optional[str] = field(default=None, compare=False, repr=False)
 
     # ------------------------------------------------------------- builders
     def select(self, *names: str, **named_exprs: Expr) -> "Query":

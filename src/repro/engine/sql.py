@@ -45,22 +45,53 @@ _AGG_KEYWORDS = {"count", "sum", "min", "max", "avg"}
 _CMP = {">=": "ge", "<=": "le", "!=": "ne", "<>": "ne", "=": "eq", ">": "gt", "<": "lt"}
 
 
-def _tokenize(sql: str) -> List[str]:
+class SqlError(SyntaxError):
+    """A SQL parse error that knows *where* it happened.
+
+    Subclasses ``SyntaxError`` so existing ``except SyntaxError`` callers
+    keep working; adds the character position and the offending fragment
+    so lint findings (and humans) can point at the exact spot."""
+
+    def __init__(self, message: str, sql: str, pos: int):
+        self.sql = sql
+        self.pos = pos
+        lo, hi = max(0, pos - 8), min(len(sql), pos + 16)
+        self.fragment = sql[lo:hi].replace("\n", " ")
+        super().__init__(
+            f"{message} at position {pos}: "
+            f"{'...' if lo > 0 else ''}{self.fragment}"
+            f"{'...' if hi < len(sql) else ''}"
+        )
+
+
+def _tokenize(sql: str) -> List[Tuple[str, int]]:
+    """``[(token, char_position), ...]`` over the cleaned SQL text."""
     pos, out = 0, []
-    sql = sql.strip().rstrip(";")
     while pos < len(sql):
         m = _TOKEN_RE.match(sql, pos)
         if not m:
-            raise SyntaxError(f"SQL tokenize error at: {sql[pos:pos+20]!r}")
-        out.append(m.group(1))
+            bad = pos + (len(sql[pos:]) - len(sql[pos:].lstrip()))
+            raise SqlError("cannot tokenize SQL", sql, bad)
+        out.append((m.group(1), m.start(1)))
         pos = m.end()
     return out
 
 
 class _Parser:
-    def __init__(self, tokens: List[str]):
-        self.toks = tokens
+    def __init__(self, tokens: List[Tuple[str, int]], sql: str):
+        self.toks = [t for t, _ in tokens]
+        self.positions = [p for _, p in tokens]
+        self.sql = sql
         self.i = 0
+
+    def pos(self) -> int:
+        """Character position of the current token (end of SQL if spent)."""
+        if self.i < len(self.positions):
+            return self.positions[self.i]
+        return len(self.sql)
+
+    def error(self, message: str) -> SqlError:
+        return SqlError(message, self.sql, self.pos())
 
     def peek(self) -> Optional[str]:
         return self.toks[self.i] if self.i < len(self.toks) else None
@@ -72,20 +103,27 @@ class _Parser:
     def next(self) -> str:
         t = self.peek()
         if t is None:
-            raise SyntaxError("unexpected end of SQL")
+            raise self.error("unexpected end of SQL")
         self.i += 1
         return t
 
     def expect_kw(self, kw: str) -> None:
-        t = self.next()
-        if t.lower() != kw:
-            raise SyntaxError(f"expected {kw.upper()}, got {t!r}")
+        if self.peek() is None:
+            raise self.error(f"expected {kw.upper()}, got end of SQL")
+        if self.peek().lower() != kw:
+            raise self.error(f"expected {kw.upper()}, got {self.peek()!r}")
+        self.i += 1
 
     def accept_kw(self, kw: str) -> bool:
         if self.peek() is not None and self.peek().lower() == kw:
             self.i += 1
             return True
         return False
+
+    def error_at_last(self, message: str) -> SqlError:
+        """An error pointing at the most recently consumed token."""
+        pos = self.positions[self.i - 1] if self.i > 0 else 0
+        return SqlError(message, self.sql, pos)
 
     # ------------------------------------------------------------- exprs
     def parse_expr(self) -> Expr:
@@ -109,10 +147,15 @@ class _Parser:
         if t == "(":
             e = self.parse_expr()
             if self.next() != ")":
-                raise SyntaxError("expected )")
+                raise self.error_at_last("expected )")
             return e
         if t.startswith("'"):
-            return lit(_string_literal_value(t[1:-1]))
+            try:
+                return lit(_string_literal_value(t[1:-1]))
+            except SqlError:
+                raise
+            except SyntaxError as e:
+                raise self.error_at_last(str(e)) from e
         if re.fullmatch(r"\d+\.\d+", t):
             return lit(float(t))
         if re.fullmatch(r"\d+", t):
@@ -124,13 +167,13 @@ class _Parser:
                 return col(t)
             if t.lower() in _AGG_KEYWORDS and self.peek() != "(":
                 return col(t)
-        raise SyntaxError(f"unexpected token {t!r} in expression")
+        raise self.error_at_last(f"unexpected token {t!r} in expression")
 
     def parse_comparison(self) -> Expr:
         lhs = self.parse_expr()
         op = self.next()
         if op not in _CMP:
-            raise SyntaxError(f"expected comparison, got {op!r}")
+            raise self.error_at_last(f"expected comparison, got {op!r}")
         rhs = self.parse_expr()
         return Expr(_CMP[op], (lhs, rhs))
 
@@ -147,14 +190,14 @@ class _Parser:
         if is_agg_call:
             fn = self.next().lower()
             if self.next() != "(":
-                raise SyntaxError(f"expected ( after {fn}")
+                raise self.error_at_last(f"expected ( after {fn}")
             if fn == "count" and self.peek() == "*":
                 self.next()
                 inner: Optional[Expr] = None
             else:
                 inner = self.parse_expr()
             if self.next() != ")":
-                raise SyntaxError("expected )")
+                raise self.error_at_last("expected )")
             alias = self._maybe_alias() or fn
             fn = {"avg": "mean"}.get(fn, fn)
             return alias, Agg(fn, inner, alias)
@@ -187,7 +230,8 @@ def _string_literal_value(s: str) -> float:
 
 
 def parse_sql(sql: str) -> Query:
-    p = _Parser(_tokenize(sql))
+    cleaned = sql.strip().rstrip(";")
+    p = _Parser(_tokenize(cleaned), cleaned)
     p.expect_kw("select")
     items: List[Tuple[str, object]] = [p.parse_select_item()]
     while p.accept_kw(","):  # pragma: no cover - comma is not a keyword
@@ -223,13 +267,15 @@ def parse_sql(sql: str) -> Query:
         projections = [(a, e) for a, e in projections
                        if not (e.op == "col" and e.args[0] in keys and a == e.args[0])]
         if projections:
-            raise SyntaxError(
+            raise p.error_at_last(
                 "non-key, non-aggregate projections in GROUP BY query: "
                 f"{[a for a, _ in projections]}"
             )
     elif projections:
         if q.aggregates and len(projections) != len(items):
-            raise SyntaxError("mixing aggregates and plain columns needs GROUP BY")
+            raise p.error_at_last(
+                "mixing aggregates and plain columns needs GROUP BY"
+            )
         q = Query(**{**q.__dict__, "projections": tuple(projections)})
 
     if p.accept_kw("order"):
@@ -251,5 +297,5 @@ def parse_sql(sql: str) -> Query:
         q = q.take(int(p.next()))
 
     if p.peek() is not None:
-        raise SyntaxError(f"trailing tokens: {p.toks[p.i:]}")
-    return q
+        raise p.error(f"trailing tokens: {p.toks[p.i:]}")
+    return Query(**{**q.__dict__, "raw_sql": cleaned})

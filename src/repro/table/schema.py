@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -50,6 +50,17 @@ class Schema:
             if c.name == name:
                 return np.dtype(c.dtype)
         raise KeyError(f"no column {name!r} in schema {self.names}")
+
+    def has(self, name: str) -> bool:
+        return any(c.name == name for c in self.columns)
+
+    def get(self, name: str) -> Optional[Column]:
+        """The column named ``name``, or None — the non-raising lookup the
+        static lineage pass uses."""
+        for c in self.columns:
+            if c.name == name:
+                return c
+        return None
 
     def select(self, names: List[str]) -> "Schema":
         by_name = {c.name: c for c in self.columns}

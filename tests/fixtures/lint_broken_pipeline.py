@@ -1,0 +1,26 @@
+"""A deliberately broken pipeline for lint tests and the CI smoke job.
+
+Seeded bugs (each one a rule the linter must catch):
+
+* ``trips`` selects ``total_fare``, which does not exist on
+  ``taxi_table`` — L001 (error);
+* ``jittered`` draws from an unseeded ``np.random.default_rng()`` —
+  D102 (warning, cache poison).
+"""
+import numpy as np
+
+import repro
+
+broken = repro.project("lint_broken_demo")
+
+broken.sql(
+    "trips",
+    "SELECT pickup_at, total_fare FROM taxi_table WHERE passenger_count > 1",
+)
+
+
+@broken.model()
+def jittered(ctx, trips):
+    rng = np.random.default_rng()
+    noise = rng.normal(0.0, 1.0, trips.capacity).astype(np.float32)
+    return {"pickup_at": trips["pickup_at"], "noise": noise}

@@ -1,0 +1,539 @@
+"""The static preflight pass — golden reports for every lint rule.
+
+Each test seeds one specific defect into a small pipeline and asserts
+the exact rule fires (with a usable file:line), plus the negative space:
+clean pipelines come back clean, noqa suppresses, and ``client.lint``
+touches the store read-only.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis import Finding, LintFailed, LintReport, Severity, lint_pipeline
+from repro.api import RedefinitionWarning
+from repro.api.project import Project
+from repro.cli import main
+from repro.core import Pipeline
+from repro.engine.sql import SqlError, parse_sql
+from repro.table.schema import Schema
+from tests.helpers_taxi import TAXI_SCHEMA, make_taxi_data
+
+TAXI = {
+    "taxi_table": Schema.of(
+        pickup_at="int32",
+        pickup_location_id="int32",
+        passenger_count="int32",
+        dropoff_location_id="int32",
+    )
+}
+
+
+def lint(pipeline, schemas=TAXI) -> LintReport:
+    return lint_pipeline(pipeline, external_schemas=schemas)
+
+
+def rules(report: LintReport):
+    return {f.rule for f in report.findings}
+
+
+# ------------------------------------------------------------ lineage (L)
+def test_l001_missing_column_sql():
+    p = Pipeline("t")
+    p.sql("trips", "SELECT total_fare FROM taxi_table")
+    report = lint(p)
+    (f,) = report.by_rule("L001")
+    assert f.severity is Severity.ERROR
+    assert "total_fare" in f.message and "taxi_table" in f.message
+    assert f.file and f.file.endswith("test_lint.py") and f.line
+    assert "total_fare" in (f.snippet or "")
+
+
+def test_l001_missing_column_python_ast():
+    proj = Project("l001_py")
+    proj.sql("trips", "SELECT pickup_at, passenger_count FROM taxi_table")
+
+    @proj.model()
+    def doubled(ctx, trips):
+        return {"x": trips["fare_amount"] * 2}  # not a trips column
+
+    report = lint(proj.pipeline())
+    (f,) = report.by_rule("L001")
+    assert f.node == "doubled"
+    assert "fare_amount" in f.message
+    assert f.file.endswith("test_lint.py")
+    assert "fare_amount" in f.snippet
+
+
+def test_l001_python_columnar_method_arg():
+    proj = Project("l001_method")
+
+    @proj.model()
+    def stats(ctx, taxi_table):
+        return {"m": np.asarray([taxi_table.mean("nonexistent")])}
+
+    report = lint(proj.pipeline())
+    assert "L001" in rules(report)
+
+
+def test_l002_group_key_type_mismatch():
+    p = Pipeline("t")
+    p.sql("by_amount", "SELECT amount, COUNT(*) AS n FROM orders GROUP BY amount")
+    report = lint(p, {"orders": Schema.of(amount="float32")})
+    (f,) = report.by_rule("L002")
+    assert f.severity is Severity.ERROR
+    assert "float32" in f.message
+
+
+def test_l003_order_by_not_in_outputs():
+    p = Pipeline("t")
+    p.sql(
+        "pickups",
+        "SELECT pickup_location_id, COUNT(*) AS counts FROM taxi_table "
+        "GROUP BY pickup_location_id ORDER BY passenger_count DESC",
+    )
+    report = lint(p)
+    (f,) = report.by_rule("L003")
+    assert "passenger_count" in f.message
+
+
+def test_l004_unknown_table():
+    p = Pipeline("t")
+    p.sql("trips", "SELECT x FROM no_such_table")
+    report = lint(p)
+    (f,) = report.by_rule("L004")
+    assert f.severity is Severity.ERROR
+    assert "no_such_table" in f.message
+    # without a catalog context, existence cannot be judged — no finding
+    assert "L004" not in rules(lint_pipeline(p))
+
+
+def test_clean_pipeline_is_clean():
+    p = Pipeline("t")
+    p.sql(
+        "pickups",
+        "SELECT pickup_location_id, COUNT(*) AS counts FROM taxi_table "
+        "GROUP BY pickup_location_id ORDER BY counts DESC",
+    )
+    report = lint(p)
+    assert report.findings == []
+    assert report.ok(strict=True)
+
+
+def test_schema_propagates_through_sql_chain():
+    # stage 2 references a column stage 1 dropped — caught via propagation
+    p = Pipeline("t")
+    p.sql("narrow", "SELECT pickup_at FROM taxi_table")
+    p.sql("later", "SELECT passenger_count FROM narrow")
+    report = lint(p)
+    (f,) = report.by_rule("L001")
+    assert f.node == "later" and "passenger_count" in f.message
+
+
+# ------------------------------------------------------- cache poison (D)
+def _d_findings(fn_body_project):
+    return lint(fn_body_project.pipeline())
+
+
+def test_d101_wall_clock():
+    proj = Project("d101")
+
+    @proj.model()
+    def stamped(ctx, taxi_table):
+        import time
+
+        return {"t": np.asarray([time.time()], dtype=np.float32)}
+
+    report = _d_findings(proj)
+    (f,) = report.by_rule("D101")
+    assert f.severity is Severity.WARNING
+    assert "time.time" in f.message
+
+
+def test_d102_unseeded_random():
+    proj = Project("d102")
+
+    @proj.model()
+    def noisy(ctx, taxi_table):
+        rng = np.random.default_rng()
+        return {"x": rng.random(4).astype(np.float32)}
+
+    report = _d_findings(proj)
+    assert len(report.by_rule("D102")) == 1
+
+    seeded = Project("d102_ok")
+
+    @seeded.model()
+    def quiet(ctx, taxi_table):
+        rng = np.random.default_rng(7)
+        return {"x": rng.random(4).astype(np.float32)}
+
+    assert _d_findings(seeded).by_rule("D102") == []
+
+
+def test_d102_legacy_global_stream():
+    proj = Project("d102_legacy")
+
+    @proj.model()
+    def legacy(ctx, taxi_table):
+        return {"x": np.random.rand(4).astype(np.float32)}
+
+    assert len(_d_findings(proj).by_rule("D102")) == 1
+
+
+def test_d103_uuid():
+    proj = Project("d103")
+
+    @proj.model()
+    def tagged(ctx, taxi_table):
+        import uuid
+
+        run_tag = uuid.uuid4()
+        return {"x": np.asarray([run_tag.int % 7], dtype=np.int32)}
+
+    assert len(_d_findings(proj).by_rule("D103")) == 1
+
+
+def test_d104_environment_read():
+    proj = Project("d104")
+
+    @proj.model()
+    def configured(ctx, taxi_table):
+        import os
+
+        mode = os.environ.get("MODE", "fast")
+        return {"x": np.asarray([len(mode)], dtype=np.int32)}
+
+    found = _d_findings(proj).by_rule("D104")
+    assert len(found) == 1  # call + attribute matchers dedup to one
+
+
+def test_d105_file_io():
+    proj = Project("d105")
+
+    @proj.model()
+    def sneaky(ctx, taxi_table):
+        with open("side.csv") as fh:
+            n = len(fh.read())
+        return {"x": np.asarray([n], dtype=np.int32)}
+
+    assert len(_d_findings(proj).by_rule("D105")) == 1
+
+
+def test_d106_global_mutation():
+    proj = Project("d106")
+
+    @proj.model()
+    def leaky(ctx, taxi_table):
+        global _COUNTER  # noqa: PLW0603
+        _COUNTER = 1
+        return {"x": np.asarray([_COUNTER], dtype=np.int32)}
+
+    assert len(_d_findings(proj).by_rule("D106")) == 1
+
+
+def test_d107_input_table_mutation():
+    proj = Project("d107")
+
+    @proj.model()
+    def mutator(ctx, taxi_table):
+        taxi_table.columns["pickup_at"] = np.zeros(1, dtype=np.int32)
+        return {"x": np.zeros(1, dtype=np.int32)}
+
+    (f,) = _d_findings(proj).by_rule("D107")
+    assert "taxi_table" in f.message
+
+
+# ------------------------------------------------------------- noqa
+def test_noqa_rule_scoped_suppression():
+    proj = Project("noqa_scoped")
+
+    @proj.model()
+    def noisy(ctx, taxi_table):
+        rng = np.random.default_rng()  # repro: noqa[D102]
+        return {"x": rng.random(4).astype(np.float32)}
+
+    report = _d_findings(proj)
+    assert report.by_rule("D102") == []
+    assert report.suppressed == 1
+
+
+def test_noqa_bare_suppresses_all():
+    proj = Project("noqa_bare")
+
+    @proj.model()
+    def noisy(ctx, taxi_table):
+        import time
+        t = time.time()  # repro: noqa
+        return {"x": np.asarray([t], dtype=np.float32)}
+
+    report = _d_findings(proj)
+    assert report.by_rule("D101") == []
+    assert report.suppressed == 1
+
+
+def test_noqa_wrong_rule_does_not_suppress():
+    proj = Project("noqa_wrong")
+
+    @proj.model()
+    def noisy(ctx, taxi_table):
+        rng = np.random.default_rng()  # repro: noqa[D101]
+        return {"x": rng.random(4).astype(np.float32)}
+
+    report = _d_findings(proj)
+    assert len(report.by_rule("D102")) == 1
+    assert report.suppressed == 0
+
+
+# ----------------------------------------------------- plan diagnostics (G)
+def test_g301_orphan_expectation():
+    proj = Project("orphan")
+    proj.sql("trips", "SELECT pickup_at FROM taxi_table")
+
+    @proj.expectation()
+    def check(ctx, taxi_table):  # audits the raw input, not an artifact
+        return True
+
+    report = lint(proj.pipeline())
+    (f,) = report.by_rule("G301")
+    assert f.severity is Severity.WARNING
+    assert f.node == "check"
+
+
+def test_g302_cycle_with_locations():
+    p = Pipeline("cyclic")
+    p.sql("a", "SELECT x FROM b")
+    p.sql("b", "SELECT x FROM a")
+    report = lint_pipeline(p)
+    (f,) = report.by_rule("G302")
+    assert f.severity is Severity.ERROR
+    assert "a" in f.message and "b" in f.message
+    assert "test_lint.py" in f.message  # file:line chain in the message
+    assert not report.ok()
+    assert report.blast_radius == {}  # no meaningful radius on a cycle
+
+
+def test_g303_unreachable_behind_cycle():
+    p = Pipeline("cyclic2")
+    p.sql("a", "SELECT x FROM b")
+    p.sql("b", "SELECT x FROM a")
+    p.sql("c", "SELECT x FROM a")  # schedulable never: parent in the cycle
+    report = lint_pipeline(p)
+    assert {f.node for f in report.by_rule("G303")} == {"c"}
+
+
+def test_g304_redefinition_warns_and_reports():
+    proj = Project("redef_g304")
+    proj.sql("trips", "SELECT pickup_at FROM taxi_table")
+    with pytest.warns(RedefinitionWarning):
+        proj.sql("trips", "SELECT passenger_count FROM taxi_table")
+    report = lint(proj.pipeline())
+    (f,) = report.by_rule("G304")
+    assert "trips" in f.message and "replaced" in f.message
+
+
+def test_identical_reregistration_is_silent(recwarn):
+    proj = Project("redef_same")
+    proj.sql("trips", "SELECT pickup_at FROM taxi_table")
+    proj.sql("trips", "SELECT pickup_at FROM taxi_table")  # same code
+    assert not [w for w in recwarn if w.category is RedefinitionWarning]
+    assert lint(proj.pipeline()).by_rule("G304") == []
+
+
+# ------------------------------------------------------------ blast radius
+def test_blast_radius_chain():
+    p = Pipeline("chain")
+    p.sql("a", "SELECT pickup_at FROM taxi_table")
+    p.sql("b", "SELECT pickup_at FROM a")
+    p.sql("c", "SELECT pickup_at FROM b")
+    radius = lint(p).blast_radius
+    assert radius["a"] == ["b", "c"]
+    assert radius["b"] == ["c"]
+    assert radius["c"] == []
+
+
+# ----------------------------------------------------------- SQL positions
+def test_sql_error_carries_position_and_fragment():
+    with pytest.raises(SqlError) as ei:
+        parse_sql("SELECT pickup_at FROM taxi_table WHERE pickup_at >")
+    err = ei.value
+    assert isinstance(err, SyntaxError)  # legacy except-clauses keep working
+    assert isinstance(err.pos, int) and err.pos > 0
+    assert err.fragment
+    assert "position" in str(err)
+
+
+def test_sql_tokenize_error_position():
+    with pytest.raises(SqlError) as ei:
+        parse_sql("SELECT pickup_at $ FROM taxi_table")
+    assert ei.value.pos == len("SELECT pickup_at ")
+
+
+def test_parsed_query_keeps_raw_sql_out_of_fingerprint():
+    q1 = parse_sql("SELECT pickup_at FROM taxi_table")
+    q2 = parse_sql("SELECT  pickup_at  FROM  taxi_table")
+    assert q1.raw_sql != q2.raw_sql
+    assert q1 == q2  # raw_sql is compare=False
+    assert "raw_sql" not in q1.to_json_dict()  # fingerprints unaffected
+
+
+# --------------------------------------------------------- client surface
+@pytest.fixture
+def client(tmp_path, rng):
+    with repro.Client(tmp_path / "lake") as c:
+        c.write_table("taxi_table", make_taxi_data(500, rng), schema=TAXI_SCHEMA)
+        yield c
+
+
+def _broken_pipeline() -> Pipeline:
+    p = Pipeline("broken")
+    p.sql("trips", "SELECT total_fare FROM taxi_table")
+    return p
+
+
+def _clean_pipeline() -> Pipeline:
+    p = Pipeline("clean")
+    p.sql("trips", "SELECT pickup_at FROM taxi_table WHERE passenger_count > 1")
+    return p
+
+
+def test_client_lint_zero_store_writes(client):
+    puts_before = client.store.stats.puts
+    report = client.lint(_broken_pipeline())
+    assert not report.ok()
+    assert client.store.stats.puts == puts_before  # read-only pass
+    assert client._executor is None  # no fleet was ever constructed
+
+
+def test_client_lint_resolves_catalog_schemas(client):
+    report = client.lint(_clean_pipeline())
+    assert report.ok(strict=True)
+    # a table the catalog doesn't have is an L004 through the client too
+    p = Pipeline("ghost")
+    p.sql("x", "SELECT a FROM phantom_table")
+    assert "L004" in rules(client.lint(p))
+
+
+def test_preflight_refuses_broken_run(client):
+    with pytest.raises(LintFailed) as ei:
+        client.run(_broken_pipeline(), preflight=True)
+    assert ei.value.report.by_rule("L001")
+    # nothing ran, nothing merged
+    assert "trips" not in client.tables("main")
+
+    handle = client.run(_broken_pipeline(), preflight=True, raise_errors=False)
+    assert handle.state is repro.RunState.ERROR
+    assert isinstance(handle.error, LintFailed)
+
+
+def test_preflight_clean_run_proceeds(client):
+    handle = client.run(_clean_pipeline(), preflight=True)
+    assert handle.state is repro.RunState.SUCCESS
+    assert "trips" in client.tables("main")
+
+
+def test_preflight_warnings_do_not_block(client):
+    proj = Project("warn_only")
+
+    @proj.model()
+    def noisy(ctx, taxi_table):
+        rng = np.random.default_rng()
+        return {"x": rng.random(taxi_table.capacity).astype(np.float32)}
+
+    report = client.lint(proj.pipeline())
+    assert report.errors == [] and report.warnings
+    handle = client.run(proj.pipeline(), preflight=True)
+    assert handle.state is repro.RunState.SUCCESS
+
+
+# ------------------------------------------------------------------- CLI
+CLEAN_SRC = """
+import repro
+
+clean = repro.project("cli_lint_clean")
+clean.sql("trips", "SELECT pickup_at FROM taxi_table WHERE passenger_count > 1")
+"""
+
+
+@pytest.fixture
+def lake(tmp_path, rng):
+    with repro.Client(tmp_path / "lake") as c:
+        c.write_table("taxi_table", make_taxi_data(200, rng), schema=TAXI_SCHEMA)
+    return tmp_path / "lake"
+
+
+def test_cli_lint_clean(lake, tmp_path, capsys):
+    f = tmp_path / "clean_pipe.py"
+    f.write_text(CLEAN_SRC)
+    main(["--lake", str(lake), "lint", str(f)])
+    out = capsys.readouterr().out
+    assert "preflight clean" in out
+
+
+def test_cli_lint_broken_exits_nonzero(lake, capsys):
+    with pytest.raises(SystemExit) as ei:
+        main(["--lake", str(lake), "lint", "tests/fixtures/lint_broken_pipeline.py"])
+    assert ei.value.code == 1
+    out = capsys.readouterr().out
+    assert "L001" in out and "D102" in out
+    assert "lint_broken_pipeline.py" in out  # file:line surfaced
+
+
+def test_cli_lint_json_report(lake, tmp_path, capsys):
+    report_path = tmp_path / "report.json"
+    with pytest.raises(SystemExit):
+        main([
+            "--lake", str(lake), "lint",
+            "tests/fixtures/lint_broken_pipeline.py",
+            "--json", str(report_path),
+        ])
+    data = json.loads(report_path.read_text())
+    assert data["errors"] >= 1 and data["warnings"] >= 1
+    assert {f["rule"] for f in data["findings"]} >= {"L001", "D102"}
+    assert all("file" in f and "line" in f for f in data["findings"])
+
+
+def test_cli_lint_strict_promotes_warnings(lake, tmp_path, capsys):
+    f = tmp_path / "warn_pipe.py"
+    f.write_text(
+        CLEAN_SRC.replace("cli_lint_clean", "cli_lint_warn")
+        + """
+import numpy as np
+
+@repro.model(project="cli_lint_warn")
+def noisy(ctx, trips):
+    rng = np.random.default_rng()
+    return {"x": rng.random(4).astype(np.float32)}
+"""
+    )
+    main(["--lake", str(lake), "lint", str(f)])  # warnings alone pass
+    with pytest.raises(SystemExit) as ei:
+        main(["--lake", str(lake), "lint", str(f), "--strict"])
+    assert ei.value.code == 1
+
+
+def test_cli_run_preflight_refuses(lake, capsys):
+    with pytest.raises(SystemExit) as ei:
+        main([
+            "--lake", str(lake), "run",
+            "tests/fixtures/lint_broken_pipeline.py", "--preflight",
+        ])
+    assert "PREFLIGHT FAILED" in str(ei.value.code)
+
+
+# ------------------------------------------------------- shipped examples
+def test_examples_lint_clean(tmp_path, rng, capsys):
+    with repro.Client(tmp_path / "lake") as c:
+        c.write_table("taxi_table", make_taxi_data(200, rng), schema=TAXI_SCHEMA)
+        c.write_table(
+            "orders",
+            {
+                "user_id": rng.integers(0, 100, 500).astype(np.int32),
+                "amount": (rng.random(500) * 200).astype(np.float32),
+                "country": rng.integers(0, 30, 500).astype(np.int32),
+            },
+        )
+    for example in ("examples/taxi_pipeline.py", "examples/quickstart.py"):
+        main(["--lake", str(tmp_path / "lake"), "lint", example, "--strict"])
+        assert "preflight clean" in capsys.readouterr().out
