@@ -1,0 +1,205 @@
+"""Telemetry plane overhead: the event bus must be effectively free.
+
+The observability contract (ROADMAP: event bus + run tracing) only holds
+if instrumentation does not tax the runs it observes.  Two measurements
+pin that down:
+
+* **micro** — raw ``EventBus.publish`` cost with realistic fan-out (two
+  bounded subscribers + the on-disk spool mirror), in µs/event; from it
+  and the event count of a real traced run, the *derived* bus share of
+  that run's wall-clock.
+* **macro** — the same pipeline executed end-to-end with telemetry ON
+  (bus + spool + runlog persistence + metrics) vs OFF
+  (``Client(telemetry=False)``), interleaved A/B to cancel drift,
+  medians compared.  Cache is disabled so every run does full work.
+
+Acceptance (enforced here, run by the CI telemetry-smoke job): bus
+overhead **< 3%** of run wall-clock on both measurements.
+
+Also runnable standalone::
+
+    python -m benchmarks.bench_telemetry --smoke --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks.common import perf_meta, row
+from repro.api import Client
+from repro.core import Pipeline
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
+from repro.runtime import ExecutorConfig
+from repro.telemetry import EventBus, ScanShardRead
+
+#: acceptance bar: bus share of run wall-clock
+MAX_OVERHEAD_FRAC = 0.03
+
+
+def _pipeline() -> Pipeline:
+    p = Pipeline("telemetry_bench")
+    p.sql(
+        "trips",
+        "SELECT pickup_location_id, passenger_count as count FROM taxi_table"
+        " WHERE pickup_at >= '2019-04-01'",
+    )
+
+    @p.python
+    def trips_expectation(ctx, trips):
+        return trips.mean("count") > 0.0
+
+    for i in range(3):
+
+        def make_model(i):
+            def fn(ctx, trips):
+                import jax.numpy as jnp
+
+                col = trips.column("count").astype(jnp.float32)
+                return {"stat": jnp.sort(col) * (i + 1)}
+
+            fn.__name__ = f"m{i}"
+            return fn
+
+        p.python(make_model(i))
+    return p
+
+
+def _client(telemetry: bool) -> Client:
+    return Client.ephemeral(
+        shard_rows=2048,
+        telemetry=telemetry,
+        executor_config=ExecutorConfig(max_workers=8, max_concurrent_stages=4),
+    )
+
+
+def _measure_publish_us(n: int = 20_000) -> float:
+    """µs per publish with two subscribers + a live spool file."""
+    with tempfile.TemporaryDirectory() as tmp:
+        bus = EventBus(spool_path=Path(tmp) / "spool.jsonl")
+        subs = [bus.subscribe(maxlen=1024) for _ in range(2)]
+        ev = [
+            ScanShardRead(run_id=1, table="t", shard_index=i, rows_in=100)
+            for i in range(n)
+        ]
+        t0 = time.perf_counter()
+        for e in ev:
+            bus.publish(e)
+        wall = time.perf_counter() - t0
+        for s in subs:
+            s.close()
+        bus.close()
+    return wall / n * 1e6
+
+
+def _run_wall(client: Client, pipeline: Pipeline, rows: int, seed: int) -> float:
+    rng = np.random.default_rng(seed)
+    client.write_table(
+        "taxi_table", make_taxi_data(rows, rng), schema=TAXI_SCHEMA
+    )
+    walls = []
+    for _ in range(1):  # branch state is fresh per client; one run each
+        t0 = time.perf_counter()
+        client.run(
+            pipeline, fusion=False, pushdown=False, cache=False
+        ).raise_for_state()
+        walls.append(time.perf_counter() - t0)
+    return min(walls)
+
+
+def measure(
+    *, rows: int = 20_000, pairs: int = 5, json_path: Optional[str] = None
+) -> Dict[str, float]:
+    pipeline = _pipeline()
+
+    # macro: interleaved A/B — fresh lake per run, medians compared
+    on_walls: List[float] = []
+    off_walls: List[float] = []
+    for i in range(pairs + 1):  # +1 warmup pair (jit compile both sides)
+        for telemetry, acc in ((True, on_walls), (False, off_walls)):
+            with _client(telemetry) as client:
+                wall = _run_wall(client, pipeline, rows, seed=7)
+                if i > 0:
+                    acc.append(wall)
+    on_med = statistics.median(on_walls)
+    off_med = statistics.median(off_walls)
+    e2e_overhead = max(0.0, (on_med - off_med) / off_med)
+
+    # micro: publish cost x observed event volume = derived bus share
+    publish_us = _measure_publish_us()
+    with _client(True) as client:
+        wall = _run_wall(client, pipeline, rows, seed=7)
+        run_id = max(
+            ref["run_id"] for ref in client.runlog.refs().values()
+        )
+        n_events = len(client.runlog.get(run_id))
+    derived_share = (n_events * publish_us * 1e-6) / wall
+
+    results = {
+        "publish_us_per_event": publish_us,
+        "events_per_run": n_events,
+        "run_wall_s": wall,
+        "derived_bus_share": derived_share,
+        "wall_on_s": on_med,
+        "wall_off_s": off_med,
+        "e2e_overhead_frac": e2e_overhead,
+        **perf_meta(parallelism=4, wall_s=on_med),
+    }
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+
+    assert derived_share < MAX_OVERHEAD_FRAC, (
+        f"bus share of wall-clock {derived_share:.2%} exceeds "
+        f"{MAX_OVERHEAD_FRAC:.0%} ({n_events} events x {publish_us:.1f}µs "
+        f"over {wall:.3f}s)"
+    )
+    assert e2e_overhead < MAX_OVERHEAD_FRAC, (
+        f"end-to-end telemetry overhead {e2e_overhead:.2%} exceeds "
+        f"{MAX_OVERHEAD_FRAC:.0%} (on={on_med:.3f}s off={off_med:.3f}s)"
+    )
+    return results
+
+
+def run() -> List[str]:
+    r = measure()
+    return [
+        row("telemetry_publish", r["publish_us_per_event"],
+            f"2 subs + spool; {r['events_per_run']} events/run"),
+        row("telemetry_run_on", r["wall_on_s"] * 1e6,
+            f"e2e_overhead={r['e2e_overhead_frac']:.2%}"),
+        row("telemetry_run_off", r["wall_off_s"] * 1e6,
+            f"derived_bus_share={r['derived_bus_share']:.3%}"),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--pairs", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: fewer rows, fewer pairs")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    if args.smoke:
+        args.rows, args.pairs = 10_000, 3
+    r = measure(rows=args.rows, pairs=args.pairs, json_path=args.json)
+    print(
+        f"publish: {r['publish_us_per_event']:.2f} µs/event | "
+        f"{r['events_per_run']} events/run -> derived bus share "
+        f"{r['derived_bus_share']:.3%} of {r['run_wall_s']:.3f}s wall"
+    )
+    print(
+        f"end-to-end: on={r['wall_on_s']:.3f}s off={r['wall_off_s']:.3f}s "
+        f"overhead={r['e2e_overhead_frac']:.2%} (bar {MAX_OVERHEAD_FRAC:.0%})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_speculation       straggler-tail savings from backup requests
   bench_parallel_dag      wave scheduler: fan-out speedup vs sequential
   bench_dryrun_summary    deliverables (e)+(g): dry-run + roofline headlines
+  bench_telemetry         event-bus overhead (< 3% of run wall-clock)
 
 Run: ``PYTHONPATH=src:. python -m benchmarks.run [--only NAME]``
 """
@@ -30,6 +31,7 @@ SUITES = [
     "bench_speculation",
     "bench_parallel_dag",
     "bench_dryrun_summary",
+    "bench_telemetry",
 ]
 
 

@@ -54,9 +54,17 @@ from repro.maintenance import (
 from repro.runtime.executor import ExecutorConfig, ServerlessExecutor
 from repro.table.format import Snapshot, TableFormat
 from repro.table.schema import Schema
+from repro.telemetry.bus import EventBus, Subscription, read_spool
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.runlog import RunLogStore
+from repro.telemetry.tracing import RunTrace
 from repro.utils.logging import get_logger
 
 log = get_logger("api.client")
+
+#: spool file (JSON lines) the bus mirrors events into, relative to the
+#: lake root — what a *separate* ``repro events --follow`` process tails
+SPOOL_RELPATH = Path("telemetry") / "events.jsonl"
 
 #: lake namespace persisting the executor's per-fingerprint latency
 #: history (straggler-speculation baselines survive process restarts)
@@ -113,11 +121,26 @@ class Client:
         shard_rows: Optional[int] = None,
         executor_config: Optional[ExecutorConfig] = None,
         executor: Optional[ServerlessExecutor] = None,
+        telemetry: bool = True,
     ):
         if path is None:
             path = tempfile.mkdtemp(prefix="repro_lake_")
         self.path = Path(path)
         self.store = ObjectStore(self.path)
+        #: the observability plane: one bus every component publishes
+        #: into, one metrics registry absorbing StoreStats/executor
+        #: numbers, one runlog reading traces back.  ``telemetry=False``
+        #: turns the bus off entirely (no events, no spool, no run log) —
+        #: the benchmark baseline
+        self.metrics = MetricsRegistry()
+        self.bus: Optional[EventBus] = (
+            EventBus(spool_path=self.path / SPOOL_RELPATH)
+            if telemetry
+            else None
+        )
+        self.runlog = RunLogStore(self.store)
+        if telemetry:
+            self.store.stats.attach_metrics(self.metrics)
         self.catalog = Catalog(self.store)
         self.fmt = (
             TableFormat(self.store, shard_rows=shard_rows)
@@ -156,8 +179,15 @@ class Client:
     def executor(self) -> ServerlessExecutor:
         with self._init_lock:
             if self._executor is None:
-                self._executor = ServerlessExecutor(self._executor_config)
+                self._executor = ServerlessExecutor(
+                    self._executor_config,
+                    bus=self.bus, metrics=self.metrics,
+                )
                 self._load_latency_history()
+            elif self._executor.bus is None and self.bus is not None:
+                # caller-supplied fleet: adopt this lake's telemetry plane
+                self._executor.bus = self.bus
+                self._executor.metrics = self.metrics
             return self._executor
 
     @property
@@ -169,6 +199,7 @@ class Client:
                 self._runner = Runner(
                     self.catalog, self.fmt, executor,
                     cache_registry=self.cache_registry,
+                    bus=self.bus, runlog=self.runlog,
                 )
             return self._runner
 
@@ -186,6 +217,8 @@ class Client:
             self._save_latency_history()
             if self._owns_executor:
                 self._executor.shutdown()
+        if self.bus is not None:
+            self.bus.close()
 
     def __enter__(self) -> "Client":
         return self
@@ -319,6 +352,41 @@ class Client:
         """Synchronous SQL against a branch head or any commit."""
         return self.runner.query(sql, branch=branch, commit_id=commit_id)
 
+    # -------------------------------------------------------- observability
+    def trace(self, run_id: int) -> RunTrace:
+        """The persisted trace of a recorded run: span tree (run → stage →
+        node/scan), queue-vs-exec-vs-commit breakdown, critical path,
+        Chrome-trace export (``trace.write_chrome_trace(path)``).
+
+        Raises ``KeyError`` when the run has no trace — telemetry was off,
+        or ``gc --runlog-ttl`` expired it.
+        """
+        return RunTrace.from_events(self.runlog.get(run_id), run_id=run_id)
+
+    def events(
+        self,
+        *,
+        follow: bool = False,
+        run_id: Optional[int] = None,
+        buffer: int = 4096,
+    ) -> Any:
+        """The live event stream.
+
+        ``follow=False`` (default) returns the events already mirrored to
+        this lake's spool file — including those published by *other*
+        processes.  ``follow=True`` returns a :class:`Subscription` on the
+        in-process bus (context manager; ``poll()`` / ``follow()``), which
+        sees everything published from now on.
+        """
+        if follow:
+            if self.bus is None:
+                raise RuntimeError(
+                    "telemetry is disabled for this client "
+                    "(Client(..., telemetry=True) to enable)"
+                )
+            return self.bus.subscribe(maxlen=buffer)
+        return read_spool(self.path / SPOOL_RELPATH, run_id=run_id)
+
     # ---------------------------------------------------------------- lint
     def lint(
         self,
@@ -393,6 +461,7 @@ class Client:
                     merged_commit=None,
                     error=err,
                     _fmt=self.fmt,
+                    _runlog=self.runlog,
                 )
         try:
             result = self.runner.run(
@@ -420,6 +489,7 @@ class Client:
                 stats=dict(rec.stats) if rec else {},
                 plan=e.plan,
                 _fmt=self.fmt,
+                _runlog=self.runlog,
             )
         except Exception as e:
             self._save_latency_history()
@@ -427,11 +497,15 @@ class Client:
                 raise
             return RunHandle(
                 state=RunState.ERROR,
-                run_id=-1,
+                # the runner stamps its run id on escaping exceptions, so
+                # the handle (and its trace) stay addressable; -1 only
+                # when the failure predates run-id allocation
+                run_id=getattr(e, "repro_run_id", -1),
                 branch=branch,
                 merged_commit=None,
                 error=e,
                 _fmt=self.fmt,
+                _runlog=self.runlog,
             )
         self._save_latency_history()
         return self._handle_from_result(result)
@@ -532,6 +606,7 @@ class Client:
             plan=result.plan,
             replay_of=replay_of,
             _fmt=self.fmt,
+            _runlog=self.runlog,
         )
 
     # ---------------------------------------------------------- maintenance
@@ -542,14 +617,20 @@ class Client:
         grace_s: float = 900.0,
         pin_ttl_s: Optional[float] = 86400.0,
         latency_ttl_s: Optional[float] = 30 * 86400.0,
+        runlog_ttl_s: Optional[float] = 14 * 86400.0,
         dry_run: bool = False,
     ) -> GCReport:
-        """Mark-and-sweep unreachable objects (the lakekeeper's GC)."""
+        """Mark-and-sweep unreachable objects (the lakekeeper's GC).
+
+        ``runlog_ttl_s`` is the run-trace retention window: traces older
+        than it are swept (ref + blob, one pass); None keeps every trace.
+        """
         return collect_garbage(
             self.store, self.catalog, self.fmt,
             history=history, grace_s=grace_s,
             pin_ttl_s=pin_ttl_s, latency_ttl_s=latency_ttl_s,
-            dry_run=dry_run,
+            runlog_ttl_s=runlog_ttl_s,
+            dry_run=dry_run, bus=self.bus,
         )
 
     def compact(
@@ -566,10 +647,12 @@ class Client:
             return [compact_table(
                 self.catalog, self.fmt, table, branch=branch,
                 target_rows=target_rows, min_fill=min_fill, dry_run=dry_run,
+                bus=self.bus,
             )]
         return compact_branch(
             self.catalog, self.fmt, branch=branch,
             target_rows=target_rows, min_fill=min_fill, dry_run=dry_run,
+            bus=self.bus,
         )
 
 

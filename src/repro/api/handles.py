@@ -75,6 +75,8 @@ class RunHandle:
     error: Optional[BaseException] = None
     #: reader for lazy artifact access (bound by the Client)
     _fmt: Optional[TableFormat] = None
+    #: run-log reader for trace() (bound by the Client when telemetry on)
+    _runlog: Optional[Any] = None
 
     # ------------------------------------------------------------- status
     @property
@@ -119,6 +121,24 @@ class RunHandle:
         if self._fmt is None:
             raise RuntimeError("handle is not bound to a table format")
         return self._fmt.read(self._fmt.load_snapshot(self.artifacts[name]))
+
+    # ------------------------------------------------------- observability
+    def trace(self) -> Any:
+        """This run's :class:`repro.telemetry.tracing.RunTrace` — the
+        span tree (run → stage → node/scan) assembled from the persisted
+        run log, with queue/exec/commit breakdown, critical path and
+        Chrome-trace export.  Works for every final state (a failed audit
+        still records its trace).
+        """
+        if self._runlog is None:
+            raise RuntimeError(
+                "handle is not bound to a run log (telemetry disabled?)"
+            )
+        from repro.telemetry.tracing import RunTrace
+
+        return RunTrace.from_events(
+            self._runlog.get(self.run_id), run_id=self.run_id
+        )
 
     def __repr__(self) -> str:
         merged = (
@@ -181,6 +201,10 @@ class AsyncRunHandle:
     def raise_for_state(self) -> RunHandle:
         """Block, then raise ``RunFailed`` unless the run succeeded."""
         return self.result().raise_for_state()
+
+    def trace(self) -> Any:
+        """Block until resolved, then the run's trace (``RunHandle.trace``)."""
+        return self.result().trace()
 
     def __repr__(self) -> str:
         if not self._future.done():

@@ -19,10 +19,16 @@ helpers:
 plus the lakekeeper maintenance verbs (repro.maintenance):
 
   python -m repro.cli --lake ... gc [--dry-run] [--history N] [--grace S]
+                                      [--runlog-ttl S]
   python -m repro.cli --lake ... compact [TABLE] [-b branch]
                                       [--target-rows N] [--dry-run]
   python -m repro.cli --lake ... cache {prune,stats}
                                       [--max-bytes N] [--ttl S] [--dry-run]
+
+and the observability verbs (repro.telemetry):
+
+  python -m repro.cli --lake ... trace RUN_ID [--chrome out.json]
+  python -m repro.cli --lake ... events [--follow] [--run-id N] [--limit N]
 
 A pipeline module is a plain Python file — either the decorator SDK
 (``@repro.model()`` / ``@repro.expectation()`` / ``repro.sql``) or the
@@ -52,6 +58,41 @@ def _print_table(rows: dict, *, limit: int = 20) -> None:
         print(f"... ({n - limit} more rows)")
 
 
+def _format_event(event) -> str:
+    """One spool event as one log line: time, kind, run, detail fields."""
+    import time as _time
+
+    d = event.to_json_dict()
+    stamp = _time.strftime("%H:%M:%S", _time.localtime(d.pop("ts", 0.0)))
+    kind = d.pop("kind", "Event")
+    run = d.pop("run_id", None)
+    d.pop("seq", None)
+    detail = " ".join(
+        f"{k}={v}" for k, v in sorted(d.items()) if v not in (None, [], "")
+    )
+    run_s = f"run={run} " if run is not None else ""
+    return f"{stamp} {kind:<20} {run_s}{detail}"
+
+
+def _run_summary_json(res) -> dict:
+    """The ``repro run --json`` payload (machine-readable run summary)."""
+    stats = res.stats or {}
+    return {
+        "run_id": res.run_id,
+        "state": str(res.state),
+        "branch": res.branch,
+        "merged_commit": res.merged_commit,
+        "artifacts": dict(res.artifacts),
+        "checks": dict(res.checks),
+        "failed_checks": res.failed_checks,
+        "wall_s": stats.get("wall_s"),
+        "parallelism": stats.get("parallelism"),
+        "stage_timings": stats.get("stage_timings", {}),
+        "cache": stats.get("cache", {}),
+        "io": stats.get("io", {}),
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(prog="repro.cli")
     ap.add_argument("--lake", required=True, help="lake root directory")
@@ -79,6 +120,12 @@ def main(argv=None) -> None:
         "--preflight", action="store_true",
         help="lint the pipeline first and refuse to launch on any "
         "error-severity finding (repro lint, wired into run)",
+    )
+    r.add_argument(
+        "--json", action="store_true", dest="json_out",
+        help="print a machine-readable run summary (state, per-stage "
+        "queue/exec/commit timings, cache hit counts, io deltas) "
+        "instead of the human lines",
     )
     r.add_argument(
         "--cache",
@@ -130,6 +177,11 @@ def main(argv=None) -> None:
                    metavar="S",
                    help="drop speculation latency baselines not refreshed "
                    "for S seconds (stale code fingerprints; default 30 days)")
+    g.add_argument("--runlog-ttl", type=float, default=14 * 86400.0,
+                   metavar="S",
+                   help="retention window for persisted run traces: traces "
+                   "older than S seconds are swept — ref and blob in one "
+                   "pass (default 14 days)")
 
     co = sub.add_parser("compact", help="merge small shards into larger ones")
     co.add_argument("table", nargs="?", default=None,
@@ -150,6 +202,26 @@ def main(argv=None) -> None:
                     help="evict entries not used for S seconds")
     cp.add_argument("--dry-run", action="store_true")
     ca_sub.add_parser("stats", help="registry size and entry listing")
+
+    tr = sub.add_parser(
+        "trace", help="a recorded run's trace: critical-path table, "
+        "queue/exec/commit breakdown, Chrome-trace export"
+    )
+    tr.add_argument("run_id", type=int)
+    tr.add_argument("--chrome", default=None, metavar="PATH",
+                    help="also export Chrome trace-event JSON to PATH "
+                    "(open in chrome://tracing or ui.perfetto.dev)")
+
+    ev = sub.add_parser(
+        "events", help="the lake's telemetry event stream (spool file)"
+    )
+    ev.add_argument("--follow", action="store_true",
+                    help="tail the spool live (works across processes — "
+                    "a run in another shell shows up here); Ctrl-C stops")
+    ev.add_argument("--run-id", type=int, default=None,
+                    help="only events of this run")
+    ev.add_argument("--limit", type=int, default=None,
+                    help="only the last N events (non-follow mode)")
 
     args = ap.parse_args(argv)
 
@@ -195,9 +267,41 @@ def main(argv=None) -> None:
             report = client.gc(
                 history=args.history, grace_s=args.grace,
                 pin_ttl_s=args.pin_ttl, latency_ttl_s=args.latency_ttl,
+                runlog_ttl_s=args.runlog_ttl,
                 dry_run=args.dry_run,
             )
             print(report.describe())
+            return
+
+        if args.cmd == "trace":
+            try:
+                trace = client.trace(args.run_id)
+            except KeyError as e:
+                raise SystemExit(str(e))
+            print(trace.describe())
+            if args.chrome:
+                trace.write_chrome_trace(args.chrome)
+                print(f"chrome trace written to {args.chrome} "
+                      f"(open in chrome://tracing or ui.perfetto.dev)")
+            return
+
+        if args.cmd == "events":
+            from repro.api.client import SPOOL_RELPATH
+            from repro.telemetry.bus import follow_spool
+
+            spool = client.path / SPOOL_RELPATH
+            if args.follow:
+                try:
+                    for event in follow_spool(spool, run_id=args.run_id):
+                        print(_format_event(event))
+                except KeyboardInterrupt:
+                    pass
+            else:
+                events = client.events(run_id=args.run_id)
+                if args.limit:
+                    events = events[-args.limit:]
+                for event in events:
+                    print(_format_event(event))
             return
 
         if args.cmd == "compact":
@@ -273,6 +377,13 @@ def main(argv=None) -> None:
         except LintFailed as e:
             print(e.report.describe())
             raise SystemExit(f"PREFLIGHT FAILED: {e}")
+        if args.json_out:
+            import json
+
+            print(json.dumps(_run_summary_json(res), indent=2, default=str))
+            if res.state is RunState.AUDIT_FAILED:
+                raise SystemExit(2)
+            return
         if res.state is RunState.AUDIT_FAILED:
             raise SystemExit(
                 f"AUDIT FAILED: expectations failed: {res.failed_checks} "

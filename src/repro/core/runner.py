@@ -58,9 +58,29 @@ from repro.runtime.function import FunctionSpec
 from repro.table.format import Snapshot, TableFormat
 from repro.table.scan import execute_scan
 from repro.table.schema import Column, Schema
+from repro.telemetry.bus import EventBus
+from repro.telemetry.events import (
+    Event,
+    NodeCacheHit,
+    NodeCacheMiss,
+    NodeCacheRehydrated,
+    QueryExecuted,
+    RunFinished,
+    RunStarted,
+    StageCommitted,
+    StageFinished,
+    StageQueued,
+    StageStarted,
+)
+from repro.telemetry.runlog import RunLogStore
 from repro.utils.logging import get_logger
 
 log = get_logger("core.runner")
+
+#: per-run event collector bound: large enough that no realistic run
+#: drops its own trace (a 1000-stage, 50-shard-per-stage run is ~55k
+#: events); the bound still protects a pathological publisher
+_RUNLOG_BUFFER = 131072
 
 
 class ExpectationFailed(RuntimeError):
@@ -119,12 +139,32 @@ class Runner:
     executor: ServerlessExecutor
     registry: RunRegistry = None  # type: ignore[assignment]
     cache_registry: NodeCacheRegistry = None  # type: ignore[assignment]
+    #: telemetry event bus (None = telemetry off: no events, no run log).
+    #: The runner publishes run/stage/cache events; the executor and scan
+    #: pool publish speculation/shard events tagged with the run id.
+    bus: Optional[EventBus] = None
+    runlog: RunLogStore = None  # type: ignore[assignment]
 
     def __post_init__(self) -> None:
         if self.registry is None:
             self.registry = RunRegistry(self.catalog.store)
         if self.cache_registry is None:
             self.cache_registry = NodeCacheRegistry(self.catalog.store)
+        if self.runlog is None:
+            self.runlog = RunLogStore(self.catalog.store)
+
+    def _publish(self, event: Event) -> None:
+        if self.bus is not None:
+            self.bus.publish(event)
+
+    def _collect_run_events(self, collector, run_id: int) -> List[Event]:
+        """Drain the per-run collector down to this run's events.  The
+        collector subscribes before RunStarted and drains after
+        RunFinished, so with per-run filtering a concurrent run's events
+        never leak into this run's trace."""
+        events = [e for e in collector.drain() if e.run_id == run_id]
+        collector.close()
+        return events
 
     # ------------------------------------------------------------ queries
     def query(
@@ -164,12 +204,24 @@ class Runner:
         if columns == []:  # pure COUNT(*): any one column carries the rows
             columns = [snapshot.schema.names[0]]
         scan = plan_scan(snapshot, columns=columns, predicates=pushed)
+        t0 = time.perf_counter()
         rel = Columnar.from_numpy(
-            execute_scan(self.fmt, scan, pool=self.executor.io_pool)
+            execute_scan(
+                self.fmt, scan, pool=self.executor.io_pool,
+                bus=self.bus, tags={"source": "query", "table": query.source},
+            )
         )
         residual_query = _replace(query, filter_expr=residual)
         out = compile_query(residual_query)(rel)
-        return out.to_numpy()
+        result = out.to_numpy()
+        rows_out = len(next(iter(result.values()))) if result else 0
+        self._publish(QueryExecuted(
+            table=query.source,
+            rows_out=rows_out,
+            shards_read=len(scan.shards),
+            wall_s=time.perf_counter() - t0,
+        ))
+        return result
 
     # ---------------------------------------------------------------- run
     def run(
@@ -227,6 +279,19 @@ class Runner:
 
         run_id = self.registry.next_run_id()
         ephemeral = f"run_{run_id}"
+        # telemetry: subscribe BEFORE the first event so the run's trace
+        # is complete; RunFinished is published on every exit path (a
+        # mid-DAG crash or failed audit still closes the run span)
+        collector = (
+            self.bus.subscribe(maxlen=_RUNLOG_BUFFER)
+            if self.bus is not None
+            else None
+        )
+        self._publish(
+            RunStarted(run_id=run_id, pipeline=pipeline.name, branch=branch)
+        )
+        state = "ERROR"
+        failed_checks: List[str] = []
         self.catalog.create_branch(ephemeral, at_commit=base.commit_id)
         # pin the base commit: a concurrent `repro gc` must not expire the
         # data version this run is reading (grace-period pinning)
@@ -257,6 +322,7 @@ class Runner:
                     run_id, pipeline, branch, base.commit_id, params,
                     result, merged=None, t_start=t_start,
                 )
+                state, failed_checks = "AUDIT_FAILED", failed
                 raise ExpectationFailed(failed, record=rec, plan=result["plan"])
 
             # 5. write: atomic merge + ephemeral cleanup
@@ -279,8 +345,36 @@ class Runner:
                 run_id, pipeline, branch, base.commit_id, params,
                 result, merged=merged.commit_id, t_start=t_start,
             )
+            state = "SUCCESS"
+        except BaseException as e:
+            # stamp the run id on the escaping exception so an ERROR
+            # handle can still locate this run's persisted trace
+            try:
+                e.repro_run_id = run_id  # type: ignore[attr-defined]
+            except Exception:
+                pass
+            raise
         finally:
             self.registry.unpin_run(run_id)
+            self._publish(
+                RunFinished(
+                    run_id=run_id,
+                    state=state,
+                    wall_s=time.perf_counter() - t_start,
+                    failed_checks=failed_checks,
+                )
+            )
+            if collector is not None:
+                events = self._collect_run_events(collector, run_id)
+                try:
+                    self.runlog.put(
+                        run_id, events, pipeline=pipeline.name, state=state
+                    )
+                except Exception:  # a failed trace write must not sink a run
+                    log.warning(
+                        "failed to persist runlog for run %d", run_id,
+                        exc_info=True,
+                    )
         return RunResult(
             run_id=run_id,
             branch=branch,
@@ -314,6 +408,19 @@ class Runner:
             )
         replay_id = self.registry.next_run_id()
         ephemeral = f"run_{replay_id}"
+        collector = (
+            self.bus.subscribe(maxlen=_RUNLOG_BUFFER)
+            if self.bus is not None
+            else None
+        )
+        t_start = time.perf_counter()
+        self._publish(
+            RunStarted(
+                run_id=replay_id, pipeline=pipeline.name,
+                branch=rec.branch, replay_of=run_id,
+            )
+        )
+        state = "ERROR"
         self.catalog.create_branch(ephemeral, at_commit=rec.base_commit)
         self.registry.pin_run(replay_id, rec.base_commit)
         try:
@@ -325,9 +432,28 @@ class Runner:
                 use_cache=False,
                 parallelism=parallelism,
             )
+            state = "SUCCESS"
         finally:
             self.catalog.delete_branch(ephemeral)
             self.registry.unpin_run(replay_id)
+            self._publish(
+                RunFinished(
+                    run_id=replay_id,
+                    state=state,
+                    wall_s=time.perf_counter() - t_start,
+                )
+            )
+            if collector is not None:
+                events = self._collect_run_events(collector, replay_id)
+                try:
+                    self.runlog.put(
+                        replay_id, events, pipeline=pipeline.name, state=state
+                    )
+                except Exception:
+                    log.warning(
+                        "failed to persist runlog for replay %d", replay_id,
+                        exc_info=True,
+                    )
         return RunResult(
             run_id=replay_id,
             branch=rec.branch,
@@ -400,6 +526,8 @@ class Runner:
         # their audited verdicts.  Expectations were audited when the entry
         # was created — same code, same data, same verdict (4.4.1).
         rehydrate_updates: Dict[str, str] = {}
+        t_rehydrate = time.perf_counter()
+        ts_rehydrate = time.time()
         for name in plan.rehydrate:
             entry = plan.cached_nodes[name]
             key = entry.outputs[name]
@@ -428,6 +556,33 @@ class Runner:
                 len(rehydrate_updates), len(plan.cached_checks),
                 len(plan.elided),
             )
+        if self.bus is not None:
+            # plan-time cache verdicts, one event per logical node.  Hit
+            # events for every cache-satisfied node (rehydrated, elided or
+            # audited-check); rehydrated artifacts additionally get a
+            # timed rehydrate span covering the manifest re-commit.
+            rehydrate_s = time.perf_counter() - t_rehydrate
+            for name in sorted(plan.cached_nodes):
+                entry = plan.cached_nodes[name]
+                self._publish(NodeCacheHit(
+                    run_id=run_id, node=name, fingerprint=entry.fingerprint,
+                    rehydrated=name in rehydrate_updates,
+                    bytes=entry.output_bytes,
+                ))
+            for name in sorted(rehydrate_updates):
+                self._publish(NodeCacheRehydrated(
+                    run_id=run_id, ts=ts_rehydrate, node=name,
+                    bytes=plan.cached_nodes[name].output_bytes,
+                    dur_s=rehydrate_s,
+                ))
+            if use_cache:
+                for stage in plan.stages:
+                    for name in stage.node_names:
+                        self._publish(NodeCacheMiss(
+                            run_id=run_id, node=name,
+                            fingerprint=plan.node_fingerprints.get(name, ""),
+                            stage_id=stage.stage_id,
+                        ))
 
         # 3b. wave/eager scheduling: every stage whose parent stages have
         # completed is submitted to the executor's stage lane (in-flight
@@ -448,6 +603,10 @@ class Runner:
         counters = {"stages_executed": 0}
         pending_commits: Dict[int, Dict[str, Optional[str]]] = {}
         next_commit = [0]
+        # perf_counter at submit time, keyed by stage id — queue latency is
+        # StageStarted - StageQueued, reported per stage in run stats
+        queued_at: Dict[int, float] = {}
+        stage_timings: Dict[int, Dict[str, float]] = {}
 
         def flush_commits_locked() -> None:
             # called with state_lock held: drain the contiguous prefix of
@@ -455,20 +614,32 @@ class Runner:
             while next_commit[0] in pending_commits:
                 sid = next_commit[0]
                 updates = pending_commits.pop(sid)
+                t0 = time.perf_counter()
                 if updates:
                     self.catalog.commit(
                         ephemeral, updates,
                         message=f"run {run_id} stage {sid}",
                         author="runner",
                     )
+                commit_s = time.perf_counter() - t0
+                stage_timings.setdefault(sid, {})["commit_s"] = commit_s
+                self._publish(StageCommitted(
+                    run_id=run_id, stage_id=sid,
+                    tables=sorted(updates), commit_s=commit_s,
+                ))
                 next_commit[0] += 1
 
         def run_stage(stage) -> None:
+            t_exec = time.perf_counter()
+            queue_s = t_exec - queued_at.get(stage.stage_id, t_exec)
+            self._publish(StageStarted(run_id=run_id, stage_id=stage.stage_id))
+            scan_tags = {"run_id": run_id, "stage_id": stage.stage_id}
             inputs: List[Columnar] = []
             for table in sorted(stage.scans):
                 data = execute_scan(
                     self.fmt, stage.scans[table].plan,
                     pool=self.executor.io_pool,
+                    bus=self.bus, tags=dict(scan_tags, table=table),
                 )
                 inputs.append(Columnar.from_numpy(data))
             for name in stage.internal_inputs:
@@ -486,7 +657,9 @@ class Runner:
                 static_config={"fingerprint": stage.fingerprint},
                 resources=stage.resources,
             )
-            outputs, stage_checks = self.executor.run(spec, *inputs)
+            outputs, stage_checks = self.executor.run(
+                spec, *inputs, tags=scan_tags
+            )
             # store I/O (artifact writes) runs outside the state lock so
             # concurrent stages overlap their writes; only the publication
             # of results + the ordered commit drain is serialized
@@ -506,8 +679,16 @@ class Runner:
                 updates[name] = key
                 written[name] = (rel, key)
             now = time.time()
+            exec_s = time.perf_counter() - t_exec
+            self._publish(StageFinished(
+                run_id=run_id, stage_id=stage.stage_id, exec_s=exec_s,
+                outputs=sorted(outputs), checks=sorted(stage_checks),
+            ))
             with state_lock:
                 counters["stages_executed"] += 1
+                stage_timings.setdefault(stage.stage_id, {}).update(
+                    queue_s=queue_s, exec_s=exec_s
+                )
                 for name, (rel, key) in written.items():
                     env[name] = rel
                     artifacts[name] = key
@@ -564,6 +745,12 @@ class Runner:
         while ready or in_flight:
             while ready and len(in_flight) < workers and not failures:
                 sid = heapq.heappop(ready)
+                queued_at[sid] = time.perf_counter()
+                self._publish(StageQueued(
+                    run_id=run_id, stage_id=sid,
+                    nodes=list(stage_by_id[sid].node_names),
+                    parents=sorted(stage_by_id[sid].parent_stages),
+                ))
                 fut = self.executor.submit_stage(run_stage, stage_by_id[sid])
                 in_flight[fut] = sid
             if not in_flight:
@@ -602,6 +789,16 @@ class Runner:
             "checks": checks,
             "io": io_delta,
             "parallelism": workers,
+            # per-stage queue/exec/commit seconds (str keys: JSON-roundtrips
+            # through the run record for `repro run --json`)
+            "stage_timings": {
+                str(sid): {
+                    "queue_s": t.get("queue_s", 0.0),
+                    "exec_s": t.get("exec_s", 0.0),
+                    "commit_s": t.get("commit_s", 0.0),
+                }
+                for sid, t in sorted(stage_timings.items())
+            },
             "cache": {
                 "enabled": use_cache,
                 # node-granular hit accounting: every cache-satisfied
@@ -646,6 +843,7 @@ class Runner:
                 "stages": len(result["plan"].stages),
                 "stages_executed": cache["stages_executed"],
                 "parallelism": result.get("parallelism", 1),
+                "stage_timings": result.get("stage_timings", {}),
                 "io": result["io"],
                 "executor": self.executor.stats(),
                 "cache": {

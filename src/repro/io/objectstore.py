@@ -55,6 +55,17 @@ class StoreStats:
 
     def __post_init__(self) -> None:
         self._lock = threading.Lock()
+        # duck-typed MetricsRegistry (attach_metrics) — kept out of the
+        # dataclass fields so snapshot()/asdict semantics are unchanged
+        self._metrics = None
+
+    def attach_metrics(self, registry) -> None:
+        """Mirror every future bump into ``store.<counter>`` counters on a
+        :class:`repro.telemetry.metrics.MetricsRegistry` (duck-typed: any
+        object with ``counter(name).inc(n)``).  The unified metrics plane
+        absorbs this ledger without touching any bump call site."""
+        with self._lock:
+            self._metrics = registry
 
     def bump(self, **deltas: int) -> None:
         """Atomically increment counters by name — the single mutation
@@ -62,6 +73,10 @@ class StoreStats:
         with self._lock:
             for name, delta in deltas.items():
                 setattr(self, name, getattr(self, name) + delta)
+            metrics = self._metrics
+        if metrics is not None:
+            for name, delta in deltas.items():
+                metrics.counter(f"store.{name}").inc(delta)
 
     def snapshot(self) -> Dict[str, int]:
         with self._lock:

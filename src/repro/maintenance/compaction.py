@@ -59,6 +59,21 @@ class CompactionReport:
         )
 
 
+def _publish_compaction(bus, report: "CompactionReport") -> None:
+    if bus is None:
+        return
+    from repro.telemetry.events import CompactionApplied
+
+    bus.publish(CompactionApplied(
+        table=report.table,
+        branch=report.branch,
+        shards_before=report.shards_before,
+        shards_after=report.shards_after,
+        shards_merged=report.shards_merged,
+        dry_run=report.dry_run,
+    ))
+
+
 def compact_table(
     catalog: Catalog,
     fmt: TableFormat,
@@ -70,8 +85,10 @@ def compact_table(
     guard_predicates: Sequence[Predicate] = (),
     author: str = "lakekeeper",
     dry_run: bool = False,
+    bus=None,
 ) -> CompactionReport:
-    """Compact one table at a branch head into a new commit."""
+    """Compact one table at a branch head into a new commit.  ``bus`` (an
+    optional EventBus) gets one ``CompactionApplied`` per report."""
     key = catalog.table_key(table, branch=branch)
     snap = fmt.load_snapshot(key)
     target = target_rows or fmt.shard_rows
@@ -96,6 +113,7 @@ def compact_table(
             dry_run=True,
         )
         log.info("%s", report.describe())
+        _publish_compaction(bus, report)
         return report
 
     new_snap, merged = fmt.compact_snapshot(
@@ -142,6 +160,7 @@ def compact_table(
         dry_run=False,
     )
     log.info("%s", report.describe())
+    _publish_compaction(bus, report)
     return report
 
 
@@ -154,13 +173,14 @@ def compact_branch(
     min_fill: float = 0.5,
     author: str = "lakekeeper",
     dry_run: bool = False,
+    bus=None,
 ) -> List[CompactionReport]:
     """Compact every table at a branch head (the cron-job entry point)."""
     return [
         compact_table(
             catalog, fmt, table,
             branch=branch, target_rows=target_rows, min_fill=min_fill,
-            author=author, dry_run=dry_run,
+            author=author, dry_run=dry_run, bus=bus,
         )
         for table in sorted(catalog.tables(branch=branch))
     ]

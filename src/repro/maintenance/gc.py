@@ -49,6 +49,8 @@ class GCReport:
     swept_content_refs: int = 0
     #: speculation latency baselines dropped for long-unused fingerprints
     swept_latency_refs: int = 0
+    #: run-trace refs expired past the runlog retention TTL
+    swept_runlog_refs: int = 0
 
     def describe(self) -> str:
         verb = "would reclaim" if self.dry_run else "reclaimed"
@@ -56,7 +58,8 @@ class GCReport:
             f"gc: {verb} {self.swept_objects} objects "
             f"({self.bytes_reclaimed} bytes) + {self.swept_commits} commit refs "
             f"+ {self.swept_content_refs} content-hash memos "
-            f"+ {self.swept_latency_refs} latency baselines; "
+            f"+ {self.swept_latency_refs} latency baselines "
+            f"+ {self.swept_runlog_refs} run traces; "
             f"live: {self.live_commits} commits / {self.live_objects} objects; "
             f"spared {self.kept_young} in-grace objects; roots: {self.roots}"
         )
@@ -71,14 +74,36 @@ def collect_garbage(
     grace_s: float = 0.0,
     pin_ttl_s: Optional[float] = None,
     latency_ttl_s: Optional[float] = 30 * 86400.0,
+    runlog_ttl_s: Optional[float] = 14 * 86400.0,
     dry_run: bool = False,
+    bus=None,
 ) -> GCReport:
     """One full mark-and-sweep pass.  Idempotent and crash-safe: every
     delete is a no-op when re-applied, and a half-finished sweep only
-    leaves garbage for the next pass, never dangling live data."""
+    leaves garbage for the next pass, never dangling live data.
+
+    ``runlog_ttl_s`` is the run-trace retention window (``repro gc
+    --runlog-ttl``): traces older than it lose their ref here, and their
+    blobs — no longer reachability roots — fall to this same pass's
+    object sweep.  ``None`` keeps every trace.  ``bus`` (an optional
+    :class:`repro.telemetry.bus.EventBus`) gets one ``GcSweep`` event
+    summarizing the pass.
+    """
     live: LiveSet = mark(
-        store, catalog, fmt, history=history, pin_ttl_s=pin_ttl_s
+        store, catalog, fmt, history=history, pin_ttl_s=pin_ttl_s,
+        runlog_ttl_s=runlog_ttl_s,
     )
+
+    # drop expired run-trace refs BEFORE the object sweep: the mark above
+    # already excluded them from the live set, so their blobs reclaim in
+    # this very pass (ref sweep + blob sweep, one gc invocation)
+    swept_runlogs = 0
+    if runlog_ttl_s is not None:
+        from repro.telemetry.runlog import RunLogStore
+
+        swept_runlogs = RunLogStore(store).sweep_expired(
+            ttl_s=runlog_ttl_s, dry_run=dry_run
+        )
 
     # sweep expired/unreachable commit refs first so a crash between the
     # two phases can't leave a commit whose objects are already gone.
@@ -132,6 +157,17 @@ def collect_garbage(
         dry_run=dry_run,
         swept_content_refs=swept_content,
         swept_latency_refs=swept_latency,
+        swept_runlog_refs=swept_runlogs,
     )
     log.info("%s", report.describe())
+    if bus is not None:
+        from repro.telemetry.events import GcSweep
+
+        bus.publish(GcSweep(
+            swept_objects=report.swept_objects,
+            swept_commits=report.swept_commits,
+            swept_runlog_refs=report.swept_runlog_refs,
+            bytes_reclaimed=report.bytes_reclaimed,
+            dry_run=dry_run,
+        ))
     return report

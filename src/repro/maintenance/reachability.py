@@ -57,6 +57,7 @@ def mark(
     *,
     history: Optional[int] = None,
     pin_ttl_s: Optional[float] = None,
+    runlog_ttl_s: Optional[float] = None,
 ) -> LiveSet:
     """Walk every root to a closed live set.
 
@@ -64,7 +65,11 @@ def mark(
     (None = keep everything, ``1`` = heads only — Iceberg-style snapshot
     expiry).  Tagged commits are always roots regardless of depth, so a
     tag protects its data forever.  ``pin_ttl_s`` ages out pins leaked by
-    crashed runs (None = honour all pins).
+    crashed runs (None = honour all pins).  ``runlog_ttl_s`` bounds how
+    long a persisted run trace (``runlog`` namespace) keeps its blob
+    pinned — refs older than the TTL are *not* roots, so an expired
+    trace's blob falls to the same pass's object sweep (None = every
+    trace is a root).
     """
     registry = RunRegistry(store)
     cache = NodeCacheRegistry(store)
@@ -82,7 +87,13 @@ def mark(
     for entry in cache_entries.values():
         manifests.update(entry.outputs.values())
 
-    objects: Set[str] = set()
+    # run traces are roots only within their retention TTL — an expired
+    # trace's blob becomes unreachable and is reclaimed by the sweep
+    from repro.telemetry.runlog import RunLogStore
+
+    runlog_blobs = RunLogStore(store).live_blobs(ttl_s=runlog_ttl_s)
+
+    objects: Set[str] = set(runlog_blobs.values())
     snapshot_ids: Set[str] = set()
     for key in manifests:
         # tolerate a missing manifest (crashed prior sweep), like
@@ -103,6 +114,7 @@ def mark(
             "tags": len(catalog.tags()),
             "pinned_runs": len(pins),
             "cache_entries": len(cache_entries),
+            "runlogs": len(runlog_blobs),
         },
         snapshot_ids=snapshot_ids,
     )

@@ -113,10 +113,18 @@ class ServerlessExecutor:
         *,
         warm_cache: Optional[WarmFunctionCache] = None,
         fault_injector: Optional[FaultInjector] = None,
+        bus: Any = None,
+        metrics: Any = None,
     ) -> None:
         self.config = config or ExecutorConfig()
         self.warm_cache = warm_cache or WarmFunctionCache()
         self.fault_injector = fault_injector
+        #: telemetry (both optional, duck-typed to avoid an import cycle):
+        #: ``bus`` is a repro.telemetry.bus.EventBus for speculation events,
+        #: ``metrics`` a repro.telemetry.metrics.MetricsRegistry absorbing
+        #: task durations/retries next to the speculation baselines
+        self.bus = bus
+        self.metrics = metrics
         self.records: List[TaskRecord] = []
         self._pool = ThreadPoolExecutor(
             max_workers=self.config.max_workers, thread_name_prefix="container"
@@ -178,6 +186,12 @@ class ServerlessExecutor:
                     )
                     history.append(record.duration_s)
                     del history[: -self.config.latency_history_size]
+                if self.metrics is not None:
+                    self.metrics.counter("executor.tasks").inc()
+                    self.metrics.counter("executor.retries").inc(attempt)
+                    self.metrics.histogram(
+                        "executor.task_duration_s"
+                    ).observe(record.duration_s)
                 return result
             except Exception as e:  # container crash → retry
                 last_err = e
@@ -187,6 +201,11 @@ class ServerlessExecutor:
                 time.sleep(self.config.retry_backoff_s * (2**attempt))
         with self._lock:
             self.records.append(record)
+        if self.metrics is not None:
+            self.metrics.counter("executor.task_failures").inc()
+            self.metrics.counter("executor.retries").inc(
+                self.config.max_retries
+            )
         raise TaskFailure(
             f"task {spec.name!r} failed after {self.config.max_retries + 1} attempts"
         ) from last_err
@@ -251,7 +270,27 @@ class ServerlessExecutor:
             return None
         return sorted(history)[len(history) // 2]
 
-    def submit_speculative(self, spec: FunctionSpec, *args: Any) -> "Future[Any]":
+    def _publish(self, event_cls_name: str, spec: FunctionSpec,
+                 tags: Optional[Dict[str, Any]], **fields: Any) -> None:
+        """Publish one speculation event if a bus is attached.  The event
+        class is resolved lazily by name — the executor predates telemetry
+        and must stay importable without it (no import cycle)."""
+        if self.bus is None:
+            return
+        from repro.telemetry import events as ev
+
+        tags = tags or {}
+        self.bus.publish(getattr(ev, event_cls_name)(
+            run_id=tags.get("run_id"),
+            task=spec.name,
+            stage_id=tags.get("stage_id"),
+            **fields,
+        ))
+
+    def submit_speculative(
+        self, spec: FunctionSpec, *args: Any,
+        tags: Optional[Dict[str, Any]] = None,
+    ) -> "Future[Any]":
         """Future-returning ``run()``: primary submitted now, straggler
         backup armed against the per-fingerprint latency history.
 
@@ -281,6 +320,13 @@ class ServerlessExecutor:
                 if fut.exception() is None:
                     if timer[0] is not None:
                         timer[0].cancel()
+                    if len(racers) > 1 and fut is racers[1]:
+                        # the duplicate beat the straggling primary
+                        self._publish("SpeculationWon", spec, tags)
+                        if self.metrics is not None:
+                            self.metrics.counter(
+                                "executor.speculation_wins"
+                            ).inc()
                     result.set_result(fut.result())
                     return
                 if not all(r.done() for r in racers):
@@ -314,6 +360,9 @@ class ServerlessExecutor:
                 log.info("speculating single straggler task %s", spec.name)
                 with self._lock:
                     self._speculations += 1
+                self._publish("SpeculationFired", spec, tags)
+                if self.metrics is not None:
+                    self.metrics.counter("executor.speculations").inc()
                 backup = self._pool.submit(
                     self._run_with_retries, spec, args, True
                 )
@@ -325,6 +374,10 @@ class ServerlessExecutor:
         baseline = self._historical_baseline(spec)
         if baseline is not None:
             deadline = self.config.speculation_factor * max(baseline, 1e-4)
+            self._publish(
+                "SpeculationArmed", spec, tags,
+                baseline_s=baseline, deadline_s=deadline,
+            )
             t = threading.Timer(deadline, arm_backup)
             t.daemon = True
             timer[0] = t
@@ -332,10 +385,13 @@ class ServerlessExecutor:
         primary.add_done_callback(on_racer_done)
         return result
 
-    def run(self, spec: FunctionSpec, *args: Any) -> Any:
+    def run(
+        self, spec: FunctionSpec, *args: Any,
+        tags: Optional[Dict[str, Any]] = None,
+    ) -> Any:
         """Run one task synchronously, speculating against its own history
         (blocking face of ``submit_speculative``)."""
-        return self.submit_speculative(spec, *args).result()
+        return self.submit_speculative(spec, *args, tags=tags).result()
 
     # -------------------------------------------------- bulk + speculation
     def map_with_speculation(
@@ -410,6 +466,9 @@ class ServerlessExecutor:
                     log.info("speculating straggler task %s", spec.name)
                     with self._lock:
                         self._speculations += 1
+                    self._publish("SpeculationFired", spec, None)
+                    if self.metrics is not None:
+                        self.metrics.counter("executor.speculations").inc()
                     speculated[i] = self._pool.submit(
                         self._run_with_retries, spec, args, True
                     )

@@ -8,6 +8,7 @@ fused stages see an already-small in-memory table.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import Executor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -144,6 +145,8 @@ def execute_scan(
     plan: ScanPlan,
     *,
     pool: Optional[Executor] = None,
+    bus=None,
+    tags: Optional[Dict] = None,
 ) -> TableData:
     """Read surviving shards, apply the residual row-level predicate.
 
@@ -152,6 +155,11 @@ def execute_scan(
     ``concurrent.futures.Executor``) parallelizes the per-shard read +
     residual filter; shard order is preserved, so the concatenated result
     is byte-identical to the serial read.
+
+    ``bus`` (a :class:`repro.telemetry.bus.EventBus`) gets one
+    ``ScanShardRead`` per shard; ``tags`` attributes the events to a run
+    (``run_id``/``stage_id``/``table``/``source``) since the scan pool
+    itself has no run context.
     """
     out_cols = plan.output_columns
     if not plan.shards:
@@ -159,8 +167,11 @@ def execute_scan(
             c: np.empty((0,), dtype=plan.snapshot.schema.dtype_of(c))
             for c in out_cols
         }
+    tags = tags or {}
 
-    def read_one(shard: ShardMeta) -> TableData:
+    def read_one(index: int, shard: ShardMeta) -> TableData:
+        t0 = time.perf_counter()
+        ts = time.time()
         part = fmt.read_shard(shard, plan.columns)
         if plan.predicates:
             mask = np.ones(shard.num_rows, dtype=bool)
@@ -168,25 +179,40 @@ def execute_scan(
                 mask &= p.mask(part[p.column])
             if not mask.all():
                 part = {c: v[mask] for c, v in part.items()}
+        if bus is not None:
+            from repro.telemetry.events import ScanShardRead
+
+            rows_out = (
+                len(next(iter(part.values()))) if part else shard.num_rows
+            )
+            bus.publish(ScanShardRead(
+                run_id=tags.get("run_id"),
+                ts=ts,
+                table=tags.get("table", plan.snapshot.table),
+                shard_index=index,
+                rows_in=shard.num_rows,
+                rows_out=rows_out,
+                dur_s=time.perf_counter() - t0,
+                source=tags.get("source", "stage"),
+                stage_id=tags.get("stage_id"),
+            ))
         return part
 
+    indexed = list(enumerate(plan.shards))
     if pool is not None and len(plan.shards) > 1:
         # batch shards into at most ~16 work items: many tiny shards
         # would otherwise pay one pool round-trip each and lose to the
         # serial read (ThreadPoolExecutor.map ignores chunksize, so the
         # batching is done by hand; order is preserved either way)
-        step = -(-len(plan.shards) // 16)  # ceil division
-        chunks = [
-            plan.shards[i : i + step]
-            for i in range(0, len(plan.shards), step)
-        ]
+        step = -(-len(indexed) // 16)  # ceil division
+        chunks = [indexed[i : i + step] for i in range(0, len(indexed), step)]
         parts = [
             part
             for chunk_parts in pool.map(
-                lambda shards: [read_one(s) for s in shards], chunks
+                lambda chunk: [read_one(i, s) for i, s in chunk], chunks
             )
             for part in chunk_parts
         ]
     else:
-        parts = [read_one(shard) for shard in plan.shards]
+        parts = [read_one(i, shard) for i, shard in indexed]
     return {c: np.concatenate([p[c] for p in parts]) for c in out_cols}

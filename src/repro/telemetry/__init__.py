@@ -1,0 +1,77 @@
+"""repro.telemetry — event bus, run tracing, and the unified metrics plane.
+
+The observability layer the service plane publishes into (ROADMAP: run
+queue + lakekeeper daemon + event bus):
+
+* ``repro.telemetry.events``  — the typed event schema (Run/Stage/
+  NodeCache/Speculation/Scan/Gc/Compaction kinds) with per-run monotonic
+  sequence numbers;
+* ``repro.telemetry.bus``     — in-process multi-consumer bus with
+  bounded per-subscriber buffers, drop accounting, and an on-disk spool
+  for cross-process tailing (``repro events --follow``);
+* ``repro.telemetry.tracing`` — span assembly (run→stage→node→scan),
+  critical-path analysis, Chrome trace export (``repro trace``);
+* ``repro.telemetry.metrics`` — counters/gauges/histograms behind one
+  registry (absorbs ``StoreStats`` bumps + executor latencies);
+* ``repro.telemetry.runlog``  — traces persisted to the lake as
+  GC-able artifacts under the ``runlog`` namespace.
+"""
+from repro.telemetry.bus import EventBus, Subscription, follow_spool, read_spool
+from repro.telemetry.events import (
+    EVENT_TYPES,
+    CompactionApplied,
+    Event,
+    GcSweep,
+    NodeCacheHit,
+    NodeCacheMiss,
+    NodeCacheRehydrated,
+    QueryExecuted,
+    RunFinished,
+    RunStarted,
+    ScanShardRead,
+    SpeculationArmed,
+    SpeculationFired,
+    SpeculationWon,
+    StageCommitted,
+    StageFinished,
+    StageQueued,
+    StageStarted,
+    event_from_json_dict,
+)
+from repro.telemetry.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.telemetry.runlog import RUNLOG_NS, RunLogStore
+from repro.telemetry.tracing import RunTrace, Span
+
+__all__ = [
+    "EventBus",
+    "Subscription",
+    "read_spool",
+    "follow_spool",
+    "Event",
+    "EVENT_TYPES",
+    "event_from_json_dict",
+    "RunStarted",
+    "RunFinished",
+    "StageQueued",
+    "StageStarted",
+    "StageFinished",
+    "StageCommitted",
+    "NodeCacheHit",
+    "NodeCacheMiss",
+    "NodeCacheRehydrated",
+    "SpeculationArmed",
+    "SpeculationFired",
+    "SpeculationWon",
+    "ScanShardRead",
+    "QueryExecuted",
+    "GcSweep",
+    "CompactionApplied",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "RunLogStore",
+    "RUNLOG_NS",
+    "RunTrace",
+    "Span",
+]

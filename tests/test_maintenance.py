@@ -90,6 +90,7 @@ def test_mark_roots_cover_branches_tags_cache_pins(runner, catalog, fmt, seeded)
     assert live.roots == {
         "branches": 1, "tags": 1, "pinned_runs": 1,
         "cache_entries": len(StageCacheRegistry(store).entries()),
+        "runlogs": 0,  # bare Runner has no bus -> no traces recorded
     }
     # every blob the head references is in the live set
     for key in catalog.tables().values():
