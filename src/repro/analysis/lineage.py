@@ -15,6 +15,14 @@ anything executes:
 * ``L004`` a referenced table neither produced by the pipeline nor
   present in the catalog at the lint branch.
 
+The rules see JOINs: a multi-table node is checked against the same
+*combined relation* the executor builds (every column addressable as
+``qualifier.name``, plain when exactly one source owns it — see
+``engine/exec._combined_relation``), so qualified references, join-table
+columns, ambiguous plain names, and ``SELECT *`` display schemas over
+joins all lint exactly as they execute.  L004 covers join tables for
+free because ``Query.source_tables()`` feeds the node's parents.
+
 Schema inference is conservative: a Python node's output schema is
 unknown (opaque function), and any node whose inputs are unknown
 propagates unknown — the pass under-reports instead of guessing.
@@ -22,6 +30,7 @@ propagates unknown — the pass under-reports instead of guessing.
 from __future__ import annotations
 
 import re
+from collections import Counter
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -73,15 +82,58 @@ def _agg_dtype(fn: str, expr: Optional[Expr], schema: Schema) -> Optional[np.dty
     return inner  # min/max keep the input dtype
 
 
-def infer_query_schema(query: Query, input_schema: Schema) -> Optional[Schema]:
-    """Output schema of a SQL node given its input's schema (None when any
-    needed dtype cannot be inferred — downstream checks then skip)."""
+def combined_input_schema(
+    query: Query,
+    input_schemas: Dict[str, Optional[Schema]],
+) -> Tuple[Optional[Schema], Optional[List[str]]]:
+    """The schema-level mirror of ``engine/exec._combined_relation``.
+
+    Returns ``(schema, display)``: the schema the query's expressions
+    evaluate against — every column addressable as ``qualifier.name``,
+    plus the plain name when exactly one source owns it — and the
+    ``SELECT *`` display column list (plain-if-unique, qualified
+    otherwise, in source order).  Single-table queries with no alias and
+    no dotted references pass through untouched (``display`` = None);
+    Unknown propagates if any source table's schema is unknown.
+    """
+    dotted = any("." in c for c in query.referenced_columns())
+    if not query.joins and query.source_alias is None and not dotted:
+        return input_schemas.get(query.source, Unknown), None
+    sources: List[Tuple[str, Schema]] = []
+    for qual, table in query.qualifiers():
+        s = input_schemas.get(table, Unknown)
+        if s is Unknown:
+            return Unknown, None
+        sources.append((qual, s))
+    owners = Counter(n for _, s in sources for n in s.names)
+    cols: List[Column] = []
+    display: List[str] = []
+    for qual, s in sources:
+        for c in s.columns:
+            cols.append(Column(f"{qual}.{c.name}", c.dtype))
+            if owners[c.name] == 1:
+                cols.append(Column(c.name, c.dtype))
+                display.append(c.name)
+            else:
+                display.append(f"{qual}.{c.name}")
+    return Schema(tuple(cols)), display
+
+
+def infer_query_schema(
+    query: Query,
+    input_schema: Schema,
+    display: Optional[List[str]] = None,
+) -> Optional[Schema]:
+    """Output schema of a SQL node given its (combined) input schema
+    (None when any needed dtype cannot be inferred — downstream checks
+    then skip).  ``display`` is the SELECT-* column list for multi-source
+    queries, as returned by :func:`combined_input_schema`."""
     cols: List[Column] = []
     if query.is_aggregation:
-        for k in query.group_keys:
+        for k, out in zip(query.group_keys, query.group_key_output_names()):
             if not input_schema.has(k):
                 return Unknown
-            cols.append(Column(k, str(input_schema.dtype_of(k))))
+            cols.append(Column(out, str(input_schema.dtype_of(k))))
         for agg in query.aggregates:
             dt = _agg_dtype(agg.fn, agg.expr, input_schema)
             if dt is None:
@@ -101,6 +153,11 @@ def infer_query_schema(query: Query, input_schema: Schema) -> Optional[Schema]:
             if dt is None:
                 return Unknown
             cols.append(Column(alias, str(dt)))
+    elif display is not None:  # SELECT * over joins/aliases
+        try:
+            return input_schema.select(display)
+        except KeyError:
+            return Unknown
     else:  # SELECT *
         return input_schema
     try:
@@ -125,10 +182,14 @@ def _sql_fragment(query: Query, token: str) -> Tuple[Optional[str], str]:
 
 def check_sql_node(
     node: Node,
-    input_schema: Optional[Schema],
+    input_schemas: Dict[str, Optional[Schema]],
 ) -> List[Finding]:
-    """L001/L002/L003 for one SQL node against its (possibly unknown)
-    input schema."""
+    """L001/L002/L003 for one SQL node against its input schemas.
+
+    ``input_schemas`` maps every table the node reads (FROM + JOINs) to
+    its possibly-unknown schema; the checks run over the combined
+    relation schema, so qualified references (``t.col``) and join-table
+    columns are validated the same way the executor resolves them."""
     findings: List[Finding] = []
     query = node.query
     assert query is not None
@@ -147,18 +208,30 @@ def check_sql_node(
             snippet=frag or None,
         )
 
+    input_schema, display = combined_input_schema(query, input_schemas)
     if input_schema is not Unknown:
         known = set(input_schema.names)
+        qual_tables = dict(query.qualifiers())
         for c in query.referenced_columns():
-            if c not in known:
-                findings.append(
-                    finding(
-                        "L001",
-                        f"column {c!r} is not in table {query.source!r} "
-                        f"(has {sorted(known)})",
-                        c,
-                    )
+            if c in known:
+                continue
+            if "." in c:
+                qual = c.split(".")[0]
+                table = qual_tables.get(qual)
+                msg = (
+                    f"column {c!r} is not in table {table!r}"
+                    if table is not None
+                    else f"unknown table qualifier {qual!r} in {c!r} "
+                    f"(tables: {sorted(qual_tables)})"
                 )
+            else:
+                tables = sorted(set(qual_tables.values()))
+                where = (
+                    f"table {tables[0]!r}" if len(tables) == 1
+                    else f"any of tables {tables}"
+                )
+                msg = f"column {c!r} is not in {where}"
+            findings.append(finding("L001", msg, c))
         for k in query.group_keys:
             if k in known and input_schema.dtype_of(k).kind not in ("i", "u", "b"):
                 findings.append(
@@ -173,7 +246,7 @@ def check_sql_node(
 
     # ORDER BY applies to the node's OUTPUT relation
     out_schema = (
-        infer_query_schema(query, input_schema)
+        infer_query_schema(query, input_schema, display)
         if input_schema is not Unknown
         else Unknown
     )
@@ -182,7 +255,9 @@ def check_sql_node(
     )
     if out_cols:
         for col_name, _desc in query.order_by:
-            if col_name not in out_cols:
+            # a qualified sort key resolves to its unqualified tail after
+            # aggregation/projection, exactly as apply_sort does
+            if col_name not in out_cols and col_name.split(".")[-1] not in out_cols:
                 findings.append(
                     finding(
                         "L003",
@@ -240,7 +315,7 @@ def propagate_schema(
     nodes and for SQL nodes whose input is unknown)."""
     if node.kind != "sql" or node.query is None:
         return Unknown
-    src_schema = input_schemas.get(node.query.source, Unknown)
+    src_schema, display = combined_input_schema(node.query, input_schemas)
     if src_schema is Unknown:
         return Unknown
-    return infer_query_schema(node.query, src_schema)
+    return infer_query_schema(node.query, src_schema, display)

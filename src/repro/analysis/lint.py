@@ -237,9 +237,7 @@ def lint_pipeline(
     for name in order:
         node = pipeline.nodes[name]
         if node.kind == "sql" and node.query is not None:
-            findings.extend(
-                check_sql_node(node, schemas.get(node.query.source, Unknown))
-            )
+            findings.extend(check_sql_node(node, schemas))
         elif node.fn is not None:
             py_findings, py_sup = check_python_node(node, schemas)
             findings.extend(py_findings)

@@ -348,9 +348,19 @@ class Client:
         *,
         branch: Optional[str] = None,
         commit_id: Optional[str] = None,
+        engine: str = "auto",
     ) -> Dict[str, np.ndarray]:
-        """Synchronous SQL against a branch head or any commit."""
-        return self.runner.query(sql, branch=branch, commit_id=commit_id)
+        """Synchronous SQL against a branch head or any commit.
+
+        Zero registration: FROM/JOIN names resolve against the catalog at
+        query time.  ``engine`` selects the filter+agg execution path —
+        ``"auto"`` routes eligible plans through the fused Pallas kernel
+        (exactness proven from shard stats, see ``repro.engine.route``),
+        ``"kernel"`` forces it, ``"jnp"`` pins the reference path.
+        """
+        return self.runner.query(
+            sql, branch=branch, commit_id=commit_id, engine=engine
+        )
 
     # -------------------------------------------------------- observability
     def trace(self, run_id: int) -> RunTrace:

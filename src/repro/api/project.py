@@ -169,7 +169,7 @@ class Project:
             Node(
                 name=name,
                 kind="sql",
-                parents=(query.source,),
+                parents=tuple(query.source_tables()),
                 query=query,
                 materialize=materialize,
                 source_file=_source[0],

@@ -87,18 +87,45 @@ def build_logical_plan(
     order = _toposort(pipeline, produced | set(pipeline.expectations))
 
     # -- column-level validation for SQL nodes over external tables ------
+    # Multi-source aware: qualified references are checked against the
+    # schema their qualifier resolves to; plain references against the
+    # union of all source schemas — but only when every source is a
+    # catalog table (a node-produced source has no static schema here,
+    # so plain names cannot be attributed and are left to the executor).
     for node in pipeline.nodes.values():
         if node.query is None:
             continue
-        src = node.query.source
-        if src in external_schemas:
-            known = set(external_schemas[src].names)
-            for c in node.query.referenced_columns():
-                if c not in known:
+        q = node.query
+        qual_tables = dict(q.qualifiers())
+        qual_schemas = {
+            qual: external_schemas[table]
+            for qual, table in qual_tables.items()
+            if table in external_schemas
+        }
+        if not qual_schemas:
+            continue
+        all_known = len(qual_schemas) == len(qual_tables)
+        union = {n for s in qual_schemas.values() for n in s.names}
+        for c in q.referenced_columns():
+            if "." in c:
+                qual, tail = c.split(".", 1)
+                if qual in qual_schemas and not qual_schemas[qual].has(tail):
                     raise PipelineError(
                         f"node {node.name!r} references column {c!r} "
-                        f"missing from table {src!r} ({sorted(known)})"
+                        f"missing from table {qual_tables[qual]!r} "
+                        f"({sorted(qual_schemas[qual].names)})"
                     )
+                if all_known and qual not in qual_schemas:
+                    raise PipelineError(
+                        f"node {node.name!r} references {c!r} but "
+                        f"{qual!r} is not a table or alias of this query "
+                        f"({sorted(qual_tables)})"
+                    )
+            elif all_known and c not in union:
+                raise PipelineError(
+                    f"node {node.name!r} references column {c!r} "
+                    f"missing from table {q.source!r} ({sorted(union)})"
+                )
 
     # -- outputs: terminal artifacts + explicitly materialized ------------
     outputs = [

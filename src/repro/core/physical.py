@@ -38,7 +38,9 @@ from repro.core.pipeline import Node
 from repro.core.snapshot import CacheView, NodeCacheEntry
 from repro.engine.columnar import Columnar
 from repro.engine.exec import execute_query
+from repro.engine.expr import Expr
 from repro.engine.query import Query
+from repro.engine.route import RouteDecision, column_stats_for_query, plan_route
 from repro.runtime.resources import CostModel, ResourceRequest
 from repro.table.format import Snapshot
 from repro.table.scan import Predicate, ScanPlan, plan_scan
@@ -51,6 +53,13 @@ class PlannerConfig:
     pushdown: bool = True
     #: cap on fused nodes per stage (very long chains recompile slowly)
     max_stage_nodes: int = 32
+    #: SQL execution engine: "auto" routes eligible filter+group+agg
+    #: pipelines through kernels/fused_filter_agg when byte-identity with
+    #: the jnp path is provable from shard statistics (engine/route.py),
+    #: "kernel" forces it, "jnp" pins the reference path.  NOT part of
+    #: node fingerprints — both paths produce identical artifacts, so
+    #: flipping the engine must keep the differential cache warm.
+    sql_engine: str = "auto"
 
 
 @dataclass(frozen=True)
@@ -89,6 +98,9 @@ class Stage:
     #: wave scheduler walks (always lower than this stage's id; restored
     #: cache inputs are not edges, they are committed before any stage runs)
     parent_stages: Tuple[int, ...] = ()
+    #: per-SQL-node engine decisions (engine/route.py) — observability
+    #: only, deliberately excluded from every fingerprint
+    sql_routes: Dict[str, RouteDecision] = field(default_factory=dict)
 
     @property
     def input_order(self) -> Tuple[str, ...]:
@@ -166,8 +178,10 @@ def _make_stage_fn(
     input_order: Sequence[str],
     outputs: Sequence[str],
     ctx: Any,
+    routes: Optional[Dict[str, RouteDecision]] = None,
 ) -> Callable:
     """Compose stage nodes into one pure function (jit-able end to end)."""
+    routes = routes or {}
 
     def stage_fn(*inputs: Columnar):
         env: Dict[str, Columnar] = dict(zip(input_order, inputs))
@@ -175,7 +189,13 @@ def _make_stage_fn(
         for node in ordered_nodes:
             if node.kind == "sql":
                 query = rewrites.get(node.name, node.query)
-                env[node.name] = execute_query(query, env[query.source])
+                joined = {j.table: env[j.table] for j in query.joins}
+                env[node.name] = execute_query(
+                    query,
+                    env[query.source],
+                    joined=joined or None,
+                    route=routes.get(node.name),
+                )
             elif node.kind == "python":
                 out = node.fn(ctx, *[env[p] for p in node.parents])
                 env[node.name] = _ensure_columnar(out, node.name)
@@ -184,6 +204,78 @@ def _make_stage_fn(
         return {name: env[name] for name in outputs}, checks
 
     return stage_fn
+
+
+def _split_primary_pushdown(
+    query: Query, snapshots: Dict[str, Snapshot]
+) -> Tuple[List[Predicate], Optional[Expr]]:
+    """Filter conjuncts pushable into the FROM table's scan, plus residual.
+
+    Only predicates provably over the *primary* table are pushed: pushing
+    into a joined table could change which duplicate-key row wins the
+    first-match gather, and an unqualified column is attributed to the
+    primary only when no (known) join table also owns the name.  Pushed
+    predicates are re-keyed to the plain column name the shard stats use.
+    """
+    conjuncts = query.filter_expr._flatten_and()
+    primary_qual = query.source_alias or query.source
+    psnap = snapshots.get(query.source)
+    primary_cols = set(psnap.schema.names) if psnap else set()
+    join_cols: set = set()
+    unknown_join = False
+    for j in query.joins:
+        s = snapshots.get(j.table)
+        if s is None:
+            unknown_join = True  # node-sourced join: columns unknowable here
+        else:
+            join_cols.update(s.schema.names)
+
+    pushed: List[Predicate] = []
+    residual: List[Expr] = []
+    for c in conjuncts:
+        p = c._as_simple_predicate()
+        tail: Optional[str] = None
+        if p is not None:
+            if "." in p.column:
+                qual, t = p.column.split(".", 1)
+                if qual == primary_qual and t in primary_cols:
+                    tail = t
+            elif p.column in primary_cols and (
+                not query.joins or (not unknown_join and p.column not in join_cols)
+            ):
+                tail = p.column
+        if tail is not None:
+            pushed.append(Predicate(tail, p.op, p.value))
+        else:
+            residual.append(c)
+    res: Optional[Expr] = None
+    for r in residual:
+        res = r if res is None else Expr("and", (res, r))
+    return pushed, res
+
+
+def _columns_for_table(
+    query: Query, table: str, snapshot: Snapshot
+) -> Optional[List[str]]:
+    """The (plain-named) columns of ``table`` the query touches.
+
+    None means "read everything" — the SELECT * case.  Ambiguous plain
+    references load the name from every owning table; the executor's
+    combined relation then reports the ambiguity on use."""
+    if not (query.projections or query.is_aggregation):
+        return None
+    names = set(snapshot.schema.names)
+    quals = {q for q, t in query.qualifiers() if t == table}
+    out: List[str] = []
+    for r in query.referenced_columns():
+        if "." in r:
+            qual, tail = r.split(".", 1)
+            if qual in quals and tail in names:
+                out.append(tail)
+        elif r in names:
+            out.append(r)
+    # pure COUNT(*): still need one column to carry the row count
+    return list(dict.fromkeys(out)) or [snapshot.schema.names[0]]
 
 
 def _scan_bytes(plan: ScanPlan) -> int:
@@ -592,7 +684,8 @@ def build_physical_plan(
                 if p not in logical.nodes and p not in scan_tables:
                     scan_tables.append(p)
 
-        # pushdown: only when a table feeds exactly one SQL node in-stage
+        # pushdown: only when a table feeds exactly one SQL node in-stage,
+        # and (with joins) only predicates attributable to the FROM table
         rewrites: Dict[str, Query] = {}
         scans: Dict[str, ScanSpec] = {}
         for table in scan_tables:
@@ -610,17 +703,14 @@ def build_physical_plan(
             ):
                 consumer = consumers_here[0]
                 query = consumer.query
-                if query.filter_expr is not None:
-                    pushed, residual = query.filter_expr.as_pushdown_conjuncts()
+                if query.filter_expr is not None and table == query.source:
+                    pushed, residual = _split_primary_pushdown(query, snapshots)
                     if pushed:
                         predicates = pushed
                         rewrites[consumer.name] = replace(
                             query, filter_expr=residual
                         )
-                referenced = query.referenced_columns()
-                if query.projections or query.is_aggregation:
-                    # pure COUNT(*): still need one column for row counts
-                    columns = referenced or [snapshot.schema.names[0]]
+                columns = _columns_for_table(query, table, snapshot)
             plan = plan_scan(snapshot, columns=columns, predicates=predicates)
             scans[table] = ScanSpec(table, plan, _scan_bytes(plan))
 
@@ -644,8 +734,21 @@ def build_physical_plan(
             and (n in logical.outputs or n in needed_later)
         )
         checks = tuple(n.name for n in nodes if n.is_expectation)
+        # kernel routing per SQL node: decided from shard statistics at
+        # plan time, never fingerprinted (both engines produce identical
+        # artifacts, so the cache stays warm across engine flips)
+        routes: Dict[str, RouteDecision] = {}
+        for node in nodes:
+            if node.kind == "sql" and node.query is not None:
+                stats, total_rows = column_stats_for_query(node.query, snapshots)
+                routes[node.name] = plan_route(
+                    node.query,
+                    engine=config.sql_engine,
+                    stats=stats,
+                    total_rows=total_rows,
+                )
         input_order = tuple(sorted(scans)) + internal_inputs
-        fn = _make_stage_fn(nodes, rewrites, input_order, outputs, ctx)
+        fn = _make_stage_fn(nodes, rewrites, input_order, outputs, ctx, routes)
         total_bytes = sum(s.estimated_bytes for s in scans.values())
         # legacy stage fingerprint: parents are topologically earlier
         # stages, so their fingerprints are already in ``transitive``; a
@@ -681,6 +784,7 @@ def build_physical_plan(
                 fingerprint="-".join(logical.nodes[n].fingerprint for n in names),
                 transitive_fingerprint=transitive[sid],
                 parent_stages=tuple(parent_stages),
+                sql_routes=routes,
             )
         )
     executed = {n for names in stage_nodes for n in names}

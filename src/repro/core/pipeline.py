@@ -107,7 +107,7 @@ class Pipeline:
         node = Node(
             name=name,
             kind="sql",
-            parents=(query.source,),
+            parents=tuple(query.source_tables()),
             query=query,
             materialize=materialize,
             source_file=caller.f_code.co_filename if caller else None,

@@ -117,6 +117,43 @@ class RunContext:
         return f"RunContext(params={sorted(self.params.items())})"
 
 
+def _check_query_columns(query, snapshots, text: str) -> None:
+    """Zero-registration column validation for the interactive path.
+
+    Every referenced column must exist in the table(s) it can refer to:
+    ``qual.col`` against its owner's schema, plain names against the
+    union of all resolved tables.  Failures surface as
+    :class:`repro.engine.sql.SqlError` carrying the offending position,
+    mirroring what logical-plan validation does for pipelines.
+    """
+    import re as _re
+
+    from repro.engine.sql import SqlError
+
+    def pos_of(name: str) -> int:
+        m = _re.search(rf"\b{_re.escape(name)}\b", text)
+        return m.start() if m else 0
+
+    qual_tables = dict(query.qualifiers())
+    union = set()
+    for snap in snapshots.values():
+        union |= set(snap.schema.names)
+    for ref in query.referenced_columns():
+        if "." in ref:
+            qual, _, col = ref.partition(".")
+            table = qual_tables.get(qual)
+            if table is None or table not in snapshots:
+                raise SqlError(
+                    f"unknown table qualifier {qual!r}", text, pos_of(ref)
+                )
+            if not snapshots[table].schema.has(col):
+                raise SqlError(
+                    f"table {table!r} has no column {col!r}", text, pos_of(ref)
+                )
+        elif ref not in union:
+            raise SqlError(f"unknown column {ref!r}", text, pos_of(ref))
+
+
 @dataclass
 class RunResult:
     run_id: int
@@ -173,53 +210,109 @@ class Runner:
         *,
         branch: Optional[str] = None,
         commit_id: Optional[str] = None,
+        engine: str = "auto",
     ) -> Dict[str, np.ndarray]:
         """``bauplan query -q "SELECT ..." [-b branch]`` — synchronous QW.
 
-        Point-wise interactive path: scan (with pushdown) + one compiled
-        query, straight to the caller. Time travel via branch/commit.
+        Point-wise interactive path, zero registration: every table name
+        in the statement (FROM + JOINs) resolves against the catalog at
+        query time — lake tables and materialized pipeline outputs alike
+        — and unknown tables/columns come back as :class:`SqlError` with
+        the offending position.  Each table scans through the pooled
+        parallel reader in kernel-sized chunks; ``engine`` picks the
+        filter+agg execution path ("auto" | "kernel" | "jnp", see
+        engine/route.py).  Time travel via branch/commit.
         """
-        from repro.engine.exec import compile_query
-        from repro.engine.sql import parse_sql
+        import re as _re
+        from dataclasses import replace as _replace
 
+        from repro.core.physical import _columns_for_table, _split_primary_pushdown
+        from repro.engine.exec import compile_query
+        from repro.engine.route import column_stats_for_query, plan_route
+        from repro.engine.sql import SqlError, parse_sql
+        from repro.table.scan import KERNEL_CHUNK_ROWS, plan_scan
+
+        def _pos_of(name: str, text: str) -> int:
+            m = _re.search(rf"\b{_re.escape(name)}\b", text)
+            return m.start() if m else 0
+
+        t0 = time.perf_counter()
         query = parse_sql(sql)
-        key = self.catalog.table_key(
-            query.source, branch=branch, commit_id=commit_id
-        )
-        snapshot = self.fmt.load_snapshot(key)
+        text = query.raw_sql or sql
+        parse_s = time.perf_counter() - t0
+
+        # -- zero-registration name resolution + planning ----------------
+        t1 = time.perf_counter()
+        snapshots: Dict[str, Snapshot] = {}
+        for table in query.source_tables():
+            try:
+                key = self.catalog.table_key(
+                    table, branch=branch, commit_id=commit_id
+                )
+                snapshots[table] = self.fmt.load_snapshot(key)
+            except CatalogError as e:
+                raise SqlError(
+                    f"unknown table {table!r} ({e})", text, _pos_of(table, text)
+                ) from e
+        _check_query_columns(query, snapshots, text)
+
         pushed, residual = (
-            query.filter_expr.as_pushdown_conjuncts()
+            _split_primary_pushdown(query, snapshots)
             if query.filter_expr is not None
             else ([], None)
         )
-        from dataclasses import replace as _replace
-
-        from repro.table.scan import plan_scan
-
-        columns = (
-            query.referenced_columns()
-            if (query.projections or query.is_aggregation)
-            else None
+        stats, total_rows = column_stats_for_query(query, snapshots)
+        route = plan_route(
+            query, engine=engine, stats=stats, total_rows=total_rows
         )
-        if columns == []:  # pure COUNT(*): any one column carries the rows
-            columns = [snapshot.schema.names[0]]
-        scan = plan_scan(snapshot, columns=columns, predicates=pushed)
-        t0 = time.perf_counter()
-        rel = Columnar.from_numpy(
-            execute_scan(
-                self.fmt, scan, pool=self.executor.io_pool,
-                bus=self.bus, tags={"source": "query", "table": query.source},
+        scans = {
+            table: plan_scan(
+                snapshots[table],
+                columns=_columns_for_table(query, table, snapshots[table]),
+                predicates=pushed if table == query.source else (),
             )
-        )
+            for table in query.source_tables()
+        }
+        plan_s = time.perf_counter() - t1
+
+        # -- pooled parallel scans, kernel-sized chunks -------------------
+        # tables scan one after another; each scan parallelizes its own
+        # shards on the io pool (nesting table-level fan-out on the same
+        # pool could deadlock it)
+        t2 = time.perf_counter()
+        rels = {
+            table: Columnar.from_numpy(
+                execute_scan(
+                    self.fmt, scan, pool=self.executor.io_pool,
+                    bus=self.bus, tags={"source": "query", "table": table},
+                    chunk_rows=KERNEL_CHUNK_ROWS,
+                )
+            )
+            for table, scan in scans.items()
+        }
+        scan_s = time.perf_counter() - t2
+
+        # -- one compiled program (jnp or fused-kernel path) --------------
+        t3 = time.perf_counter()
         residual_query = _replace(query, filter_expr=residual)
-        out = compile_query(residual_query)(rel)
+        joined = {j.table: rels[j.table] for j in query.joins}
+        out = compile_query(residual_query, route=route)(
+            rels[query.source], joined or None
+        )
         result = out.to_numpy()
+        exec_s = time.perf_counter() - t3
+
         rows_out = len(next(iter(result.values()))) if result else 0
         self._publish(QueryExecuted(
             table=query.source,
             rows_out=rows_out,
-            shards_read=len(scan.shards),
+            shards_read=sum(len(s.shards) for s in scans.values()),
             wall_s=time.perf_counter() - t0,
+            engine_path=route.engine_path,
+            parse_s=parse_s,
+            plan_s=plan_s,
+            scan_s=scan_s,
+            exec_s=exec_s,
         ))
         return result
 

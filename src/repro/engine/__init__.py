@@ -11,9 +11,10 @@ of shrinking arrays, so every operator is shape-preserving and fusable.
 """
 from repro.engine.columnar import Columnar
 from repro.engine.expr import Expr, col, lit
-from repro.engine.query import Agg, Query
+from repro.engine.query import Agg, Join, Query
+from repro.engine.route import RouteDecision, RouteError, plan_route
 from repro.engine.exec import execute_query, compile_query
-from repro.engine.sql import parse_sql
+from repro.engine.sql import SqlError, parse_sql
 
 __all__ = [
     "Columnar",
@@ -21,8 +22,13 @@ __all__ = [
     "col",
     "lit",
     "Agg",
+    "Join",
     "Query",
+    "RouteDecision",
+    "RouteError",
+    "plan_route",
     "execute_query",
     "compile_query",
     "parse_sql",
+    "SqlError",
 ]

@@ -4,26 +4,36 @@ Every operator is shape-stable (masked-row semantics), so a full query —
 and, via core/physical.py, a *chain* of queries plus Python expectations —
 compiles to a single XLA program.  Group-by uses a sort + segment-scatter
 formulation (radix-style grouping adapted to TPU-friendly dense ops: sort,
-cumsum, scatter-add are all well-supported lax primitives).
+cumsum, scatter-add are all well-supported lax primitives).  Joins compile
+to a shape-stable first-match gather: the right side is sorted once
+(valid rows first), probe keys binary-search into it, and misses either
+invalidate the row (inner) or zero-fill the gathered columns (left) — no
+data-dependent shapes anywhere, so joined queries still jit to one
+program.
 
-The Pallas kernel in kernels/fused_filter_agg covers the
-filter+group+sum hot path and is validated against this module's
-pure-jnp results in tests, but it is NOT wired into `execute_query` —
-every query runs the jnp path below, so results stay platform-
-independent.  Routing eligible scan→filter→agg stages through the
-kernel is the ROADMAP "SQL v2" item; until then the kernel is a
-benchmarked spare part, not an active code path.
+The Pallas kernel in kernels/fused_filter_agg IS wired in: when the
+planner's eligibility pass (engine/route.py) stamps a ``RouteDecision``
+with ``engine_path == "kernel"``, the scan→filter→agg pipeline of an
+aggregation query executes as one fused kernel pass (filter evaluated
+in-kernel for native column-vs-literal predicates, as a mask feed
+otherwise) and the grouped output is re-assembled to match the jnp
+path's layout byte-for-byte.  Queries without a route — or routed
+``"jnp"`` because dtypes/statistics cannot prove kernel exactness — run
+the pure-jnp operators below, which remain the reference semantics.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional
+from collections import Counter
+from dataclasses import replace
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.engine.columnar import Columnar
 from repro.engine.query import Agg, Query
+from repro.engine.route import RouteDecision, native_filter_of
 
 def apply_filter(rel: Columnar, query: Query) -> Columnar:
     if query.filter_expr is None:
@@ -37,6 +47,142 @@ def apply_projection(rel: Columnar, query: Query) -> Columnar:
         return rel
     out = {alias: expr.evaluate(rel.columns) for alias, expr in query.projections}
     return Columnar(out, rel.valid)
+
+
+# --------------------------------------------------------------------- joins
+def _combined_relation(
+    query: Query, rel: Columnar, joined: Optional[Dict[str, Columnar]]
+) -> Tuple[Columnar, Optional[List[str]]]:
+    """Gather all join sources onto the FROM relation.
+
+    The combined relation carries every column twice-addressable: under its
+    qualified name (``qualifier.col``) always, and under its plain name
+    when exactly one source owns that name — so expressions written either
+    way evaluate against the same dict with no rewriting.  Returns the
+    combined relation plus the *display* column list (plain-if-unique,
+    qualified otherwise, in source order) used to resolve ``SELECT *``.
+
+    Single-table queries with no alias and no dotted references pass
+    through untouched (display ``None``) — the common path pays nothing.
+    """
+    dotted = any("." in c for c in query.referenced_columns())
+    if not query.joins and query.source_alias is None and not dotted:
+        return rel, None
+
+    sources: List[Tuple[str, Columnar]] = [(query.source_alias or query.source, rel)]
+    for j in query.joins:
+        if not joined or j.table not in joined:
+            raise KeyError(
+                f"join table {j.table!r} was not provided to execute_query; "
+                f"have {sorted(joined or {})}"
+            )
+        sources.append((j.qualifier, joined[j.table]))
+
+    owners: Counter = Counter()
+    for _, srel in sources:
+        owners.update(srel.columns.keys())
+
+    q0, rel0 = sources[0]
+    combined: Dict[str, jax.Array] = {}
+    display: List[str] = []
+    for n, a in rel0.columns.items():
+        combined[f"{q0}.{n}"] = a
+        if owners[n] == 1:
+            combined[n] = a
+        display.append(n if owners[n] == 1 else f"{q0}.{n}")
+    valid = rel0.valid
+
+    for j, (jq, jrel) in zip(query.joins, sources[1:]):
+        gathered, found = _first_match_gather(
+            j, jq, combined, valid, jrel, sql=query.raw_sql
+        )
+        for n, g in gathered.items():
+            combined[f"{jq}.{n}"] = g
+            if owners[n] == 1:
+                combined[n] = g
+            display.append(n if owners[n] == 1 else f"{jq}.{n}")
+        if j.how == "inner":
+            valid = found
+        # left join: validity unchanged, misses were zero-filled
+
+    return Columnar(combined, valid), display
+
+
+def _first_match_gather(join, jq, combined, valid, jrel, *, sql=None):
+    """Probe the accumulated left side into one joined relation.
+
+    Right side is sorted by key with invalid rows pushed to the tail
+    (double stable argsort), probe keys ``searchsorted`` into it, and
+    duplicate right keys resolve deterministically to the first matching
+    row in storage order.  Returns (gathered right columns, found mask);
+    misses are zero-filled so even non-compact outputs are deterministic.
+    """
+    def _orient(lref, rref):
+        rtail = rref.split(".")[-1]
+        rq = rref.split(".")[0] if "." in rref else None
+        if rq is not None and rq != jq:
+            return None
+        if lref in combined and rtail in jrel.columns:
+            return combined[lref], jrel.columns[rtail]
+        return None
+
+    pair = _orient(join.left_on, join.right_on) or _orient(join.right_on, join.left_on)
+    if pair is None:
+        raise KeyError(
+            f"cannot resolve JOIN {join.table} ON {join.left_on} = "
+            f"{join.right_on}: left side has {sorted(combined)}, "
+            f"{join.qualifier!r} has {sorted(jrel.columns)}"
+        )
+    left_keys, right_keys = pair
+    for side, arr in (("left", left_keys), ("right", right_keys)):
+        if arr.dtype.kind not in ("i", "u", "b"):
+            raise TypeError(
+                f"join key on the {side} side of {join.left_on} = "
+                f"{join.right_on} must be integer/bool, got {arr.dtype}"
+            )
+
+    cap_r = jrel.capacity
+    if cap_r == 0:  # statically-empty right side: nothing ever matches
+        found = jnp.zeros(valid.shape, bool)
+        gathered = {
+            n: jnp.zeros(valid.shape, a.dtype) for n, a in jrel.columns.items()
+        }
+        return gathered, found
+
+    rk32 = right_keys.astype(jnp.int32)
+    perm = jnp.argsort(rk32, stable=True)
+    perm = perm[jnp.argsort((~jrel.valid[perm]).astype(jnp.int32), stable=True)]
+    sorted_valid = jrel.valid[perm]
+    # invalid tail carries the max sentinel; a *valid* key equal to the
+    # sentinel still wins because searchsorted("left") lands on it first
+    sorted_keys = jnp.where(sorted_valid, rk32[perm], jnp.iinfo(jnp.int32).max)
+
+    lk32 = left_keys.astype(jnp.int32)
+    idx = jnp.minimum(jnp.searchsorted(sorted_keys, lk32, side="left"), cap_r - 1)
+    found = (sorted_keys[idx] == lk32) & sorted_valid[idx] & valid
+    src = perm[idx]
+    gathered = {
+        n: jnp.where(found, a[src], jnp.zeros((), a.dtype))
+        for n, a in jrel.columns.items()
+    }
+    return gathered, found
+
+
+def _normalize_group_keys(rel: Columnar, query: Query) -> Tuple[Columnar, Query]:
+    """Materialize qualified group keys under their output names.
+
+    ``GROUP BY t.loc`` groups out as column ``loc`` (see
+    Query.group_key_output_names); the plain single-table path is
+    untouched."""
+    out_names = query.group_key_output_names()
+    if list(query.group_keys) == out_names:
+        return rel, query
+    new_cols = {
+        out: rel.column(k)
+        for k, out in zip(query.group_keys, out_names)
+        if out != k
+    }
+    return rel.with_columns(new_cols), replace(query, group_keys=tuple(out_names))
 
 
 def _lex_sort_perm(rel: Columnar, keys) -> jax.Array:
@@ -130,6 +276,87 @@ def _extreme(dtype, sign: int):
     return jnp.array(info.max if sign > 0 else info.min, dtype)
 
 
+# --------------------------------------------------------------- kernel path
+def _kernel_filter_agg(rel: Columnar, query: Query, route: RouteDecision) -> Columnar:
+    """Filter + group + aggregate through kernels/fused_filter_agg.
+
+    One kernel pass per distinct value column (counts ride along free);
+    the grouped output is re-assembled into the jnp path's layout —
+    present groups first in ascending key order, absent slots zeroed —
+    so compacted results are byte-identical to apply_groupby's whenever
+    the route's exactness guards hold (integer sums below 2**24).
+    """
+    from repro.kernels.fused_filter_agg import fused_filter_agg
+
+    key_name = query.group_keys[0]
+    out_key = query.group_key_output_names()[0]
+    key_col = rel.column(key_name)
+    # validity folds into the key stream: invalid rows carry key -1,
+    # which matches no group lane inside the kernel
+    keys_slot = jnp.where(
+        rel.valid, key_col.astype(jnp.int32) - route.key_offset, jnp.int32(-1)
+    )
+    G = route.num_groups
+
+    native = native_filter_of(query.filter_expr) if route.native_filter else None
+    if native is not None:
+        fcol, op, thr = native
+        filt = rel.column(fcol).astype(jnp.float32)
+    elif query.filter_expr is not None:
+        # non-native predicate: evaluate to a mask and feed it as the
+        # filter column — still one fused XLA program end to end
+        filt = query.filter_expr.evaluate(rel.columns).astype(jnp.float32)
+        op, thr = "ge", 0.5
+    else:
+        filt, op, thr = jnp.ones((rel.capacity,), jnp.float32), "ge", 0.0
+
+    value_cols: Dict[str, jax.Array] = {}
+    for agg in query.aggregates:
+        if agg.fn != "count":
+            value_cols.setdefault(agg.expr.args[0], rel.column(agg.expr.args[0]))
+
+    sums_by_col: Dict[str, jax.Array] = {}
+    counts_f = None
+    if not value_cols:  # COUNT(*)-only (or bare GROUP BY): one zero-value pass
+        _, counts_f = fused_filter_agg(
+            keys_slot, jnp.zeros((rel.capacity,), jnp.float32), filt,
+            op=op, threshold=thr, num_groups=G, interpret=route.interpret,
+        )
+    for cname, vals in value_cols.items():
+        sums_f, counts_f = fused_filter_agg(
+            keys_slot, vals, filt,
+            op=op, threshold=thr, num_groups=G, interpret=route.interpret,
+        )
+        sums_by_col[cname] = sums_f
+
+    counts_i = counts_f.astype(jnp.int32)
+    present = counts_i > 0
+    # jnp layout: present groups first, ascending key (slot index ==
+    # key - offset, so ascending slot == ascending key)
+    order = jnp.argsort((~present).astype(jnp.int32), stable=True)
+    present_s = present[order]
+    keys_out = (jnp.arange(G, dtype=jnp.int32) + route.key_offset)[order]
+    out_cols: Dict[str, jax.Array] = {
+        out_key: jnp.where(
+            present_s, keys_out.astype(key_col.dtype), jnp.zeros((), key_col.dtype)
+        )
+    }
+    counts_s = jnp.where(present_s, counts_i[order], 0)
+    for agg in query.aggregates:
+        if agg.fn == "count":
+            out_cols[agg.name] = counts_s
+            continue
+        sums_s = jnp.where(present_s, sums_by_col[agg.expr.args[0]][order], 0.0)
+        if agg.fn == "sum":
+            vdtype = rel.column(agg.expr.args[0]).dtype
+            out_cols[agg.name] = sums_s.astype(
+                vdtype if vdtype.kind == "f" else jnp.int32
+            )
+        else:  # mean
+            out_cols[agg.name] = sums_s / jnp.maximum(counts_s, 1).astype(jnp.float32)
+    return Columnar(out_cols, present_s)
+
+
 def apply_sort(rel: Columnar, query: Query) -> Columnar:
     if not query.order_by:
         return rel
@@ -137,6 +364,12 @@ def apply_sort(rel: Columnar, query: Query) -> Columnar:
     # then one final stable pass pushing invalid rows to the end
     perm = jnp.arange(rel.capacity)
     for column, desc in reversed(query.order_by):
+        # after aggregation a qualified group key surfaces under its
+        # unqualified tail (group_key_output_names) — resolve the same way
+        if column not in rel.columns and "." in column:
+            tail = column.split(".")[-1]
+            if tail in rel.columns:
+                column = tail
         vals = rel.column(column)[perm]
         if vals.dtype.kind == "b":
             vals = vals.astype(jnp.int32)
@@ -155,33 +388,67 @@ def apply_limit(rel: Columnar, query: Query) -> Columnar:
 
 
 def execute_query(
-    query: Query, rel: Columnar, *, group_capacity: Optional[int] = None
+    query: Query,
+    rel: Columnar,
+    *,
+    group_capacity: Optional[int] = None,
+    joined: Optional[Dict[str, Columnar]] = None,
+    route: Optional[RouteDecision] = None,
 ) -> Columnar:
-    """Interpret a Query over a Columnar. Pure function of its inputs."""
-    rel = apply_filter(rel, query)
-    if query.is_aggregation:
-        rel = apply_groupby(rel, query, capacity=group_capacity)
+    """Interpret a Query over a Columnar. Pure function of its inputs.
+
+    ``joined`` maps each JOIN table name to its relation; ``route`` is an
+    optional engine/route.py decision — ``"kernel"`` sends the
+    filter+group+agg pipeline through the fused Pallas kernel, anything
+    else (including no route at all) runs the reference jnp operators.
+    """
+    rel, display = _combined_relation(query, rel, joined)
+    if route is not None and route.engine_path == "kernel" and query.is_aggregation:
+        rel = _kernel_filter_agg(rel, query, route)
         if query.projections:
             rel = apply_projection(rel, query)
     else:
-        rel = apply_projection(rel, query)
+        rel = apply_filter(rel, query)
+        if query.is_aggregation:
+            grel, gquery = _normalize_group_keys(rel, query)
+            rel = apply_groupby(grel, gquery, capacity=group_capacity)
+            if query.projections:
+                rel = apply_projection(rel, query)
+        else:
+            if query.projections:
+                rel = apply_projection(rel, query)
+            elif display is not None:
+                rel = rel.select(display)  # SELECT * over joined sources
     rel = apply_sort(rel, query)
     rel = apply_limit(rel, query)
     return rel
 
 
 @functools.lru_cache(maxsize=512)
-def _compiled_for(query: Query, group_capacity: Optional[int]) -> Callable:
+def _compiled_for(
+    query: Query, group_capacity: Optional[int], route: Optional[RouteDecision]
+) -> Callable:
     @jax.jit
-    def run(rel: Columnar) -> Columnar:
-        return execute_query(query, rel, group_capacity=group_capacity)
+    def run(rel: Columnar, joined: Dict[str, Columnar]) -> Columnar:
+        return execute_query(
+            query, rel, group_capacity=group_capacity, joined=joined, route=route
+        )
 
-    return run
+    def call(rel: Columnar, joined: Optional[Dict[str, Columnar]] = None) -> Columnar:
+        return run(rel, joined or {})
+
+    return call
 
 
 def compile_query(
-    query: Query, *, group_capacity: Optional[int] = None
-) -> Callable[[Columnar], Columnar]:
+    query: Query,
+    *,
+    group_capacity: Optional[int] = None,
+    route: Optional[RouteDecision] = None,
+) -> Callable[..., Columnar]:
     """Return the jit-compiled executable for a query (cached — this cache
-    is the engine-level face of the runtime's warm-container cache)."""
-    return _compiled_for(query, group_capacity)
+    is the engine-level face of the runtime's warm-container cache).
+
+    The executable takes ``(rel, joined=None)``; single-table callers keep
+    the old one-argument form."""
+    return _compiled_for(query, group_capacity, route)

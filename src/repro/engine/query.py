@@ -13,6 +13,43 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.engine.expr import Expr, col
 
 _AGG_FNS = {"sum", "count", "mean", "min", "max"}
+_JOIN_KINDS = {"inner", "left"}
+
+
+@dataclass(frozen=True)
+class Join:
+    """One ``JOIN table [alias] ON left_on = right_on`` clause.
+
+    ``left_on`` refers to a column of the accumulated left side (the FROM
+    table plus earlier joins); ``right_on`` to a column of ``table``.
+    Either side may be qualified (``t.col``).  The engine compiles joins
+    as a shape-stable first-match gather — the right side is expected to
+    be key-unique (dimension-table shape); duplicate right keys resolve
+    deterministically to the first matching row in storage order.
+    """
+
+    table: str
+    left_on: str
+    right_on: str
+    how: str = "inner"
+    alias: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.how not in _JOIN_KINDS:
+            raise ValueError(f"unsupported join kind {self.how!r}")
+
+    @property
+    def qualifier(self) -> str:
+        return self.alias or self.table
+
+    def to_json_dict(self) -> Dict:
+        return {
+            "table": self.table,
+            "left_on": self.left_on,
+            "right_on": self.right_on,
+            "how": self.how,
+            "alias": self.alias,
+        }
 
 
 @dataclass(frozen=True)
@@ -43,6 +80,10 @@ class Query:
     source: str  # logical table name (a catalog table or a parent node)
     projections: Tuple[Tuple[str, Expr], ...] = ()  # (alias, expr); () = *
     filter_expr: Optional[Expr] = None
+    #: additional sources gathered onto the FROM table, in clause order
+    joins: Tuple[Join, ...] = ()
+    #: SQL alias of the FROM table (qualifies its columns in references)
+    source_alias: Optional[str] = None
     group_keys: Tuple[str, ...] = ()
     aggregates: Tuple[Agg, ...] = ()
     order_by: Tuple[Tuple[str, bool], ...] = ()  # (column, descending)
@@ -60,6 +101,18 @@ class Query:
     def where(self, expr: Expr) -> "Query":
         combined = expr if self.filter_expr is None else Expr("and", (self.filter_expr, expr))
         return replace(self, filter_expr=combined)
+
+    def join(
+        self,
+        table: str,
+        *,
+        left_on: str,
+        right_on: str,
+        how: str = "inner",
+        alias: Optional[str] = None,
+    ) -> "Query":
+        j = Join(table=table, left_on=left_on, right_on=right_on, how=how, alias=alias)
+        return replace(self, joins=self.joins + (j,))
 
     def group_by(self, *keys: str) -> "Query":
         return replace(self, group_keys=self.group_keys + keys)
@@ -81,6 +134,18 @@ class Query:
     def is_aggregation(self) -> bool:
         return bool(self.aggregates) or bool(self.group_keys)
 
+    def source_tables(self) -> List[str]:
+        """Every logical table this query reads, FROM table first,
+        deduplicated in clause order (a self-join appears once)."""
+        return list(dict.fromkeys([self.source] + [j.table for j in self.joins]))
+
+    def qualifiers(self) -> List[Tuple[str, str]]:
+        """``(qualifier, table)`` per source in clause order; the qualifier
+        is the SQL alias when one was given, else the table name."""
+        out = [(self.source_alias or self.source, self.source)]
+        out.extend((j.qualifier, j.table) for j in self.joins)
+        return out
+
     def referenced_columns(self) -> List[str]:
         cols: List[str] = []
         for _, e in self.projections:
@@ -91,17 +156,32 @@ class Query:
         for a in self.aggregates:
             if a.expr is not None:
                 cols.extend(a.expr.referenced_columns())
+        for j in self.joins:
+            cols.extend([j.left_on, j.right_on])
         return list(dict.fromkeys(cols))
+
+    def group_key_output_names(self) -> List[str]:
+        """Output column name per group key: the unqualified tail
+        (``t.loc`` groups out as ``loc``), falling back to the full
+        qualified name when two keys' tails collide."""
+        names: List[str] = []
+        seen: set = set()
+        for k in self.group_keys:
+            tail = k.split(".")[-1]
+            out = tail if tail not in seen else k
+            names.append(out)
+            seen.add(out)
+        return names
 
     def output_columns(self) -> List[str]:
         if self.is_aggregation:
-            return list(self.group_keys) + [a.name for a in self.aggregates]
+            return self.group_key_output_names() + [a.name for a in self.aggregates]
         if self.projections:
             return [alias for alias, _ in self.projections]
         return []  # "*": depends on input schema
 
     def to_json_dict(self) -> Dict:
-        return {
+        d = {
             "source": self.source,
             "projections": [(a, e.to_json_dict()) for a, e in self.projections],
             "filter": self.filter_expr.to_json_dict() if self.filter_expr else None,
@@ -110,3 +190,11 @@ class Query:
             "order_by": [list(o) for o in self.order_by],
             "limit": self.limit,
         }
+        # joins/alias keys appear only when used so pre-existing node
+        # fingerprints (hashes of this dict) are unchanged for the whole
+        # single-table query population — cache entries stay warm
+        if self.joins:
+            d["joins"] = [j.to_json_dict() for j in self.joins]
+        if self.source_alias is not None:
+            d["source_alias"] = self.source_alias
+        return d

@@ -1,0 +1,224 @@
+"""Kernel-routing eligibility: which engine executes a query's hot path.
+
+The planner calls :func:`plan_route` per SQL node and stamps the
+resulting :class:`RouteDecision` onto the compiled stage.  The decision
+is **not** part of node fingerprints — both engines produce byte-identical
+artifacts (that is what the eligibility guards prove), so the cache must
+stay warm regardless of which path ran.
+
+Routing rules (``engine="auto"``):
+
+* the query is a single-key GROUP BY aggregation whose aggregates are all
+  ``count`` / ``sum`` / ``mean`` over plain columns — the shape
+  ``kernels/fused_filter_agg`` fuses;
+* the group key is integer/bool with *known* min/max statistics (shard
+  stats folded over the snapshot) spanning at most ``max_groups``
+  distinct values — the kernel's dense one-hot group axis must fit VMEM;
+* exactness is provable: the kernel accumulates in f32 (einsum on the
+  MXU), so every aggregated column must be integer/bool with
+  ``max(|min|, |max|) * rows < 2**24`` and the row count itself below
+  ``2**24`` — then f32 sums/counts are exact integers and casting back
+  reproduces the jnp path's int32 scatter-adds bit-for-bit.  Float
+  columns always take the jnp path under ``auto``: float addition is
+  non-associative and the two paths order it differently.
+
+``engine="kernel"`` forces the kernel for structurally-eligible queries
+(skipping the exactness guards — float results may then differ in the
+last ulp) and raises when the query shape or missing key statistics make
+the kernel impossible.  ``engine="jnp"`` always takes the reference path.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.engine.expr import Expr
+from repro.engine.query import Query
+
+#: aggregate fns expressible as the kernel's (sums, counts) outputs
+FUSED_AGGS = frozenset({"count", "sum", "mean"})
+
+#: largest integer magnitude f32 represents exactly (2**24); sums and
+#: counts must stay below this for kernel/jnp byte-identity
+EXACT_BOUND = 2 ** 24
+
+#: default cap on the kernel's dense group axis (one-hot VMEM bound)
+DEFAULT_MAX_GROUPS = 1024
+
+_PRED_TO_KERNEL_OP = {"<": "lt", "<=": "le", ">": "gt", ">=": "ge", "==": "eq", "!=": "ne"}
+
+
+class RouteError(ValueError):
+    """``engine="kernel"`` was forced but the kernel cannot run the query."""
+
+
+@dataclass(frozen=True)
+class RouteDecision:
+    """Which engine runs a query's filter+group+agg pipeline, and why.
+
+    Frozen/hashable so it can key the compiled-query cache alongside the
+    Query itself.  ``num_groups``/``key_offset`` size the kernel's dense
+    group axis (slot = key - offset); ``native_filter`` means the WHERE
+    clause is a single ``col <cmp> literal`` the kernel evaluates
+    in-register instead of taking a precomputed mask."""
+
+    engine_path: str  # "kernel" | "jnp"
+    reason: str
+    num_groups: int = 0
+    key_offset: int = 0
+    native_filter: bool = False
+    interpret: bool = True
+
+
+def _jnp(reason: str) -> RouteDecision:
+    return RouteDecision("jnp", reason)
+
+
+def native_filter_of(expr: Optional[Expr]) -> Optional[Tuple[str, str, float]]:
+    """``(column, kernel_op, threshold)`` when the whole filter is one
+    ``col <cmp> literal`` conjunct, else None."""
+    if expr is None:
+        return None
+    p = expr._as_simple_predicate()
+    if p is None:
+        return None
+    return p.column, _PRED_TO_KERNEL_OP[p.op], float(p.value)
+
+
+def column_stats_for_query(
+    query: Query, snapshots: Dict[str, object]
+) -> Tuple[Dict[str, Tuple[int, int]], Optional[int]]:
+    """Fold shard statistics into per-reference (min, max) int bounds.
+
+    ``snapshots`` maps table name -> Snapshot for every lake table the
+    query reads (node-sourced inputs simply have no entry — their columns
+    get no stats and ``auto`` routing falls back to jnp).  Bounds are
+    recorded under both the qualified reference (``qual.col``) and, when
+    exactly one source owns the plain name, the plain name — mirroring
+    how the executor builds the combined relation.  Only integer/bool
+    columns with finite stats are recorded, so a missing entry doubles as
+    "not a kernel-safe dtype".  Returns ``(stats, primary_row_count)``;
+    the row count is None when the FROM table has no snapshot.
+    """
+    quals = query.qualifiers()
+    owners: Counter = Counter()
+    for _, table in quals:
+        snap = snapshots.get(table)
+        if snap is not None:
+            owners.update(snap.schema.names)
+
+    stats: Dict[str, Tuple[int, int]] = {}
+    for qual, table in quals:
+        snap = snapshots.get(table)
+        if snap is None:
+            continue
+        for col in snap.schema.columns:
+            if np.dtype(col.dtype).kind not in ("i", "u", "b"):
+                continue
+            los = [s.column_stats[col.name]["min"] for s in snap.shards
+                   if col.name in s.column_stats]
+            his = [s.column_stats[col.name]["max"] for s in snap.shards
+                   if col.name in s.column_stats]
+            if not los or any(not np.isfinite(v) for v in los + his):
+                continue
+            bound = (int(min(los)), int(max(his)))
+            stats[f"{qual}.{col.name}"] = bound
+            if owners[col.name] == 1:
+                stats[col.name] = bound
+    primary = snapshots.get(query.source)
+    return stats, (primary.num_rows if primary is not None else None)
+
+
+def plan_route(
+    query: Query,
+    *,
+    engine: str = "auto",
+    stats: Optional[Dict[str, Tuple[int, int]]] = None,
+    total_rows: Optional[int] = None,
+    max_groups: int = DEFAULT_MAX_GROUPS,
+    interpret: bool = True,
+) -> RouteDecision:
+    """Decide the engine for one query (see module docstring for rules)."""
+    if engine not in ("auto", "kernel", "jnp"):
+        raise ValueError(f"unknown engine {engine!r}; use auto|kernel|jnp")
+    if engine == "jnp":
+        return _jnp("engine=jnp requested")
+    forced = engine == "kernel"
+    stats = stats or {}
+
+    def bail(reason: str) -> RouteDecision:
+        if forced:
+            raise RouteError(f"engine='kernel' forced but {reason}")
+        return _jnp(reason)
+
+    # ---------------------------------------------------------- structure
+    if not query.is_aggregation:
+        return bail("not an aggregation")
+    if len(query.group_keys) != 1:
+        return bail(f"kernel supports exactly one group key, got {len(query.group_keys)}")
+    for a in query.aggregates:
+        if a.fn not in FUSED_AGGS:
+            return bail(f"aggregate {a.fn!r} is not kernel-fusable")
+        if a.fn != "count" and (a.expr is None or a.expr.op != "col"):
+            return bail(f"aggregate {a.name!r} is over a computed expression")
+
+    # ------------------------------------------------------- key geometry
+    key = query.group_keys[0]
+    if key not in stats:
+        return bail(f"no integer statistics for group key {key!r}")
+    kmin, kmax = stats[key]
+    # a left join zero-fills unmatched right-side rows, so a group key
+    # that may come from a left-joined table must admit slot value 0
+    # (an unqualified key's owner is unknown here — extend conservatively)
+    left_quals = {j.qualifier for j in query.joins if j.how == "left"}
+    if left_quals:
+        owner = key.split(".")[0] if "." in key else None
+        if owner is None or owner in left_quals:
+            kmin, kmax = min(kmin, 0), max(kmax, 0)
+    num_groups = kmax - kmin + 1
+    if num_groups > max_groups:
+        return bail(
+            f"group key range {num_groups} exceeds max_groups={max_groups}"
+        )
+
+    # ------------------------------------------------- exactness (auto)
+    if not forced:
+        if total_rows is None:
+            return bail("row count unknown; f32 count exactness not provable")
+        if total_rows >= EXACT_BOUND:
+            return bail(f"{total_rows} rows overflow exact f32 counts")
+        for a in query.aggregates:
+            if a.fn == "count":
+                continue
+            vcol = a.expr.args[0]
+            if vcol not in stats:
+                return bail(f"no integer statistics for aggregated column {vcol!r}")
+            vmin, vmax = stats[vcol]
+            if max(abs(vmin), abs(vmax)) * max(total_rows, 1) >= EXACT_BOUND:
+                return bail(
+                    f"sum bound for {vcol!r} overflows exact f32 accumulation"
+                )
+
+    # -------------------------------------------------------- the filter
+    native = False
+    nf = native_filter_of(query.filter_expr)
+    if nf is not None:
+        fcol, _, _ = nf
+        b = stats.get(fcol)
+        # the kernel compares the filter column in f32; only use the
+        # native path when the column provably fits f32 exactly
+        native = b is not None and max(abs(b[0]), abs(b[1])) < EXACT_BOUND
+
+    return RouteDecision(
+        engine_path="kernel",
+        reason="forced by engine='kernel'" if forced else (
+            f"single-key agg, {num_groups} groups, exact f32 bounds hold"
+        ),
+        num_groups=num_groups,
+        key_offset=kmin,
+        native_filter=native,
+        interpret=interpret,
+    )

@@ -1,21 +1,37 @@
-"""A minimal SQL front-end — enough to run the paper's Appendix verbatim.
+"""The SQL front-end — multi-table SELECT with a predictable v2 grammar.
 
 Supported grammar (case-insensitive keywords)::
 
     SELECT item [, item ...]
-    FROM table
-    [WHERE conjunct [AND conjunct ...]]
-    [GROUP BY col [, col ...]]
+    FROM table [[AS] alias]
+    [[INNER|LEFT [OUTER]] JOIN table [[AS] alias] ON colref = colref] ...
+    [WHERE condition]
+    [GROUP BY colref [, colref ...]]
     [ORDER BY col [ASC|DESC] [, ...]]
     [LIMIT n]
 
-    item     := expr [AS alias] | COUNT(*) [AS alias] | fn(expr) [AS alias]
-    conjunct := expr cmp expr
-    expr     := col | number | string-date | expr (+|-|*|/) expr | (expr)
+    item      := expr [AS alias] | COUNT(*) [AS alias] | fn(expr) [AS alias]
+    condition := boolean expression over AND / OR / NOT, comparisons,
+                 expr [NOT] IN (lit, ...), expr [NOT] BETWEEN lo AND hi
+    expr      := colref | number | string-date
+               | expr (+|-|*|/) expr | (condition)
+    colref    := col | qualifier.col   (qualifier = table name or alias)
+
+Precedence, loosest to tightest: OR < AND < NOT < comparison/IN/BETWEEN
+< +,- < *,/ < atom.  ``IN`` lowers to an OR of equalities and ``BETWEEN``
+to ``>= AND <=``, so both reuse the engine's existing operators (and
+BETWEEN's conjuncts push down to the scan layer for free).
 
 String literals that look like ISO dates ('2019-04-01') are converted to
 integer days-since-epoch, matching how the synthetic taxi dataset stores
 ``pickup_at`` — a pragmatic "spare part" standing in for full date types.
+
+Exactly one statement is parsed: an optional trailing ``;`` is consumed,
+and anything after it — or any token left over after the clauses above —
+is a :class:`SqlError` with the offending position, never a silent
+truncation.  Reserved words used as aliases are likewise reported with a
+position (aggregate names stay legal as aliases: the paper's own SQL
+writes ``AS count``).
 """
 from __future__ import annotations
 
@@ -24,7 +40,7 @@ import re
 from typing import List, Optional, Tuple
 
 from repro.engine.expr import Expr, col, lit
-from repro.engine.query import Agg, Query
+from repro.engine.query import Agg, Join, Query
 
 _TOKEN_RE = re.compile(
     r"""
@@ -33,16 +49,19 @@ _TOKEN_RE = re.compile(
       | [A-Za-z_][\w.]*    # identifier / keyword
       | \d+\.\d+ | \d+     # numbers
       | >= | <= | != | <> | = | > | <
-      | [(),*+\-/]
+      | [(),*+\-/;]
     )
     """,
     re.VERBOSE,
 )
 
 _KEYWORDS = {"select", "from", "where", "group", "by", "order", "limit",
-             "and", "as", "asc", "desc", "count", "sum", "min", "max", "avg"}
+             "and", "or", "not", "in", "between", "as", "asc", "desc",
+             "join", "inner", "left", "outer", "on",
+             "count", "sum", "min", "max", "avg"}
 _AGG_KEYWORDS = {"count", "sum", "min", "max", "avg"}
 _CMP = {">=": "ge", "<=": "le", "!=": "ne", "<>": "ne", "=": "eq", ">": "gt", "<": "lt"}
+_IDENT_RE = re.compile(r"[A-Za-z_][\w.]*")
 
 
 class SqlError(SyntaxError):
@@ -100,6 +119,9 @@ class _Parser:
         t = self.peek()
         return t.lower() if t and t.lower() in _KEYWORDS else None
 
+    def peek2(self) -> Optional[str]:
+        return self.toks[self.i + 1] if self.i + 1 < len(self.toks) else None
+
     def next(self) -> str:
         t = self.peek()
         if t is None:
@@ -125,6 +147,83 @@ class _Parser:
         pos = self.positions[self.i - 1] if self.i > 0 else 0
         return SqlError(message, self.sql, pos)
 
+    # -------------------------------------------------------- identifiers
+    def identifier(self, what: str) -> str:
+        """A plain identifier; reserved words are rejected with position."""
+        t = self.peek()
+        if t is None or not _IDENT_RE.fullmatch(t):
+            raise self.error(f"expected {what}, got {t!r}")
+        if t.lower() in _KEYWORDS and t.lower() not in _AGG_KEYWORDS:
+            raise self.error(
+                f"reserved word {t!r} cannot be used as {what}"
+            )
+        return self.next()
+
+    def _maybe_table_alias(self) -> Optional[str]:
+        if self.accept_kw("as"):
+            return self.identifier("a table alias")
+        t = self.peek()
+        # bare alias: FROM trips t — any non-keyword identifier
+        if t is not None and _IDENT_RE.fullmatch(t) and t.lower() not in _KEYWORDS:
+            return self.next()
+        return None
+
+    # ---------------------------------------------------- boolean grammar
+    def parse_condition(self) -> Expr:
+        node = self.parse_and()
+        while self.accept_kw("or"):
+            node = Expr("or", (node, self.parse_and()))
+        return node
+
+    def parse_and(self) -> Expr:
+        node = self.parse_not()
+        while self.accept_kw("and"):
+            node = Expr("and", (node, self.parse_not()))
+        return node
+
+    def parse_not(self) -> Expr:
+        if self.accept_kw("not"):
+            return Expr("not", (self.parse_not(),))
+        return self.parse_predicate()
+
+    def parse_predicate(self) -> Expr:
+        lhs = self.parse_expr()
+        negate = False
+        if (
+            self.peek_kw() == "not"
+            and self.peek2() is not None
+            and self.peek2().lower() in ("in", "between")
+        ):
+            self.next()
+            negate = True
+        if self.accept_kw("in"):
+            node = self._parse_in(lhs)
+        elif self.accept_kw("between"):
+            lo = self.parse_expr()
+            self.expect_kw("and")
+            hi = self.parse_expr()
+            node = Expr("and", (Expr("ge", (lhs, lo)), Expr("le", (lhs, hi))))
+        elif self.peek() in _CMP:
+            op = self.next()
+            node = Expr(_CMP[op], (lhs, self.parse_expr()))
+        else:
+            return lhs  # a bare (boolean-valued) expression
+        return Expr("not", (node,)) if negate else node
+
+    def _parse_in(self, lhs: Expr) -> Expr:
+        if self.next() != "(":
+            raise self.error_at_last("expected ( after IN")
+        values = [self.parse_expr()]
+        while self.peek() == ",":
+            self.next()
+            values.append(self.parse_expr())
+        if self.next() != ")":
+            raise self.error_at_last("expected ) closing IN list")
+        node = Expr("eq", (lhs, values[0]))
+        for v in values[1:]:
+            node = Expr("or", (node, Expr("eq", (lhs, v))))
+        return node
+
     # ------------------------------------------------------------- exprs
     def parse_expr(self) -> Expr:
         node = self.parse_term()
@@ -145,7 +244,9 @@ class _Parser:
     def parse_atom(self) -> Expr:
         t = self.next()
         if t == "(":
-            e = self.parse_expr()
+            # parens admit a full boolean condition — on plain arithmetic
+            # content the boolean levels fall straight through to parse_expr
+            e = self.parse_condition()
             if self.next() != ")":
                 raise self.error_at_last("expected )")
             return e
@@ -160,7 +261,7 @@ class _Parser:
             return lit(float(t))
         if re.fullmatch(r"\d+", t):
             return lit(int(t))
-        if re.fullmatch(r"[A-Za-z_][\w.]*", t):
+        if _IDENT_RE.fullmatch(t):
             # agg keywords double as identifiers unless followed by "("
             # (the paper's own SQL aliases a column `AS count`)
             if t.lower() not in _KEYWORDS:
@@ -169,13 +270,45 @@ class _Parser:
                 return col(t)
         raise self.error_at_last(f"unexpected token {t!r} in expression")
 
-    def parse_comparison(self) -> Expr:
-        lhs = self.parse_expr()
-        op = self.next()
-        if op not in _CMP:
-            raise self.error_at_last(f"expected comparison, got {op!r}")
-        rhs = self.parse_expr()
-        return Expr(_CMP[op], (lhs, rhs))
+    # ------------------------------------------------------------- joins
+    def parse_join(self) -> Tuple[str, Optional[str], str, str, str]:
+        """One join clause → (table, alias, left_on, right_on, how).
+        Caller has already consumed the leading INNER/LEFT, if any."""
+        how = "inner"
+        if self.accept_kw("inner"):
+            pass
+        elif self.accept_kw("left"):
+            self.accept_kw("outer")
+            how = "left"
+        self.expect_kw("join")
+        table = self.identifier("a table name")
+        alias = self._maybe_table_alias()
+        self.expect_kw("on")
+        a = self.parse_expr()
+        if self.peek() != "=":
+            raise self.error("JOIN ... ON supports a single equality (col = col)")
+        self.next()
+        b = self.parse_expr()
+        if a.op != "col" or b.op != "col":
+            raise self.error_at_last(
+                "JOIN ... ON condition must compare two columns"
+            )
+        if self.peek_kw() == "and":
+            raise self.error(
+                "composite join conditions are not supported; move residual "
+                "predicates to WHERE"
+            )
+        qual = alias or table
+        a_ref, b_ref = a.args[0], b.args[0]
+        # orient the equality: the side qualified with the joined table's
+        # qualifier is right_on; unqualified sides resolve at execution
+        if b_ref.split(".")[0] == qual:
+            left_on, right_on = a_ref, b_ref
+        elif a_ref.split(".")[0] == qual:
+            left_on, right_on = b_ref, a_ref
+        else:
+            left_on, right_on = a_ref, b_ref
+        return table, alias, left_on, right_on, how
 
     # ------------------------------------------------------- select items
     def parse_select_item(self) -> Tuple[str, object]:
@@ -202,13 +335,14 @@ class _Parser:
             fn = {"avg": "mean"}.get(fn, fn)
             return alias, Agg(fn, inner, alias)
         e = self.parse_expr()
-        default = e.args[0] if e.op == "col" else "expr"
+        # a plain column's default output name is its unqualified tail
+        default = e.args[0].split(".")[-1] if e.op == "col" else "expr"
         alias = self._maybe_alias() or default
         return alias, e
 
     def _maybe_alias(self) -> Optional[str]:
         if self.accept_kw("as"):
-            return self.next()
+            return self.identifier("an alias")
         # bare alias (SELECT x y) is not supported to keep grammar simple
         return None
 
@@ -230,19 +364,37 @@ def _string_literal_value(s: str) -> float:
 
 
 def parse_sql(sql: str) -> Query:
-    cleaned = sql.strip().rstrip(";")
+    cleaned = sql.strip().rstrip(";").rstrip()
     p = _Parser(_tokenize(cleaned), cleaned)
     p.expect_kw("select")
-    items: List[Tuple[str, object]] = [p.parse_select_item()]
-    while p.accept_kw(","):  # pragma: no cover - comma is not a keyword
+    items: List[Tuple[str, object]] = []
+    if p.peek() == "*":
+        p.next()  # SELECT *: no projections; output schema = input schema
+    else:
         items.append(p.parse_select_item())
-    while p.peek() == ",":
-        p.next()
-        items.append(p.parse_select_item())
+        while p.peek() == ",":
+            p.next()
+            items.append(p.parse_select_item())
     p.expect_kw("from")
-    source = p.next()
+    source = p.identifier("a table name")
+    source_alias = p._maybe_table_alias()
 
-    q = Query(source=source)
+    joins: List[Join] = []
+    seen_quals = {source_alias or source}
+    while p.peek_kw() in ("join", "inner", "left"):
+        join_pos = p.pos()
+        table, alias, left_on, right_on, how = p.parse_join()
+        qual = alias or table
+        if qual in seen_quals:
+            raise SqlError(
+                f"duplicate table qualifier {qual!r}; alias one side",
+                cleaned, join_pos,
+            )
+        seen_quals.add(qual)
+        joins.append(Join(table=table, left_on=left_on, right_on=right_on,
+                          how=how, alias=alias))
+
+    q = Query(source=source, source_alias=source_alias, joins=tuple(joins))
     projections = []
     for alias, item in items:
         if isinstance(item, Agg):
@@ -251,21 +403,24 @@ def parse_sql(sql: str) -> Query:
             projections.append((alias, item))
 
     if p.accept_kw("where"):
-        e = p.parse_comparison()
-        while p.accept_kw("and"):
-            e = Expr("and", (e, p.parse_comparison()))
-        q = q.where(e)
+        q = q.where(p.parse_condition())
 
     if p.accept_kw("group"):
         p.expect_kw("by")
-        keys = [p.next()]
+        keys = [p.identifier("a GROUP BY column")]
         while p.peek() == ",":
             p.next()
-            keys.append(p.next())
+            keys.append(p.identifier("a GROUP BY column"))
         q = q.group_by(*keys)
         # group keys are implicitly projected; drop redundant projections
-        projections = [(a, e) for a, e in projections
-                       if not (e.op == "col" and e.args[0] in keys and a == e.args[0])]
+        # (the key itself, or the key aliased to its output tail)
+        def _is_key_proj(a: str, e) -> bool:
+            return (
+                e.op == "col"
+                and e.args[0] in keys
+                and a in (e.args[0], e.args[0].split(".")[-1])
+            )
+        projections = [(a, e) for a, e in projections if not _is_key_proj(a, e)]
         if projections:
             raise p.error_at_last(
                 "non-key, non-aggregate projections in GROUP BY query: "
@@ -281,7 +436,7 @@ def parse_sql(sql: str) -> Query:
     if p.accept_kw("order"):
         p.expect_kw("by")
         while True:
-            name = p.next()
+            name = p.identifier("an ORDER BY column")
             desc = False
             if p.accept_kw("desc"):
                 desc = True
@@ -294,8 +449,15 @@ def parse_sql(sql: str) -> Query:
             break
 
     if p.accept_kw("limit"):
-        q = q.take(int(p.next()))
+        tok = p.next()
+        if not re.fullmatch(r"\d+", tok):
+            raise p.error_at_last(f"LIMIT expects an integer, got {tok!r}")
+        q = q.take(int(tok))
 
+    if p.peek() == ";":
+        p.next()
+        if p.peek() is not None:
+            raise p.error("multiple SQL statements; parse_sql takes exactly one")
     if p.peek() is not None:
-        raise p.error(f"trailing tokens: {p.toks[p.i:]}")
+        raise p.error(f"trailing tokens after statement: {p.toks[p.i:]}")
     return Query(**{**q.__dict__, "raw_sql": cleaned})

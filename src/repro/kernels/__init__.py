@@ -17,6 +17,31 @@ Three kernels, each a `<name>/` subpackage with:
    S-blocked with running-max/denominator accumulators (serving).
 
 Kernels are validated in interpret mode on CPU (the container has no TPU);
-the pure-JAX reference path is the default in the models so numerical
-behaviour is platform-independent, with kernels switchable via config.
+the pure-JAX reference path remains available everywhere and kernels are
+switchable via config.
+
+Routing (when does a query actually hit ``fused_filter_agg``?)
+--------------------------------------------------------------
+Since SQL v2 the kernel is wired into the query engine: the planner
+(``core/physical.py``) and the interactive path (``Runner.query``) ask
+``engine/route.py`` for a :class:`RouteDecision` per aggregation query.
+Under the default ``engine="auto"`` a query routes to the kernel only
+when the decision is *provably byte-identical* to the jnp reference:
+
+* shape: exactly one GROUP BY key, aggregates ⊆ {COUNT, SUM, MEAN}, and
+  non-COUNT aggregate arguments are plain column references;
+* key: integer/bool dtype with shard-stats min/max known and a value
+  range ≤ 1024 groups (LEFT JOINs widen the range to include the 0
+  fill value);
+* exactness: all values integer-typed and small enough that their f32
+  sums stay exact (< 2^24) — float columns never auto-route because
+  f32 re-association changes low bits;
+* filter: fused natively only for a single ``col <op> literal`` whose
+  column stats prove f32-exact compare; any other predicate is
+  evaluated by the jnp expression tree and fed to the kernel as a mask.
+
+``engine="kernel"`` forces the route (structural impossibility raises
+``RouteError``); ``engine="jnp"`` pins the reference path.  Routing is
+never part of node fingerprints — both engines produce byte-identical
+artifacts, so cache entries stay warm across engine switches.
 """

@@ -19,6 +19,11 @@ from repro.table.format import ShardMeta, Snapshot, TableData, TableFormat
 
 _OPS = {"<", "<=", ">", ">=", "==", "!="}
 
+#: default ``chunk_rows`` for kernel-bound scans: 8 of the fused kernel's
+#: (8×128)-row tiles per work item — large enough to amortize pool
+#: round-trips, small enough that wide fan-outs still parallelize
+KERNEL_CHUNK_ROWS = 8192
+
 
 @dataclass(frozen=True)
 class Predicate:
@@ -147,6 +152,7 @@ def execute_scan(
     pool: Optional[Executor] = None,
     bus=None,
     tags: Optional[Dict] = None,
+    chunk_rows: Optional[int] = None,
 ) -> TableData:
     """Read surviving shards, apply the residual row-level predicate.
 
@@ -155,6 +161,12 @@ def execute_scan(
     ``concurrent.futures.Executor``) parallelizes the per-shard read +
     residual filter; shard order is preserved, so the concatenated result
     is byte-identical to the serial read.
+
+    ``chunk_rows`` switches the work-item batching from the default
+    fixed fan-out (≤16 items) to greedy row-count batching: consecutive
+    shards pack into one item until it holds ~``chunk_rows`` rows.  The
+    interactive query path uses :data:`KERNEL_CHUNK_ROWS` so each item
+    feeds the fused kernel a whole number of its (8×128) tiles.
 
     ``bus`` (a :class:`repro.telemetry.bus.EventBus`) gets one
     ``ScanShardRead`` per shard; ``tags`` attributes the events to a run
@@ -200,12 +212,25 @@ def execute_scan(
 
     indexed = list(enumerate(plan.shards))
     if pool is not None and len(plan.shards) > 1:
-        # batch shards into at most ~16 work items: many tiny shards
-        # would otherwise pay one pool round-trip each and lose to the
-        # serial read (ThreadPoolExecutor.map ignores chunksize, so the
-        # batching is done by hand; order is preserved either way)
-        step = -(-len(indexed) // 16)  # ceil division
-        chunks = [indexed[i : i + step] for i in range(0, len(indexed), step)]
+        if chunk_rows is not None:
+            # greedy row-count batching: consecutive shards pack into one
+            # work item until it carries ~chunk_rows rows (order preserved)
+            chunks, cur, cur_rows = [], [], 0
+            for item in indexed:
+                cur.append(item)
+                cur_rows += item[1].num_rows
+                if cur_rows >= chunk_rows:
+                    chunks.append(cur)
+                    cur, cur_rows = [], 0
+            if cur:
+                chunks.append(cur)
+        else:
+            # batch shards into at most ~16 work items: many tiny shards
+            # would otherwise pay one pool round-trip each and lose to the
+            # serial read (ThreadPoolExecutor.map ignores chunksize, so the
+            # batching is done by hand; order is preserved either way)
+            step = -(-len(indexed) // 16)  # ceil division
+            chunks = [indexed[i : i + step] for i in range(0, len(indexed), step)]
         parts = [
             part
             for chunk_parts in pool.map(

@@ -219,13 +219,24 @@ class ScanShardRead(Event):
 
 @dataclass
 class QueryExecuted(Event):
-    """One interactive query completed (point-wise path, paper 4.6)."""
+    """One interactive query completed (point-wise path, paper 4.6).
+
+    ``engine_path`` records which engine ran the filter+group+agg
+    pipeline ("kernel" = fused Pallas kernel, "jnp" = reference path) and
+    the ``*_s`` attrs break the wall clock into per-operator phases —
+    parse, plan (catalog + routing + scan planning), scan (pooled shard
+    reads), exec (compiled query)."""
 
     kind: ClassVar[str] = "QueryExecuted"
     table: str = ""
     rows_out: int = 0
     shards_read: int = 0
     wall_s: float = 0.0
+    engine_path: str = "jnp"
+    parse_s: float = 0.0
+    plan_s: float = 0.0
+    scan_s: float = 0.0
+    exec_s: float = 0.0
 
 
 # ------------------------------------------------------------ maintenance
