@@ -2,21 +2,47 @@
 
 Everything in this package runs with zero execution and zero store
 writes: the inputs are a resolved :class:`~repro.core.pipeline.Pipeline`
-and (optionally) catalog schemas; the output is a typed
-:class:`LintReport`.
+and (optionally) catalog schemas plus already-loaded snapshot metadata;
+the outputs are a typed :class:`LintReport` and — for the explain plane
+— :class:`ExplainedQuery` / :class:`PipelineExplanation`.
 """
+from repro.analysis.catalog import rule_catalog_markdown
+from repro.analysis.explain import (
+    ExplainedNode,
+    ExplainedQuery,
+    PipelineExplanation,
+    explain_pipeline,
+    explain_query,
+)
 from repro.analysis.lint import GRAPH_RULES, lint_pipeline
 from repro.analysis.report import Finding, LintFailed, LintReport, Severity
-from repro.analysis.rules import FUNCTION_RULES, RULES_BY_ID, Rule
+from repro.analysis.rules import (
+    CONCURRENCY_RULES,
+    FUNCTION_RULES,
+    RULES_BY_ID,
+    Rule,
+    run_concurrency_rules,
+)
+from repro.analysis.types import TYPE_RULES, query_type_findings
 
 __all__ = [
+    "CONCURRENCY_RULES",
+    "ExplainedNode",
+    "ExplainedQuery",
     "Finding",
     "FUNCTION_RULES",
     "GRAPH_RULES",
     "LintFailed",
     "LintReport",
+    "PipelineExplanation",
     "Rule",
     "RULES_BY_ID",
     "Severity",
+    "TYPE_RULES",
+    "explain_pipeline",
+    "explain_query",
     "lint_pipeline",
+    "query_type_findings",
+    "rule_catalog_markdown",
+    "run_concurrency_rules",
 ]

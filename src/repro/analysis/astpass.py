@@ -122,6 +122,31 @@ def load_fn_source(fn: Callable) -> Optional[FnSource]:
     return src
 
 
+def line_suppresses(
+    file: Optional[str], line: Optional[int], rule: str
+) -> bool:
+    """Whether a ``# repro: noqa`` on one *source line* silences ``rule``.
+
+    The suppression surface for findings that anchor on a registration
+    line rather than a function body — SQL nodes (``p.sql("x", ...)``)
+    have no AST to walk, so the typed-dataflow (T) rules honor a noqa on
+    the registration call's first line, with the same bare/[RULE] scoping
+    the D rules use inside function bodies.
+    """
+    if not file or not line:
+        return False
+    import linecache
+
+    text = linecache.getline(file, line)
+    if not text:
+        return False
+    spec = _parse_noqa(text)
+    if spec is None:
+        return False
+    rules = spec[0]
+    return rules is None or rule.upper() in rules
+
+
 # --------------------------------------------------------------- name walks
 def dotted_name(node: ast.AST) -> Optional[str]:
     """``np.random.default_rng`` -> that string; ``None`` for non-chains."""

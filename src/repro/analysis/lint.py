@@ -10,17 +10,25 @@ all call.  It walks the resolved pipeline exactly once:
    from :mod:`repro.analysis.lineage`;
 3. the cache-poison AST rules (``D101``-``D107``) from
    :mod:`repro.analysis.rules` over every decorated function body;
-4. the cache-invalidation blast radius, computed by perturbing one
+4. the typed-dataflow rules (``T401``-``T404``) from
+   :mod:`repro.analysis.types` over every SQL node — join-key dtypes,
+   2^24 f32-exactness (when shard stats are supplied), LEFT-JOIN
+   zero-fill widening;
+5. the concurrency-hazard rules (``C501``-``C503``) over the whole DAG —
+   lake-table shadowing and shared-global traffic between co-schedulable
+   nodes;
+6. the cache-invalidation blast radius, computed by perturbing one
    node's fingerprint at a time through
    :func:`repro.core.physical.fingerprint_blast_radius`.
 
 Nothing here executes a node or touches an object store — the only
-inputs are the pipeline object and (optionally) catalog schemas.
+inputs are the pipeline object and (optionally) catalog schemas plus
+already-loaded snapshot metadata.
 """
 from __future__ import annotations
 
 from types import SimpleNamespace
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 from repro.analysis.lineage import (
     Unknown,
@@ -29,7 +37,8 @@ from repro.analysis.lineage import (
     propagate_schema,
 )
 from repro.analysis.report import Finding, LintReport, Severity
-from repro.analysis.rules import run_function_rules
+from repro.analysis.rules import run_concurrency_rules, run_function_rules
+from repro.analysis.types import check_node_types
 from repro.analysis.astpass import load_fn_source
 from repro.core.pipeline import Node, Pipeline
 from repro.table.schema import Schema
@@ -150,6 +159,8 @@ def lint_pipeline(
     pipeline: Pipeline,
     *,
     external_schemas: Optional[Dict[str, Optional[Schema]]] = None,
+    external_snapshots: Optional[Dict[str, Any]] = None,
+    catalog_tables: Optional[Set[str]] = None,
 ) -> LintReport:
     """Run all static passes over ``pipeline``; executes nothing.
 
@@ -159,6 +170,12 @@ def lint_pipeline(
     from both the pipeline and the dict is an ``L004`` error; when it is
     ``None`` (bare API use, no catalog at hand), table existence and all
     schema-dependent checks are skipped rather than guessed.
+
+    ``external_snapshots`` (table -> Snapshot, already loaded — nothing
+    is fetched here) feeds shard statistics to the stats-grounded typed
+    checks (T403); ``catalog_tables`` (names at the lint branch head)
+    powers the lake-table shadowing check (C501).  Both optional — bare
+    callers lose those rules, not the pass.
     """
     findings: List[Finding] = []
     suppressed = 0
@@ -233,11 +250,24 @@ def lint_pipeline(
             )
         )
 
-    # ---- lineage + cache-poison passes, in topo order ------------------
+    # ---- lineage + typed-dataflow + cache-poison passes, topo order ----
     for name in order:
         node = pipeline.nodes[name]
         if node.kind == "sql" and node.query is not None:
             findings.extend(check_sql_node(node, schemas))
+            stats: Dict[str, Tuple[int, int]] = {}
+            total_rows: Optional[int] = None
+            if external_snapshots:
+                from repro.engine.route import column_stats_for_query
+
+                stats, total_rows = column_stats_for_query(
+                    node.query, external_snapshots
+                )
+            t_findings, t_sup = check_node_types(
+                node, schemas, stats=stats, total_rows=total_rows
+            )
+            findings.extend(t_findings)
+            suppressed += t_sup
         elif node.fn is not None:
             py_findings, py_sup = check_python_node(node, schemas)
             findings.extend(py_findings)
@@ -250,6 +280,13 @@ def lint_pipeline(
                 findings.extend(d_findings)
                 suppressed += d_sup
         schemas[name] = propagate_schema(node, schemas)
+
+    # ---- concurrency hazards over the whole DAG ------------------------
+    c_findings, c_sup = run_concurrency_rules(
+        pipeline, catalog_tables=catalog_tables
+    )
+    findings.extend(c_findings)
+    suppressed += c_sup
 
     return LintReport(
         pipeline=pipeline.name,

@@ -40,6 +40,9 @@ class Finding:
     #: the offending fragment — a source line, or the SQL slice at the
     #: parser/lineage position — so reports read without opening the file
     snippet: Optional[str] = None
+    #: a concrete fix for THIS firing ("cast zone to int32"), when the
+    #: rule can name one — rendered after the message, carried in JSON
+    hint: Optional[str] = None
 
     @property
     def location(self) -> str:
@@ -56,6 +59,7 @@ class Finding:
             "file": self.file,
             "line": self.line,
             "snippet": self.snippet,
+            "hint": self.hint,
         }
 
     def describe(self) -> str:
@@ -64,6 +68,8 @@ class Finding:
         out = f"{self.severity.value.upper():<7} {self.rule}  {loc}{node}{self.message}"
         if self.snippet:
             out += f"\n        > {self.snippet.strip()}"
+        if self.hint:
+            out += f"\n        fix: {self.hint}"
         return out
 
 

@@ -413,15 +413,76 @@ class Client:
         when the branch does not exist yet).
         """
         pipeline = resolve_pipeline(target)
+        schemas, snapshots, head = self._lint_inputs(pipeline, branch)
+        return lint_pipeline(
+            pipeline,
+            external_schemas=schemas,
+            external_snapshots=snapshots,
+            catalog_tables=set(head),
+        )
+
+    def _lint_inputs(self, pipeline, branch: str):
+        """Catalog-side inputs for the static passes: external-source
+        schemas, loaded snapshots (shard stats for the typed checks), and
+        the set of table names at the branch head.  Reads refs and
+        manifests only — never shard data, never a write."""
         lookup = branch if self.catalog.has_branch(branch) else "main"
         head_tables = self.catalog.tables(branch=lookup)
         schemas: Dict[str, Optional[Schema]] = {}
+        snapshots: Dict[str, Any] = {}
         for table in pipeline.external_sources():
             if table in head_tables:
-                schemas[table] = self.fmt.load_snapshot(
-                    head_tables[table]
-                ).schema
-        return lint_pipeline(pipeline, external_schemas=schemas)
+                snap = self.fmt.load_snapshot(head_tables[table])
+                snapshots[table] = snap
+                schemas[table] = snap.schema
+        return schemas, snapshots, head_tables
+
+    def explain(
+        self,
+        target: Any,
+        *,
+        branch: str = "main",
+        commit_id: Optional[str] = None,
+        engine: str = "auto",
+    ):
+        """Static plan explainability — zero execution, zero store writes.
+
+        Two modes, selected by the target:
+
+        * a SQL string (``SELECT ...``) — returns an
+          :class:`~repro.analysis.explain.ExplainedQuery`: planned scans,
+          pushdown/pruning, the kernel-vs-jnp verdict with the full route
+          trace (every eligibility check, pass/fail, fix hints), inferred
+          output schema, and typed-dataflow findings.  The predicted
+          ``engine_path`` — or the predicted :class:`RouteError` message,
+          byte-for-byte — is exactly what ``client.query`` would do,
+          because both read the same interactive plan.
+        * a pipeline/project/module — returns a
+          :class:`~repro.analysis.explain.PipelineExplanation`: per-node
+          route verdicts (equal to what the physical planner stamps onto
+          its stages) plus the full preflight :class:`LintReport`.
+        """
+        from repro.analysis.explain import explain_pipeline, explain_query
+
+        if isinstance(target, str) and target.lstrip()[:6].lower() == "select":
+            from repro.core.physical import resolve_query_snapshots
+            from repro.engine.sql import parse_sql
+
+            query = parse_sql(target)
+            snapshots = resolve_query_snapshots(
+                self.catalog, self.fmt, query,
+                branch=branch, commit_id=commit_id, text=target,
+            )
+            return explain_query(query, snapshots, engine=engine)
+        pipeline = resolve_pipeline(target)
+        schemas, snapshots, head = self._lint_inputs(pipeline, branch)
+        return explain_pipeline(
+            pipeline,
+            external_schemas=schemas,
+            snapshots=snapshots,
+            engine=engine,
+            catalog_tables=set(head),
+        )
 
     # ---------------------------------------------------------------- runs
     def run(
@@ -771,6 +832,12 @@ class BranchHandle:
         """Preflight against this branch's table schemas."""
         self._ensure()
         return self.client.lint(target, branch=self.name)
+
+    def explain(self, target: Any, **kwargs: Any) -> Any:
+        """Static explain (SQL or pipeline) against this branch's head."""
+        self._ensure()
+        kwargs.setdefault("branch", self.name)
+        return self.client.explain(target, **kwargs)
 
     def replay(self, run_id: int, target: RunTarget, **kwargs: Any) -> RunHandle:
         return self.client.replay(run_id, target, **kwargs)

@@ -12,6 +12,9 @@ helpers:
                                       [--preflight]
   python -m repro.cli --lake ... lint pipeline_module.py [-b branch]
                                       [--strict] [--json PATH]
+  python -m repro.cli --lake ... explain (pipeline_module.py | -q SQL)
+                                      [-b branch] [--engine auto|kernel|jnp]
+                                      [--json PATH]
   python -m repro.cli --lake ... branch [--create NAME] [--from BASE]
   python -m repro.cli --lake ... log [-b branch]
   python -m repro.cli --lake ... tables [-b branch]
@@ -150,6 +153,22 @@ def main(argv=None) -> None:
                     help="warnings also fail the lint (exit 1)")
     li.add_argument("--json", default=None, metavar="PATH",
                     help="also write the full report as JSON to PATH")
+
+    ex = sub.add_parser(
+        "explain", help="static plan explainability: scans, pushdown, "
+        "kernel-vs-jnp route trace, typed checks — executes nothing"
+    )
+    ex.add_argument("pipeline", nargs="?", default=None,
+                    help="python file: decorator SDK or PIPELINE global")
+    ex.add_argument("-q", "--sql", default=None,
+                    help="explain one interactive SQL query instead")
+    ex.add_argument("-b", "--branch", default="main")
+    ex.add_argument("--engine", default="auto",
+                    choices=("auto", "kernel", "jnp"),
+                    help="engine to explain the route for (matches the "
+                    "query/run engine flag)")
+    ex.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the full explanation as JSON to PATH")
 
     b = sub.add_parser("branch", help="list/create branches")
     b.add_argument("--create", default=None)
@@ -350,6 +369,29 @@ def main(argv=None) -> None:
             if not report.ok(strict=args.strict):
                 raise SystemExit(1)
             print("preflight clean — pipeline is clear to run")
+            return
+
+        if args.cmd == "explain":
+            if (args.sql is None) == (args.pipeline is None):
+                raise SystemExit(
+                    "explain takes exactly one target: a pipeline file, "
+                    "or -q SQL"
+                )
+            target = args.sql if args.sql is not None else args.pipeline
+            explanation = client.explain(
+                target, branch=args.branch, engine=args.engine
+            )
+            print(explanation.describe())
+            if args.json:
+                import json
+
+                with open(args.json, "w") as fh:
+                    json.dump(explanation.to_json_dict(), fh, indent=2)
+                print(f"json explanation written to {args.json}")
+            # pipeline mode gates on lint errors like `repro lint`; SQL
+            # mode always exits 0 — a predicted RouteError IS the product
+            if hasattr(explanation, "report") and not explanation.report.ok():
+                raise SystemExit(1)
             return
 
         if args.cmd == "query":

@@ -278,6 +278,97 @@ def _columns_for_table(
     return list(dict.fromkeys(out)) or [snapshot.schema.names[0]]
 
 
+@dataclass(frozen=True)
+class InteractiveQueryPlan:
+    """Everything the interactive query path decides before touching data.
+
+    One shared planning artifact behind both ``Runner.query`` (which
+    executes it) and ``repro explain`` (which only describes it) — the
+    static route verdict agrees with the runtime decision *by
+    construction*, because both read this object.
+    """
+
+    query: Query
+    #: filter conjuncts pushed into the FROM table's scan
+    pushed: Tuple[Predicate, ...]
+    #: filter remainder evaluated by the engine (None = fully pushed)
+    residual: Optional[Expr]
+    #: folded shard statistics that grounded the route decision
+    stats: Dict[str, Tuple[int, int]]
+    total_rows: Optional[int]
+    route: "RouteDecision"
+    #: per-table scan plans (column projection + shard pruning applied)
+    scans: Dict[str, ScanPlan]
+
+
+def resolve_query_snapshots(
+    catalog: Any,
+    fmt: Any,
+    query: Query,
+    *,
+    branch: Optional[str] = None,
+    commit_id: Optional[str] = None,
+    text: Optional[str] = None,
+) -> Dict[str, Snapshot]:
+    """Zero-registration name resolution: every FROM/JOIN table against
+    the catalog, unknown names surfacing as positioned SqlErrors."""
+    from repro.catalog.nessie import CatalogError
+    from repro.engine.sql import SqlError, find_token
+
+    text = text if text is not None else (query.raw_sql or "")
+    snapshots: Dict[str, Snapshot] = {}
+    for table in query.source_tables():
+        try:
+            key = catalog.table_key(table, branch=branch, commit_id=commit_id)
+            snapshots[table] = fmt.load_snapshot(key)
+        except CatalogError as e:
+            raise SqlError(
+                f"unknown table {table!r} ({e})", text,
+                find_token(text, table) or 0,
+            ) from e
+    return snapshots
+
+
+def plan_interactive_query(
+    query: Query,
+    snapshots: Dict[str, Snapshot],
+    *,
+    engine: str = "auto",
+) -> InteractiveQueryPlan:
+    """Plan one interactive query: pushdown split, stats fold, engine
+    route, and per-table scan plans.  Pure function of the query and the
+    resolved snapshots — no data is read, nothing is written, so the
+    explain plane can call it as-is.  Raises :class:`RouteError` when
+    ``engine='kernel'`` is forced on an ineligible query, exactly as the
+    execution path would."""
+    pushed, residual = (
+        _split_primary_pushdown(query, snapshots)
+        if query.filter_expr is not None
+        else ([], None)
+    )
+    stats, total_rows = column_stats_for_query(query, snapshots)
+    route = plan_route(
+        query, engine=engine, stats=stats, total_rows=total_rows
+    )
+    scans = {
+        table: plan_scan(
+            snapshots[table],
+            columns=_columns_for_table(query, table, snapshots[table]),
+            predicates=tuple(pushed) if table == query.source else (),
+        )
+        for table in query.source_tables()
+    }
+    return InteractiveQueryPlan(
+        query=query,
+        pushed=tuple(pushed),
+        residual=residual,
+        stats=stats,
+        total_rows=total_rows,
+        route=route,
+        scans=scans,
+    )
+
+
 def _scan_bytes(plan: ScanPlan) -> int:
     row_bytes = sum(
         np.dtype(plan.snapshot.schema.dtype_of(c)).itemsize for c in plan.columns

@@ -223,18 +223,15 @@ class Runner:
         filter+agg execution path ("auto" | "kernel" | "jnp", see
         engine/route.py).  Time travel via branch/commit.
         """
-        import re as _re
         from dataclasses import replace as _replace
 
-        from repro.core.physical import _columns_for_table, _split_primary_pushdown
+        from repro.core.physical import (
+            plan_interactive_query,
+            resolve_query_snapshots,
+        )
         from repro.engine.exec import compile_query
-        from repro.engine.route import column_stats_for_query, plan_route
-        from repro.engine.sql import SqlError, parse_sql
-        from repro.table.scan import KERNEL_CHUNK_ROWS, plan_scan
-
-        def _pos_of(name: str, text: str) -> int:
-            m = _re.search(rf"\b{_re.escape(name)}\b", text)
-            return m.start() if m else 0
+        from repro.engine.sql import parse_sql
+        from repro.table.scan import KERNEL_CHUNK_ROWS
 
         t0 = time.perf_counter()
         query = parse_sql(sql)
@@ -242,37 +239,16 @@ class Runner:
         parse_s = time.perf_counter() - t0
 
         # -- zero-registration name resolution + planning ----------------
+        # (shared with `repro explain` — the static route verdict agrees
+        # with this decision because it IS this decision)
         t1 = time.perf_counter()
-        snapshots: Dict[str, Snapshot] = {}
-        for table in query.source_tables():
-            try:
-                key = self.catalog.table_key(
-                    table, branch=branch, commit_id=commit_id
-                )
-                snapshots[table] = self.fmt.load_snapshot(key)
-            except CatalogError as e:
-                raise SqlError(
-                    f"unknown table {table!r} ({e})", text, _pos_of(table, text)
-                ) from e
+        snapshots = resolve_query_snapshots(
+            self.catalog, self.fmt, query,
+            branch=branch, commit_id=commit_id, text=text,
+        )
         _check_query_columns(query, snapshots, text)
-
-        pushed, residual = (
-            _split_primary_pushdown(query, snapshots)
-            if query.filter_expr is not None
-            else ([], None)
-        )
-        stats, total_rows = column_stats_for_query(query, snapshots)
-        route = plan_route(
-            query, engine=engine, stats=stats, total_rows=total_rows
-        )
-        scans = {
-            table: plan_scan(
-                snapshots[table],
-                columns=_columns_for_table(query, table, snapshots[table]),
-                predicates=pushed if table == query.source else (),
-            )
-            for table in query.source_tables()
-        }
+        iq = plan_interactive_query(query, snapshots, engine=engine)
+        route, residual, scans = iq.route, iq.residual, iq.scans
         plan_s = time.perf_counter() - t1
 
         # -- pooled parallel scans, kernel-sized chunks -------------------

@@ -138,7 +138,9 @@ def _first_match_gather(join, jq, combined, valid, jrel, *, sql=None):
         if arr.dtype.kind not in ("i", "u", "b"):
             raise TypeError(
                 f"join key on the {side} side of {join.left_on} = "
-                f"{join.right_on} must be integer/bool, got {arr.dtype}"
+                f"{join.right_on} must be integer/bool, got {arr.dtype} "
+                "(fix: cast the join key to int32 upstream — T401 flags "
+                "this statically)"
             )
 
     cap_r = jrel.capacity

@@ -83,6 +83,22 @@ class SqlError(SyntaxError):
         )
 
 
+def find_token(sql: Optional[str], token: str) -> Optional[int]:
+    """Character position of ``token`` as a whole word in ``sql``.
+
+    The shared locator behind positioned diagnostics that point at a
+    *name* rather than a parse state — :class:`RouteError` quoting the
+    clause that made ``engine='kernel'`` ineligible, lineage findings
+    quoting the missing column.  Qualified references (``t.zone``) match
+    literally; returns None when the SQL text is unavailable or the
+    token does not occur.
+    """
+    if not sql or not token:
+        return None
+    m = re.search(rf"\b{re.escape(token)}\b", sql)
+    return m.start() if m else None
+
+
 def _tokenize(sql: str) -> List[Tuple[str, int]]:
     """``[(token, char_position), ...]`` over the cleaned SQL text."""
     pos, out = 0, []
