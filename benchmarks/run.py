@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_maintenance       lakekeeper: gc bytes reclaimed, compaction speedup
   bench_speculation       straggler-tail savings from backup requests
   bench_parallel_dag      wave scheduler: fan-out speedup vs sequential
+  bench_scheduler         Scheduler v2: critical-path order + streaming
   bench_sql_join          SQL v2: joined queries, kernel A/B, pooled feed
   bench_dryrun_summary    deliverables (e)+(g): dry-run + roofline headlines
   bench_telemetry         event-bus overhead (< 3% of run wall-clock)
@@ -31,6 +32,7 @@ SUITES = [
     "bench_maintenance",
     "bench_speculation",
     "bench_parallel_dag",
+    "bench_scheduler",
     "bench_sql_join",
     "bench_dryrun_summary",
     "bench_telemetry",

@@ -165,6 +165,7 @@ class Client:
         #: guarded by ``_history_lock`` — concurrent async runs save too
         self._history_lock = threading.Lock()
         self._persisted_history: Dict[str, tuple] = {}
+        self._persisted_forecasts: Dict[str, Dict[str, float]] = {}
         if executor is not None:
             self._load_latency_history()
         self.cache = CacheMaintenance(self)
@@ -233,9 +234,10 @@ class Client:
     def _load_latency_history(self) -> None:
         """Seed the executor's speculation baselines from the lake."""
         assert self._executor is not None
+        refs = self.store.list_refs(_LATENCY_NS)
         history = {
             fp: [float(d) for d in raw.get("durations", [])]
-            for fp, raw in self.store.list_refs(_LATENCY_NS).items()
+            for fp, raw in refs.items()
         }
         if history:
             self._executor.seed_latency_history(history)
@@ -243,24 +245,49 @@ class Client:
                 "loaded latency baselines for %d function fingerprint(s)",
                 len(history),
             )
+        # keep persisted forecasts so an unchanged fingerprint's ref is
+        # neither rewritten nor stripped of its forecast on save
+        self._persisted_forecasts = {
+            fp: dict(raw["forecast"])
+            for fp, raw in refs.items()
+            if isinstance(raw.get("forecast"), dict)
+        }
         self._persisted_history = {
-            fp: tuple(ds) for fp, ds in history.items()
+            fp: (
+                tuple(ds),
+                tuple(sorted(self._persisted_forecasts.get(fp, {}).items())),
+            )
+            for fp, ds in history.items()
         }
 
     def _save_latency_history(self) -> None:
-        """Persist changed histories (tiny JSON refs, one per fingerprint)."""
+        """Persist changed histories (tiny JSON refs, one per fingerprint).
+
+        The scheduler's latest predicted-vs-actual forecast rides the same
+        ref (``forecast`` key), so it ages out with the durations under the
+        lakekeeper's ``latency_ttl_s`` sweep — no second GC policy.
+        """
         if self._executor is None:
             return
         with self._history_lock:
+            fresh = self._executor.forecasts()
             for fp, durations in self._executor.latency_history().items():
-                snap = tuple(durations)
+                # latest forecast wins; fall back to the persisted one so a
+                # save without a new run never strips it from the ref
+                forecast = fresh.get(fp) or self._persisted_forecasts.get(fp)
+                snap = (
+                    tuple(durations),
+                    tuple(sorted((forecast or {}).items())),
+                )
                 if self._persisted_history.get(fp) == snap:
                     continue
-                self.store.set_ref(
-                    _LATENCY_NS, fp,
-                    {"durations": list(durations), "updated_at": time.time()},
-                )
+                ref = {"durations": list(durations), "updated_at": time.time()}
+                if forecast:
+                    ref["forecast"] = dict(forecast)
+                self.store.set_ref(_LATENCY_NS, fp, ref)
                 self._persisted_history[fp] = snap
+                if forecast:
+                    self._persisted_forecasts[fp] = dict(forecast)
 
     # ------------------------------------------------------------ branches
     def branch(
@@ -500,6 +527,8 @@ class Client:
         raise_errors: bool = True,
         parallelism: Optional[int] = None,
         preflight: bool = False,
+        schedule: str = "critical_path",
+        streaming: Optional[bool] = None,
     ) -> RunHandle:
         """Execute a pipeline/project/module with transform-audit-write.
 
@@ -515,8 +544,14 @@ class Client:
 
         ``parallelism`` caps how many independent stages the wave
         scheduler keeps in flight (default: the executor config's
-        ``max_concurrent_stages``); results are byte-identical at every
-        level — it is purely a throughput knob.
+        ``max_concurrent_stages``, or the memory-capped admission gate
+        under ``schedule="critical_path"``).  ``schedule`` picks the
+        dispatch order — ``"critical_path"`` (cost-weighted longest path
+        first, the default) or ``"stage_id"`` (ascending, the legacy
+        wave order) — and ``streaming`` toggles the outputs-ready
+        handoff plus incremental shard scans (default: on under
+        critical_path, off under stage_id).  All three are throughput
+        knobs only: results are byte-identical at every setting.
         """
         pipeline = resolve_pipeline(target)
         if preflight:
@@ -546,6 +581,8 @@ class Client:
                 author=author,
                 planner_config=planner_config,
                 parallelism=parallelism,
+                schedule=schedule,
+                streaming=streaming,
             )
         except ExpectationFailed as e:
             self._save_latency_history()
@@ -596,6 +633,8 @@ class Client:
         raise_errors: bool = False,
         parallelism: Optional[int] = None,
         preflight: bool = False,
+        schedule: str = "critical_path",
+        streaming: Optional[bool] = None,
     ) -> AsyncRunHandle:
         """``run()`` without the wait (paper Table 1's async runs).
 
@@ -642,6 +681,8 @@ class Client:
             raise_errors=raise_errors,
             parallelism=parallelism,
             preflight=preflight,
+            schedule=schedule,
+            streaming=streaming,
         )
         return AsyncRunHandle(future, branch=branch)
 

@@ -9,6 +9,8 @@ helpers:
   python -m repro.cli --lake ... run pipeline_module.py [-b branch]
                                       [--no-fusion] [--run-id N --replay]
                                       [--parallelism N] [--no-cache]
+                                      [--schedule critical_path|stage_id]
+                                      [--streaming | --no-streaming]
                                       [--preflight]
   python -m repro.cli --lake ... lint pipeline_module.py [-b branch]
                                       [--strict] [--json PATH]
@@ -90,6 +92,10 @@ def _run_summary_json(res) -> dict:
         "failed_checks": res.failed_checks,
         "wall_s": stats.get("wall_s"),
         "parallelism": stats.get("parallelism"),
+        # Scheduler v2 stats: ordering mode, streaming, per-stage cost
+        # estimates / critical-path ranks / admission waits, and the
+        # model's predicted critical path (stage ids)
+        "scheduler": stats.get("scheduler", {}),
         "stage_timings": stats.get("stage_timings", {}),
         "cache": stats.get("cache", {}),
         "io": stats.get("io", {}),
@@ -118,6 +124,24 @@ def main(argv=None) -> None:
         "default: executor max_concurrent_stages). Results are "
         "byte-identical at every level — this is a throughput knob, "
         "never a semantics knob",
+    )
+    r.add_argument(
+        "--schedule", choices=("critical_path", "stage_id"),
+        default="critical_path",
+        help="ready-stage dispatch order: critical_path pops the stage "
+        "heading the longest cost-weighted path to a sink (cost model: "
+        "persisted latency medians, bytes-scanned fallback); stage_id is "
+        "the legacy ascending order. Dispatch order only — artifacts are "
+        "byte-identical either way",
+    )
+    r.add_argument(
+        "--streaming",
+        action=argparse.BooleanOptionalAction,
+        default=None,
+        help="unblock downstream stages as soon as upstream outputs exist "
+        "in memory (before artifact writes land) and drive scans through "
+        "the incremental shard iterator; default: on under critical_path, "
+        "off under stage_id. Audits and commits keep the stage barrier",
     )
     r.add_argument(
         "--preflight", action="store_true",
@@ -415,6 +439,7 @@ def main(argv=None) -> None:
                 pipeline, branch=args.branch, fusion=not args.no_fusion,
                 pushdown=not args.no_fusion, cache=args.cache,
                 parallelism=parallelism, preflight=args.preflight,
+                schedule=args.schedule, streaming=args.streaming,
             )
         except LintFailed as e:
             print(e.report.describe())
@@ -434,9 +459,17 @@ def main(argv=None) -> None:
         print(f"run {res.run_id} merged to {args.branch!r} "
               f"@ {res.merged_commit[:12]}")
         print(f"artifacts: {sorted(res.artifacts)}  checks: {res.checks}")
+        sched = res.stats.get("scheduler", {})
         print(f"wall: {res.stats['wall_s']:.2f}s  "
               f"parallelism: {res.stats.get('parallelism', 1)}  "
               f"io: {res.stats['io']}")
+        if sched:
+            print(
+                f"scheduler: {sched.get('schedule')} "
+                f"(streaming={'on' if sched.get('streaming') else 'off'})  "
+                f"critical path: {sched.get('critical_path')}  "
+                f"admission waits: {sched.get('admission_waits', 0)}"
+            )
         cache = res.cache
         if cache.get("enabled"):
             total = cache["hits"] + cache["nodes_executed"]

@@ -41,6 +41,7 @@ from repro.engine.exec import execute_query
 from repro.engine.expr import Expr
 from repro.engine.query import Query
 from repro.engine.route import RouteDecision, column_stats_for_query, plan_route
+from repro.runtime.function import FunctionSpec
 from repro.runtime.resources import CostModel, ResourceRequest
 from repro.table.format import Snapshot
 from repro.table.scan import Predicate, ScanPlan, plan_scan
@@ -896,3 +897,151 @@ def build_physical_plan(
         cached_checks=cached_checks,
         elided=elided,
     )
+
+
+# ===================================================================== cost
+# Scheduler v2: the per-stage cost model + the critical-path weights the
+# wave scheduler orders its ready heap by.  The same longest-path
+# arithmetic backs `repro trace`'s critical-path table (telemetry/tracing
+# feeds it *observed* stage latencies instead of estimates) — one shared
+# implementation, so the scheduler's priorities and the trace's critical
+# path can never disagree about the graph math.
+
+#: bytes-scanned fallback throughput: with no latency history for a
+#: stage's function fingerprint, its runtime is estimated as
+#: ``overhead + scanned_bytes / SCAN_BYTES_PER_S`` (a conservative
+#: single-host read+filter rate; the estimate self-corrects as soon as
+#: the stage has run once, via the persisted ``latencyhist`` medians)
+SCAN_BYTES_PER_S = 200e6
+#: fixed per-stage overhead (dispatch + trace/compile amortized) the
+#: bytes heuristic starts from, so zero-scan stages still carry weight
+STAGE_OVERHEAD_S = 0.01
+
+
+def stage_function_spec(pipeline_name: str, stage: Stage) -> FunctionSpec:
+    """The ``FunctionSpec`` the runner dispatches ``stage`` under.
+
+    One construction site for the spec means the scheduler's cost lookup
+    and the executor's latency-history key are the same fingerprint by
+    definition — the cost model reads exactly the history the stage's
+    past executions wrote.
+    """
+    return FunctionSpec(
+        name=f"{pipeline_name}/stage{stage.stage_id}",
+        fn=stage.fn,
+        static_config={"fingerprint": stage.fingerprint},
+        resources=stage.resources,
+    )
+
+
+@dataclass(frozen=True)
+class StageCost:
+    """One stage's scheduling estimate (see ``estimate_stage_costs``)."""
+
+    stage_id: int
+    #: estimated runtime seconds
+    est_s: float
+    #: "latency" = per-fingerprint history median, "bytes" = scan heuristic
+    source: str
+    #: estimated peak memory (the admission cap's unit), from the stage's
+    #: ResourceRequest tier
+    est_memory_gb: int
+    #: longest-path-to-sink weight (this stage + its heaviest downstream
+    #: chain) — the ready heap's priority
+    cp_weight_s: float = 0.0
+    #: rank by descending weight (0 = most critical, ties by stage id)
+    cp_rank: int = 0
+
+
+def longest_path_weights(
+    costs: Dict[int, float], parents: Dict[int, Sequence[int]]
+) -> Dict[int, float]:
+    """Longest-path-to-sink weight per stage: ``w(s) = cost(s) +
+    max(w(child))`` over the dependency DAG described by ``parents``
+    (child -> parent ids; parent ids are always lower, as the physical
+    planner guarantees).  A sink's weight is its own cost."""
+    children: Dict[int, List[int]] = {}
+    for sid, ps in parents.items():
+        for p in ps:
+            children.setdefault(p, []).append(sid)
+    weights: Dict[int, float] = {}
+    for sid in sorted(costs, reverse=True):  # reverse topological order
+        down = [weights[c] for c in children.get(sid, ()) if c in weights]
+        weights[sid] = costs.get(sid, 0.0) + (max(down) if down else 0.0)
+    return weights
+
+
+def critical_path_ids(
+    costs: Dict[int, float], parents: Dict[int, Sequence[int]]
+) -> List[int]:
+    """The stage ids of one heaviest root-to-sink chain, in execution
+    order.  Ties break toward the lowest stage id, deterministically."""
+    if not costs:
+        return []
+    weights = longest_path_weights(costs, parents)
+    children: Dict[int, List[int]] = {}
+    roots = []
+    for sid in sorted(costs):
+        live = [p for p in parents.get(sid, ()) if p in costs]
+        if not live:
+            roots.append(sid)
+        for p in live:
+            children.setdefault(p, []).append(sid)
+    if not roots:
+        roots = sorted(costs)[:1]
+    head = min(roots, key=lambda s: (-weights[s], s))
+    path = [head]
+    while True:
+        nxt = [c for c in sorted(children.get(path[-1], ())) if c in weights]
+        if not nxt:
+            return path
+        path.append(min(nxt, key=lambda c: (-weights[c], c)))
+
+
+def estimate_stage_costs(
+    stages: Sequence[Stage],
+    pipeline_name: str,
+    latency_medians: Dict[str, float],
+    *,
+    scan_bytes_per_s: float = SCAN_BYTES_PER_S,
+    stage_overhead_s: float = STAGE_OVERHEAD_S,
+) -> Dict[int, StageCost]:
+    """Estimate every stage's runtime and critical-path weight.
+
+    Primary source: the median of the persisted ``latencyhist`` durations
+    for the stage's function fingerprint (``stage_function_spec`` — the
+    executor records one duration per completed dispatch under the same
+    key, and the SDK Client persists/seeds them across processes).
+    Fallback: a bytes-scanned heuristic from the stage's pruned scan
+    plans.  Weights are longest-path-to-sink over ``parent_stages``.
+    """
+    est: Dict[int, Tuple[float, str]] = {}
+    for stage in stages:
+        median = latency_medians.get(
+            stage_function_spec(pipeline_name, stage).fingerprint
+        )
+        if median is not None and median > 0.0:
+            est[stage.stage_id] = (float(median), "latency")
+        else:
+            scanned = sum(s.estimated_bytes for s in stage.scans.values())
+            est[stage.stage_id] = (
+                stage_overhead_s + scanned / scan_bytes_per_s,
+                "bytes",
+            )
+    parents = {s.stage_id: s.parent_stages for s in stages}
+    weights = longest_path_weights(
+        {sid: e[0] for sid, e in est.items()}, parents
+    )
+    by_weight = sorted(weights, key=lambda s: (-weights[s], s))
+    ranks = {sid: rank for rank, sid in enumerate(by_weight)}
+    return {
+        stage.stage_id: StageCost(
+            stage_id=stage.stage_id,
+            est_s=est[stage.stage_id][0],
+            source=est[stage.stage_id][1],
+            est_memory_gb=stage.resources.memory_gb,
+            cp_weight_s=weights[stage.stage_id],
+            cp_rank=ranks[stage.stage_id],
+        )
+        for stage in stages
+    }

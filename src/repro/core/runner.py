@@ -17,23 +17,39 @@ run (data locality, 4.5) and hit the object store only at stage
 boundaries/outputs.
 
 Since PR 5 stages are *wave-scheduled*: every stage whose parents have
-completed is submitted to the executor's stage lane immediately (in-flight
-bounded by ``parallelism`` / ``ExecutorConfig.max_concurrent_stages``),
-so independent fan-out stages run concurrently — the serverless promise
-of the paper, on the single-host build.  Parallelism never changes
-semantics: artifact manifests, check verdicts and cache entries are
-byte-identical at every level, and per-stage catalog commits are applied
-in stage-id order so branch history stays linear and deterministic.
+completed is submitted to the executor's stage lane immediately, so
+independent fan-out stages run concurrently — the serverless promise of
+the paper, on the single-host build.
+
+Scheduler v2 (this module + core/physical.py's cost model) makes the
+wave scheduler cost-aware and streaming:
+
+* ``schedule="critical_path"`` (default) pops the ready set by
+  longest-path-to-sink weight — stage runtimes estimated from persisted
+  ``latencyhist`` medians with a bytes-scanned fallback — and admission
+  is capped by estimated peak memory (``ExecutorConfig
+  .memory_budget_gb``) instead of a flat stage count;
+  ``schedule="stage_id"`` reproduces the PR 5 policy exactly.
+* ``streaming=True`` (default under critical_path) hands a stage's
+  outputs to its dependents the moment the stage function produces them
+  — downstream scan→filter stages start consuming completed upstream
+  shards while the upstream stage is still writing its artifacts and
+  before it commits.  The stage barrier is retained where it matters:
+  audits and catalog commits.
+
+Neither knob changes semantics: artifact manifests, check verdicts and
+cache entries are byte-identical at every parallelism level, ordering
+mode and streaming setting, and per-stage catalog commits are applied in
+stage-id order so branch history stays linear and deterministic.
 """
 from __future__ import annotations
 
 import heapq
 import threading
 import time
-from concurrent.futures import FIRST_COMPLETED, Future
-from concurrent.futures import wait as futures_wait
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -43,6 +59,9 @@ from repro.core.physical import (
     PhysicalPlan,
     PlannerConfig,
     build_physical_plan,
+    critical_path_ids,
+    estimate_stage_costs,
+    stage_function_spec,
 )
 from repro.core.pipeline import Pipeline
 from repro.core.snapshot import (
@@ -54,7 +73,6 @@ from repro.core.snapshot import (
 )
 from repro.engine.columnar import Columnar
 from repro.runtime.executor import ServerlessExecutor
-from repro.runtime.function import FunctionSpec
 from repro.table.format import Snapshot, TableFormat
 from repro.table.scan import execute_scan
 from repro.table.schema import Column, Schema
@@ -70,6 +88,7 @@ from repro.telemetry.events import (
     StageCommitted,
     StageFinished,
     StageQueued,
+    StageScheduled,
     StageStarted,
 )
 from repro.telemetry.runlog import RunLogStore
@@ -306,6 +325,8 @@ class Runner:
         cache: bool = True,
         planner_config: Optional[PlannerConfig] = None,
         parallelism: Optional[int] = None,
+        schedule: str = "critical_path",
+        streaming: Optional[bool] = None,
     ) -> RunResult:
         """Execute ``pipeline`` with transform-audit-write semantics.
 
@@ -322,12 +343,27 @@ class Runner:
         thanks to node-granular cache keys, replanning under a different
         config still reuses every cached node.
 
-        ``parallelism`` bounds how many independent physical stages the
-        wave scheduler keeps in flight at once (default: the executor's
-        ``max_concurrent_stages``).  Every level produces byte-identical
-        artifact manifests, check verdicts and cache entries — parallelism
-        is a throughput knob, never a semantics knob.
+        ``schedule`` picks the ready-set ordering policy of the wave
+        scheduler: ``"critical_path"`` (default, Scheduler v2) pops the
+        stage with the heaviest longest-path-to-sink cost estimate first
+        and admits stages under the executor's estimated-peak-memory
+        budget; ``"stage_id"`` reproduces the PR 5 policy exactly —
+        ascending stage ids, in-flight bounded by a flat count.
+        ``streaming`` hands stage outputs to dependents as soon as the
+        stage function produces them, overlapping upstream artifact
+        writes/commits with downstream work (default: on under
+        ``critical_path``, off under ``stage_id``).  ``parallelism``
+        pins how many stages stay in flight at once, superseding
+        memory-capped admission's count backstop.  All three are
+        throughput knobs, never semantics knobs: every combination
+        produces byte-identical artifact manifests, check verdicts and
+        cache entries.
         """
+        if schedule not in ("critical_path", "stage_id"):
+            raise ValueError(
+                f"schedule must be 'critical_path' or 'stage_id', "
+                f"got {schedule!r}"
+            )
         t_start = time.perf_counter()
         params = dict(params or {})
 
@@ -375,6 +411,8 @@ class Runner:
                     run_id,
                     use_cache=cache,
                     parallelism=parallelism,
+                    schedule=schedule,
+                    streaming=streaming,
                 )
             except Exception:
                 # any failure: discard the ephemeral branch — prod stays clean
@@ -462,6 +500,8 @@ class Runner:
         *,
         strict_code: bool = True,
         parallelism: Optional[int] = None,
+        schedule: str = "critical_path",
+        streaming: Optional[bool] = None,
     ) -> RunResult:
         """Re-execute run ``run_id``: same code, same data version (4.6).
 
@@ -500,6 +540,8 @@ class Runner:
                 dict(rec.params), PlannerConfig(fusion=rec.fused), replay_id,
                 use_cache=False,
                 parallelism=parallelism,
+                schedule=schedule,
+                streaming=streaming,
             )
             state = "SUCCESS"
         finally:
@@ -546,6 +588,8 @@ class Runner:
         *,
         use_cache: bool = False,
         parallelism: Optional[int] = None,
+        schedule: str = "critical_path",
+        streaming: Optional[bool] = None,
     ) -> Dict[str, Any]:
         # 2. code intelligence: logical plan pinned to the base commit
         tables_at_base = self.catalog.get_commit(base_commit).tables
@@ -653,20 +697,38 @@ class Runner:
                             stage_id=stage.stage_id,
                         ))
 
-        # 3b. wave/eager scheduling: every stage whose parent stages have
-        # completed is submitted to the executor's stage lane (in-flight
-        # bounded by ``parallelism``); completions unblock dependents
-        # immediately — no barrier between waves.  Shared run state (env,
-        # artifacts, checks, cache candidates, counters) is guarded by
-        # ``state_lock``; catalog commits are funneled through
+        # 3b. wave/eager scheduling (Scheduler v2): every stage whose
+        # parent stages are satisfied is submitted to the executor's stage
+        # lane; completions (or, under streaming, outputs-ready) unblock
+        # dependents immediately — no barrier between waves.  Shared run
+        # state (env, artifacts, checks, cache candidates, counters) is
+        # guarded by ``state_lock``; catalog commits are funneled through
         # ``pending_commits`` and applied in stage-id order, so the
         # ephemeral branch's history is linear and identical to a
         # sequential run's, whatever order stages actually finish in.
-        workers = max(
-            1,
-            parallelism
-            if parallelism is not None
-            else self.executor.config.max_concurrent_stages,
+        use_streaming = (
+            (schedule == "critical_path") if streaming is None else bool(streaming)
+        )
+        # per-stage runtime estimates + longest-path-to-sink weights: the
+        # latencyhist medians the Client seeded into the executor win;
+        # never-seen stages fall back to the bytes-scanned heuristic
+        costs = estimate_stage_costs(
+            plan.stages, pipeline.name, self.executor.latency_medians()
+        )
+        cfg = self.executor.config
+        if parallelism is not None:
+            # an explicit per-run parallelism pins the in-flight count in
+            # either mode (the parity matrix isolates ordering/streaming
+            # at a fixed level this way)
+            workers = max(1, parallelism)
+        elif schedule == "critical_path" and cfg.memory_budget_gb is not None:
+            # memory-capped admission supersedes the flat stage count —
+            # the count backstop is only the stage lane's thread capacity
+            workers = max(cfg.max_concurrent_stages, 32)
+        else:
+            workers = max(1, cfg.max_concurrent_stages)
+        mem_budget = (
+            cfg.memory_budget_gb if schedule == "critical_path" else None
         )
         state_lock = threading.Lock()
         counters = {"stages_executed": 0}
@@ -705,10 +767,15 @@ class Runner:
             scan_tags = {"run_id": run_id, "stage_id": stage.stage_id}
             inputs: List[Columnar] = []
             for table in sorted(stage.scans):
+                # streaming mode drives the scan through the incremental
+                # shard iterator (bounded read-ahead window) — chunking and
+                # shard order are shared with the barrier path, so the
+                # concatenated input is byte-identical either way
                 data = execute_scan(
                     self.fmt, stage.scans[table].plan,
                     pool=self.executor.io_pool,
                     bus=self.bus, tags=dict(scan_tags, table=table),
+                    streaming=use_streaming,
                 )
                 inputs.append(Columnar.from_numpy(data))
             for name in stage.internal_inputs:
@@ -720,15 +787,24 @@ class Runner:
                         self.fmt.read(self.fmt.load_snapshot(key))
                     )
                 inputs.append(rel)
-            spec = FunctionSpec(
-                name=f"{pipeline.name}/stage{stage.stage_id}",
-                fn=stage.fn,
-                static_config={"fingerprint": stage.fingerprint},
-                resources=stage.resources,
-            )
+            # one construction site (physical.stage_function_spec) for the
+            # dispatch spec — the scheduler's cost lookup and the executor's
+            # latency history key the same fingerprint by definition
+            spec = stage_function_spec(pipeline.name, stage)
             outputs, stage_checks = self.executor.run(
                 spec, *inputs, tags=scan_tags
             )
+            if use_streaming:
+                # streaming handoff: publish in-memory outputs and unblock
+                # dependent stages NOW, before artifact writes land —
+                # downstream stages consume completed upstream results
+                # while this stage's store I/O is still in flight.  The
+                # stage barrier is retained where it matters: audits and
+                # catalog commits still drain in stage-id order below.
+                with state_lock:
+                    for name, rel in outputs.items():
+                        env[name] = rel
+                outputs_ready(stage.stage_id)
             # store I/O (artifact writes) runs outside the state lock so
             # concurrent stages overlap their writes; only the publication
             # of results + the ordered commit drain is serialized
@@ -749,6 +825,12 @@ class Runner:
                 written[name] = (rel, key)
             now = time.time()
             exec_s = time.perf_counter() - t_exec
+            # predicted-vs-actual: the scheduling estimate against the full
+            # driver span (scan → execute → write) — persisted to the
+            # latencyhist namespace alongside the self-correcting medians
+            self.executor.record_forecast(
+                spec.fingerprint, costs[stage.stage_id].est_s, exec_s
+            )
             self._publish(StageFinished(
                 run_id=run_id, stage_id=stage.stage_id, exec_s=exec_s,
                 outputs=sorted(outputs), checks=sorted(stage_checks),
@@ -804,40 +886,136 @@ class Runner:
         for s in plan.stages:
             for p in s.parent_stages:
                 dependents.setdefault(p, []).append(s.stage_id)
-        # min-heap keeps the ready set in ascending stage-id order: at
-        # parallelism 1 this degenerates to exactly the old sequential
-        # stage loop (the determinism-parity baseline)
-        ready = [sid for sid in deps if not deps[sid]]
-        heapq.heapify(ready)
-        in_flight: Dict[Future, int] = {}
+
+        # The ready set is a min-heap whose key is the ordering mode:
+        #   critical_path — (-cp_weight_s, stage_id): the stage heading the
+        #       longest remaining cost-weighted path to a sink dispatches
+        #       first; stage id is the deterministic tie-break.
+        #   stage_id — ascending stage id, the PR 5 baseline: at
+        #       parallelism 1 this degenerates to exactly the old
+        #       sequential stage loop (the determinism-parity anchor).
+        # Either way the knob changes dispatch ORDER only — artifacts,
+        # checks and cache entries are byte-identical across modes.
+        if schedule == "critical_path":
+            def ready_key(sid: int) -> Tuple[float, int]:
+                return (-costs[sid].cp_weight_s, sid)
+        else:
+            def ready_key(sid: int) -> Tuple[float, int]:
+                return (0.0, sid)
+
+        # Scheduler state below is guarded by ``cond``.  An RLock backs it
+        # because a done-callback can fire inline on the submitting thread
+        # (future already finished) while admit_locked still holds the
+        # lock — a plain Lock would deadlock there.
+        cond = threading.Condition(threading.RLock())
+        ready: List[Tuple[Tuple[float, int], int]] = []
+        ready_at: Dict[int, float] = {}
+        unblocked: Set[int] = set()
+        in_flight: Dict[int, Future] = {}
+        inflight_mem = [0.0]
         failures: Dict[int, BaseException] = {}
-        while ready or in_flight:
-            while ready and len(in_flight) < workers and not failures:
-                sid = heapq.heappop(ready)
-                queued_at[sid] = time.perf_counter()
-                self._publish(StageQueued(
-                    run_id=run_id, stage_id=sid,
-                    nodes=list(stage_by_id[sid].node_names),
-                    parents=sorted(stage_by_id[sid].parent_stages),
-                ))
-                fut = self.executor.submit_stage(run_stage, stage_by_id[sid])
-                in_flight[fut] = sid
-            if not in_flight:
-                break  # a failure stopped submissions; nothing to drain
-            done, _ = futures_wait(
-                set(in_flight), return_when=FIRST_COMPLETED
-            )
-            for fut in done:
-                sid = in_flight.pop(fut)
+        sched_stats: Dict[int, Dict[str, Any]] = {}
+
+        def unblock_locked(sid: int) -> None:
+            # idempotent: streaming fires this at outputs-ready AND the
+            # done-callback fires it again when the driver future resolves
+            if sid in unblocked:
+                return
+            unblocked.add(sid)
+            for child in dependents.get(sid, ()):
+                deps[child].discard(sid)
+                if not deps[child]:
+                    ready_at[child] = time.perf_counter()
+                    heapq.heappush(ready, (ready_key(child), child))
+
+        def outputs_ready(sid: int) -> None:
+            # streaming handoff entry point (called from stage drivers)
+            with cond:
+                unblock_locked(sid)
+                cond.notify_all()
+
+        def on_stage_done(sid: int, fut: Future) -> None:
+            with cond:
                 err = fut.exception()
                 if err is not None:
                     # stop scheduling, drain in-flight stages, then raise
                     failures[sid] = err
-                    continue
-                for child in dependents.get(sid, ()):
-                    deps[child].discard(sid)
-                    if not deps[child]:
-                        heapq.heappush(ready, child)
+                else:
+                    unblock_locked(sid)
+                in_flight.pop(sid, None)
+                inflight_mem[0] -= costs[sid].est_memory_gb
+                cond.notify_all()
+
+        def admit_locked() -> None:
+            while ready and len(in_flight) < workers and not failures:
+                _, sid = ready[0]
+                cost = costs[sid]
+                if (
+                    mem_budget is not None
+                    and in_flight
+                    and inflight_mem[0] + cost.est_memory_gb > mem_budget
+                ):
+                    # memory-capped admission with head-of-line blocking:
+                    # the most critical ready stage never loses its slot to
+                    # a smaller one behind it (bypass could co-schedule two
+                    # huge stages the moment the big head admits).  An
+                    # empty in_flight always admits — no deadlock when one
+                    # stage alone exceeds the budget.
+                    sched_stats.setdefault(sid, {})["admission"] = "waited"
+                    break
+                heapq.heappop(ready)
+                t_admit = time.perf_counter()
+                wait_s = t_admit - ready_at.get(sid, t_admit)
+                inflight_mem[0] += cost.est_memory_gb
+                queued_at[sid] = t_admit
+                stage = stage_by_id[sid]
+                spec = stage_function_spec(pipeline.name, stage)
+                warm = self.executor.warm_ready(spec)
+                admission = (
+                    "waited"
+                    if sched_stats.get(sid, {}).get("admission") == "waited"
+                    else "immediate"
+                )
+                sched_stats[sid] = {
+                    "est_s": cost.est_s,
+                    "source": cost.source,
+                    "cp_weight_s": cost.cp_weight_s,
+                    "cp_rank": cost.cp_rank,
+                    "est_memory_gb": cost.est_memory_gb,
+                    "admission_wait_s": wait_s,
+                    "admission": admission,
+                    "warm": warm,
+                }
+                self._publish(StageScheduled(
+                    run_id=run_id, stage_id=sid,
+                    est_cost_s=cost.est_s, cost_source=cost.source,
+                    cp_weight_s=cost.cp_weight_s, cp_rank=cost.cp_rank,
+                    est_memory_gb=cost.est_memory_gb,
+                    admission_wait_s=wait_s, admission=admission,
+                    schedule=schedule, streaming=use_streaming, warm=warm,
+                ))
+                self._publish(StageQueued(
+                    run_id=run_id, stage_id=sid,
+                    nodes=list(stage.node_names),
+                    parents=sorted(stage.parent_stages),
+                ))
+                fut = self.executor.submit_stage(run_stage, stage)
+                in_flight[sid] = fut
+                fut.add_done_callback(
+                    lambda f, sid=sid: on_stage_done(sid, f)
+                )
+
+        with cond:
+            for s in plan.stages:
+                if not deps[s.stage_id]:
+                    ready_at[s.stage_id] = time.perf_counter()
+                    heapq.heappush(ready, (ready_key(s.stage_id), s.stage_id))
+            admit_locked()
+            while in_flight or (ready and not failures):
+                # timeout is a liveness backstop only — done-callbacks and
+                # outputs_ready notify the loop on every state change
+                cond.wait(timeout=0.1)
+                admit_locked()
         if failures:
             # deterministic surfacing: raise the lowest failed stage id —
             # what the sequential loop would have hit first
@@ -858,6 +1036,27 @@ class Runner:
             "checks": checks,
             "io": io_delta,
             "parallelism": workers,
+            "scheduler": {
+                "schedule": schedule,
+                "streaming": use_streaming,
+                "memory_budget_gb": mem_budget,
+                "workers": workers,
+                "admission_waits": sum(
+                    1 for s in sched_stats.values()
+                    if s.get("admission") == "waited"
+                ),
+                # str keys: JSON-roundtrips through the run record
+                "stages": {
+                    str(sid): dict(s) for sid, s in sorted(sched_stats.items())
+                },
+                # the model's predicted critical path (stage ids, source →
+                # sink) — same longest-path implementation `repro trace`
+                # uses on observed latencies
+                "critical_path": critical_path_ids(
+                    {s.stage_id: costs[s.stage_id].est_s for s in plan.stages},
+                    {s.stage_id: s.parent_stages for s in plan.stages},
+                ),
+            },
             # per-stage queue/exec/commit seconds (str keys: JSON-roundtrips
             # through the run record for `repro run --json`)
             "stage_timings": {
@@ -912,6 +1111,7 @@ class Runner:
                 "stages": len(result["plan"].stages),
                 "stages_executed": cache["stages_executed"],
                 "parallelism": result.get("parallelism", 1),
+                "scheduler": result.get("scheduler", {}),
                 "stage_timings": result.get("stage_timings", {}),
                 "io": result["io"],
                 "executor": self.executor.stats(),

@@ -58,8 +58,18 @@ class ExecutorConfig:
     #: upper bound on pipeline stages the wave scheduler keeps in flight at
     #: once (the CLI's ``--parallelism``).  Stage *functions* still execute
     #: on the container pool, so effective compute parallelism is
-    #: ``min(max_concurrent_stages, max_workers)``.
+    #: ``min(max_concurrent_stages, max_workers)``.  Under
+    #: ``schedule="critical_path"`` this flat count is superseded by
+    #: memory-capped admission (``memory_budget_gb``) unless the caller
+    #: pins an explicit per-run ``parallelism``.
     max_concurrent_stages: int = 4
+    #: estimated-peak-memory budget for co-scheduled stages (Scheduler
+    #: v2's adaptive admission): the wave scheduler admits a ready stage
+    #: only while the sum of in-flight ``ResourceRequest.memory_gb``
+    #: tiers plus the candidate's stays within this budget — two 80 GB
+    #: stages never run together on a 128 GB budget.  ``None`` disables
+    #: the memory cap (count-capped admission only).
+    memory_budget_gb: Optional[float] = 32.0
 
 
 @dataclass
@@ -138,8 +148,14 @@ class ServerlessExecutor:
         self._durations: List[float] = []
         self._speculations = 0  # duplicates launched, lifetime of the pool
         #: function fingerprint -> recent completed durations (the prior-run
-        #: baseline for single-task speculation)
+        #: baseline for single-task speculation AND the scheduler's cost
+        #: model medians)
         self._latency_history: Dict[str, List[float]] = {}
+        #: function fingerprint -> latest predicted-vs-actual stage cost
+        #: (Scheduler v2); persisted next to the durations in the
+        #: ``latencyhist`` namespace so the model's accuracy is auditable
+        #: across processes
+        self._forecasts: Dict[str, Dict[str, float]] = {}
         self._lock = threading.Lock()
 
     # ----------------------------------------------------------- lifecycle
@@ -260,6 +276,41 @@ class ServerlessExecutor:
         (what the SDK Client persists into the lake after each run)."""
         with self._lock:
             return {fp: list(ds) for fp, ds in self._latency_history.items()}
+
+    def latency_medians(self) -> Dict[str, float]:
+        """Median completed duration per function fingerprint — the
+        scheduler cost model's primary source.  One completed run is
+        enough to beat the bytes heuristic (unlike speculation, which
+        needs ``speculation_min_samples`` before arming a backup)."""
+        with self._lock:
+            return {
+                fp: sorted(ds)[len(ds) // 2]
+                for fp, ds in self._latency_history.items()
+                if ds
+            }
+
+    def record_forecast(
+        self, fingerprint: str, predicted_s: float, actual_s: float
+    ) -> None:
+        """Record one stage's predicted-vs-actual cost (Scheduler v2).
+        The SDK Client persists these next to the latency durations so
+        the cost model's calibration survives the process."""
+        with self._lock:
+            self._forecasts[fingerprint] = {
+                "predicted_s": float(predicted_s),
+                "actual_s": float(actual_s),
+            }
+
+    def forecasts(self) -> Dict[str, Dict[str, float]]:
+        """Snapshot of the latest predicted-vs-actual cost per fingerprint."""
+        with self._lock:
+            return {fp: dict(f) for fp, f in self._forecasts.items()}
+
+    def warm_ready(self, spec: FunctionSpec) -> bool:
+        """True when the warm cache already holds a compiled executable
+        for this spec's fingerprint (any shape) — the scheduler's
+        warm/cold dispatch hint on ``StageScheduled``."""
+        return self.warm_cache.has_fingerprint(spec.fingerprint)
 
     def _historical_baseline(self, spec: FunctionSpec) -> Optional[float]:
         """Median completed duration of prior runs of this function, or

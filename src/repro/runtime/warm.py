@@ -81,6 +81,15 @@ class WarmFunctionCache:
         log.debug("cold start %s: %.1f ms", spec.name, dt * 1e3)
         return compiled
 
+    def has_fingerprint(self, fingerprint: str) -> bool:
+        """True when ANY compiled executable exists for this function
+        fingerprint (some shape already paid the cold start).  The wave
+        scheduler stamps this onto ``StageScheduled`` as the warm/cold
+        admission hint — shapes are only known once the stage's scans
+        complete, so the fingerprint is the honest pre-dispatch signal."""
+        with self._lock:
+            return any(k[0] == fingerprint for k in self._cache)
+
     def invalidate(self) -> None:
         with self._lock:
             self._cache.clear()

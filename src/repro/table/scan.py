@@ -11,7 +11,7 @@ from __future__ import annotations
 import time
 from concurrent.futures import Executor
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -145,6 +145,41 @@ def pruning_effectiveness(
     return 1.0 - plan.rows_to_read / total
 
 
+def _chunk_work_items(
+    indexed: List[Tuple[int, ShardMeta]], chunk_rows: Optional[int]
+) -> List[List[Tuple[int, ShardMeta]]]:
+    """Batch (index, shard) pairs into pool work items, order preserved.
+
+    ``chunk_rows`` switches from the default fixed fan-out (≤16 items) to
+    greedy row-count batching: consecutive shards pack into one item
+    until it carries ~``chunk_rows`` rows.  Shared by the blocking and
+    the streaming scan paths so both read the exact same chunks.
+    """
+    if chunk_rows is not None:
+        chunks, cur, cur_rows = [], [], 0
+        for item in indexed:
+            cur.append(item)
+            cur_rows += item[1].num_rows
+            if cur_rows >= chunk_rows:
+                chunks.append(cur)
+                cur, cur_rows = [], 0
+        if cur:
+            chunks.append(cur)
+        return chunks
+    # batch shards into at most ~16 work items: many tiny shards would
+    # otherwise pay one pool round-trip each and lose to the serial read
+    # (ThreadPoolExecutor.map ignores chunksize, so the batching is done
+    # by hand; order is preserved either way)
+    step = -(-len(indexed) // 16)  # ceil division
+    return [indexed[i : i + step] for i in range(0, len(indexed), step)]
+
+
+#: streaming read-ahead window: chunk reads in flight ahead of the
+#: consumer.  Bounds memory to ~window × chunk bytes while still hiding
+#: per-shard store latency behind downstream work.
+SCAN_PREFETCH_CHUNKS = 4
+
+
 def execute_scan(
     fmt: TableFormat,
     plan: ScanPlan,
@@ -153,6 +188,7 @@ def execute_scan(
     bus=None,
     tags: Optional[Dict] = None,
     chunk_rows: Optional[int] = None,
+    streaming: bool = False,
 ) -> TableData:
     """Read surviving shards, apply the residual row-level predicate.
 
@@ -172,13 +208,79 @@ def execute_scan(
     ``ScanShardRead`` per shard; ``tags`` attributes the events to a run
     (``run_id``/``stage_id``/``table``/``source``) since the scan pool
     itself has no run context.
+
+    ``streaming=True`` drives the same chunks through the incremental
+    shard iterator (:func:`iter_scan`'s machinery): a bounded read-ahead
+    window of chunk reads stays in flight while earlier chunks are
+    already being consumed, instead of one barrier ``pool.map`` over all
+    of them.  Chunking, shard order and the final concatenation are
+    identical, so the result is byte-for-byte the same either way.
     """
+    parts = [
+        part
+        for chunk_parts in _iter_chunk_parts(
+            fmt, plan, pool=pool, bus=bus, tags=tags,
+            chunk_rows=chunk_rows, streaming=streaming,
+        )
+        for part in chunk_parts
+    ]
     out_cols = plan.output_columns
-    if not plan.shards:
+    if not parts:
         return {
             c: np.empty((0,), dtype=plan.snapshot.schema.dtype_of(c))
             for c in out_cols
         }
+    return {c: np.concatenate([p[c] for p in parts]) for c in out_cols}
+
+
+def iter_scan(
+    fmt: TableFormat,
+    plan: ScanPlan,
+    *,
+    pool: Optional[Executor] = None,
+    bus=None,
+    tags: Optional[Dict] = None,
+    chunk_rows: Optional[int] = None,
+    prefetch: int = SCAN_PREFETCH_CHUNKS,
+) -> Iterator[TableData]:
+    """Incremental shard-iterator mode: yield the scan chunk by chunk.
+
+    Each yielded ``TableData`` covers one pool work item's shards (same
+    chunking as :func:`execute_scan` — concatenating every yielded chunk
+    reproduces the blocking scan's arrays byte-for-byte, in shard
+    order).  With a ``pool``, up to ``prefetch`` chunk reads run ahead of
+    the consumer, so a downstream filter/transform starts on completed
+    shards while later shards are still in flight — the streaming half
+    of Scheduler v2's scan→filter overlap.
+    """
+    out_cols = plan.output_columns
+    for chunk_parts in _iter_chunk_parts(
+        fmt, plan, pool=pool, bus=bus, tags=tags,
+        chunk_rows=chunk_rows, streaming=True, prefetch=prefetch,
+    ):
+        if chunk_parts:
+            yield {
+                c: np.concatenate([p[c] for p in chunk_parts])
+                if len(chunk_parts) > 1
+                else chunk_parts[0][c]
+                for c in out_cols
+            }
+
+
+def _iter_chunk_parts(
+    fmt: TableFormat,
+    plan: ScanPlan,
+    *,
+    pool: Optional[Executor] = None,
+    bus=None,
+    tags: Optional[Dict] = None,
+    chunk_rows: Optional[int] = None,
+    streaming: bool = False,
+    prefetch: int = SCAN_PREFETCH_CHUNKS,
+) -> Iterator[List[TableData]]:
+    """Yield per-chunk lists of filtered shard parts, in shard order."""
+    if not plan.shards:
+        return
     tags = tags or {}
 
     def read_one(index: int, shard: ShardMeta) -> TableData:
@@ -211,33 +313,27 @@ def execute_scan(
         return part
 
     indexed = list(enumerate(plan.shards))
-    if pool is not None and len(plan.shards) > 1:
-        if chunk_rows is not None:
-            # greedy row-count batching: consecutive shards pack into one
-            # work item until it carries ~chunk_rows rows (order preserved)
-            chunks, cur, cur_rows = [], [], 0
-            for item in indexed:
-                cur.append(item)
-                cur_rows += item[1].num_rows
-                if cur_rows >= chunk_rows:
-                    chunks.append(cur)
-                    cur, cur_rows = [], 0
-            if cur:
-                chunks.append(cur)
-        else:
-            # batch shards into at most ~16 work items: many tiny shards
-            # would otherwise pay one pool round-trip each and lose to the
-            # serial read (ThreadPoolExecutor.map ignores chunksize, so the
-            # batching is done by hand; order is preserved either way)
-            step = -(-len(indexed) // 16)  # ceil division
-            chunks = [indexed[i : i + step] for i in range(0, len(indexed), step)]
-        parts = [
-            part
-            for chunk_parts in pool.map(
-                lambda chunk: [read_one(i, s) for i, s in chunk], chunks
-            )
-            for part in chunk_parts
-        ]
-    else:
-        parts = [read_one(i, shard) for i, shard in indexed]
-    return {c: np.concatenate([p[c] for p in parts]) for c in out_cols}
+    if pool is None or len(plan.shards) <= 1:
+        for i, shard in indexed:
+            yield [read_one(i, shard)]
+        return
+    chunks = _chunk_work_items(indexed, chunk_rows)
+
+    def read_chunk(chunk: List[Tuple[int, ShardMeta]]) -> List[TableData]:
+        return [read_one(i, s) for i, s in chunk]
+
+    if not streaming:
+        # barrier path: one pool.map over every chunk (results in order)
+        yield from pool.map(read_chunk, chunks)
+        return
+    # streaming path: keep a bounded window of chunk reads in flight and
+    # yield strictly in chunk order — same chunks, same order, the only
+    # difference is that the consumer overlaps with later reads
+    window = max(1, prefetch)
+    futures = [pool.submit(read_chunk, c) for c in chunks[:window]]
+    next_submit = window
+    for consumed in range(len(chunks)):
+        yield futures[consumed].result()
+        if next_submit < len(chunks):
+            futures.append(pool.submit(read_chunk, chunks[next_submit]))
+            next_submit += 1

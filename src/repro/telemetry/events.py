@@ -27,6 +27,7 @@ __all__ = [
     "Event",
     "RunStarted",
     "RunFinished",
+    "StageScheduled",
     "StageQueued",
     "StageStarted",
     "StageFinished",
@@ -93,6 +94,36 @@ class RunFinished(Event):
 
 
 # ---------------------------------------------------------------- stages
+@dataclass
+class StageScheduled(Event):
+    """The Scheduler-v2 admission decision for one stage: the cost-model
+    estimate that ordered it, its critical-path rank, and how long the
+    memory-capped admission gate held it after it became ready.  `repro
+    trace` joins this against StageStarted/StageFinished for the
+    predicted-vs-actual table."""
+
+    kind: ClassVar[str] = "StageScheduled"
+    stage_id: int = 0
+    #: estimated runtime seconds ("latency" = latencyhist median,
+    #: "bytes" = scan-bytes heuristic)
+    est_cost_s: float = 0.0
+    cost_source: str = "bytes"
+    #: longest-path-to-sink weight and rank (0 = most critical)
+    cp_weight_s: float = 0.0
+    cp_rank: int = 0
+    #: estimated peak memory tier charged against the admission budget
+    est_memory_gb: int = 1
+    #: seconds between becoming ready (parents satisfied) and admission
+    admission_wait_s: float = 0.0
+    #: "immediate" | "waited" — whether the admission gate held the stage
+    admission: str = "immediate"
+    #: ordering mode ("critical_path" | "stage_id") and streaming handoff
+    schedule: str = "critical_path"
+    streaming: bool = False
+    #: compiled executable already cached for this stage's fingerprint
+    warm: bool = False
+
+
 @dataclass
 class StageQueued(Event):
     """The wave scheduler handed the stage to the executor's stage lane;
@@ -267,6 +298,7 @@ EVENT_TYPES: Dict[str, Type[Event]] = {
     for cls in (
         RunStarted,
         RunFinished,
+        StageScheduled,
         StageQueued,
         StageStarted,
         StageFinished,

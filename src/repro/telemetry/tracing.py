@@ -18,8 +18,14 @@ wall-clock went:
 
 ``critical_path()`` walks the stage dependency edges (carried on
 ``StageQueued.parents``) to the longest queue+exec chain — the stages a
-speedup must target.  ``to_chrome_trace()`` exports the tree as Chrome
-trace-event JSON (load in ``chrome://tracing`` / Perfetto).
+speedup must target.  It delegates to the SAME longest-path
+implementation the Scheduler-v2 cost model uses for dispatch ordering
+(``repro.core.physical.longest_path_weights`` / ``critical_path_ids``),
+fed observed latencies instead of estimates — one implementation, two
+cost sources.  ``StageScheduled`` events are joined onto the stage
+lanes, so ``describe()`` reports predicted-vs-actual per stage.
+``to_chrome_trace()`` exports the tree as Chrome trace-event JSON (load
+in ``chrome://tracing`` / Perfetto).
 """
 from __future__ import annotations
 
@@ -36,6 +42,7 @@ from repro.telemetry.events import (
     StageCommitted,
     StageFinished,
     StageQueued,
+    StageScheduled,
     StageStarted,
 )
 
@@ -91,6 +98,9 @@ class RunTrace:
     stage_parents: Dict[int, List[int]]
     state: str = "SUCCESS"
     events: List[Event] = field(default_factory=list)
+    #: stage_id -> the scheduler's admission decision (cost estimate,
+    #: critical-path rank, admission wait) — predicted-vs-actual source
+    stage_scheduled: Dict[int, StageScheduled] = field(default_factory=dict)
 
     # ------------------------------------------------------------ assembly
     @classmethod
@@ -125,6 +135,7 @@ class RunTrace:
 
         # ---- per-stage event index
         queued: Dict[int, StageQueued] = {}
+        scheduled: Dict[int, StageScheduled] = {}
         started_ev: Dict[int, StageStarted] = {}
         finished_ev: Dict[int, StageFinished] = {}
         committed: Dict[int, StageCommitted] = {}
@@ -133,6 +144,8 @@ class RunTrace:
         for e in events:
             if isinstance(e, StageQueued):
                 queued[e.stage_id] = e
+            elif isinstance(e, StageScheduled):
+                scheduled[e.stage_id] = e
             elif isinstance(e, StageStarted):
                 started_ev[e.stage_id] = e
             elif isinstance(e, StageFinished):
@@ -182,13 +195,26 @@ class RunTrace:
             )
             spans: Dict[str, Span] = {}
             exec_start = s_ev.ts if s_ev is not None else q.ts
+            q_attrs: Dict[str, Any] = {"nodes": list(q.nodes)}
+            sched = scheduled.get(sid)
+            if sched is not None:
+                q_attrs.update(
+                    est_cost_s=sched.est_cost_s,
+                    cost_source=sched.cost_source,
+                    cp_weight_s=sched.cp_weight_s,
+                    cp_rank=sched.cp_rank,
+                    est_memory_gb=sched.est_memory_gb,
+                    admission=sched.admission,
+                    admission_wait_s=sched.admission_wait_s,
+                    warm=sched.warm,
+                )
             queue_span = Span(
                 name=f"queue stage {sid}",
                 kind="queue",
                 start=q.ts,
                 end=exec_start,
                 lane=lane,
-                attrs={"nodes": list(q.nodes)},
+                attrs=q_attrs,
             )
             spans["queue"] = queue_span
             root.children.append(queue_span)
@@ -282,6 +308,7 @@ class RunTrace:
             stage_parents=stage_parents,
             state=state,
             events=list(events),
+            stage_scheduled=scheduled,
         )
 
     # ------------------------------------------------------------ analysis
@@ -305,27 +332,28 @@ class RunTrace:
         return (q.dur if q else 0.0) + (ex.dur if ex else 0.0)
 
     def critical_path(self) -> List[int]:
-        """Stage ids on the longest dependency chain by queue+exec time."""
-        best: Dict[int, float] = {}
-        prev: Dict[int, Optional[int]] = {}
-        for sid in sorted(self.stage_spans):
-            parents = [
-                p for p in self.stage_parents.get(sid, []) if p in best
-            ]
-            base, par = 0.0, None
-            for p in parents:
-                if best[p] > base:
-                    base, par = best[p], p
-            best[sid] = base + self.stage_latency(sid)
-            prev[sid] = par
-        if not best:
+        """Stage ids on the longest dependency chain by queue+exec time.
+
+        Delegates to the scheduler's own longest-path implementation
+        (``repro.core.physical``) fed *observed* stage latencies — the
+        table `repro trace` prints and the order Scheduler v2 dispatched
+        by come from one algorithm, so they are directly comparable.
+        """
+        # lazy import: telemetry stays importable without the planner
+        from repro.core.physical import critical_path_ids
+
+        costs = {
+            sid: self.stage_latency(sid) for sid in self.stage_spans
+        }
+        if not costs:
             return []
-        tail: Optional[int] = max(best, key=lambda s: best[s])
-        path: List[int] = []
-        while tail is not None:
-            path.append(tail)
-            tail = prev[tail]
-        return list(reversed(path))
+        parents = {
+            sid: tuple(
+                p for p in self.stage_parents.get(sid, []) if p in costs
+            )
+            for sid in costs
+        }
+        return critical_path_ids(costs, parents)
 
     # ------------------------------------------------------------- reports
     def describe(self) -> str:
@@ -336,29 +364,66 @@ class RunTrace:
         ]
         crit = set(self.critical_path())
         if self.stage_spans:
-            lines.append(
+            show_sched = bool(self.stage_scheduled)
+            header = (
                 f"{'stage':>5}  {'queue_ms':>9} {'exec_ms':>9} "
-                f"{'commit_ms':>9}  {'crit':>4}  nodes"
+                f"{'commit_ms':>9}  {'crit':>4}"
             )
+            if show_sched:
+                header += f"  {'est_ms':>8} {'src':>7} {'rank':>4} {'adm':>9}"
+            lines.append(header + "  nodes")
             for sid in sorted(self.stage_spans):
                 spans = self.stage_spans[sid]
                 q = spans.get("queue")
                 ex = spans.get("exec")
                 co = spans.get("commit")
                 nodes = (q.attrs.get("nodes") if q else None) or []
-                lines.append(
+                row = (
                     f"{sid:>5}  "
                     f"{(q.dur if q else 0) * 1e3:>9.1f} "
                     f"{(ex.dur if ex else 0) * 1e3:>9.1f} "
                     f"{(co.dur if co else 0) * 1e3:>9.1f}  "
-                    f"{'*' if sid in crit else '':>4}  {','.join(nodes)}"
+                    f"{'*' if sid in crit else '':>4}"
                 )
+                if show_sched:
+                    sched = self.stage_scheduled.get(sid)
+                    if sched is not None:
+                        row += (
+                            f"  {sched.est_cost_s * 1e3:>8.1f} "
+                            f"{sched.cost_source:>7} {sched.cp_rank:>4} "
+                            f"{sched.admission:>9}"
+                        )
+                    else:
+                        row += f"  {'-':>8} {'-':>7} {'-':>4} {'-':>9}"
+                lines.append(row + f"  {','.join(nodes)}")
             crit_s = sum(self.stage_latency(s) for s in crit)
             lines.append(
                 f"critical path: stages {sorted(crit)} "
                 f"({crit_s * 1e3:.1f}ms, {crit_s / max(self.root.dur, 1e-9):.0%} "
                 f"of wall)"
             )
+            if self.stage_scheduled:
+                pred = sum(
+                    e.est_cost_s for e in self.stage_scheduled.values()
+                )
+                actual = sum(
+                    (self.stage_spans[s].get("exec").dur
+                     if self.stage_spans[s].get("exec") else 0.0)
+                    for s in self.stage_scheduled
+                    if s in self.stage_spans
+                )
+                waited = sum(
+                    1 for e in self.stage_scheduled.values()
+                    if e.admission == "waited"
+                )
+                sample = next(iter(self.stage_scheduled.values()))
+                lines.append(
+                    f"scheduler: {sample.schedule} "
+                    f"(streaming={'on' if sample.streaming else 'off'}) "
+                    f"predicted {pred * 1e3:.1f}ms vs actual "
+                    f"{actual * 1e3:.1f}ms exec; "
+                    f"{waited} admission wait(s)"
+                )
         rehydrate = [
             s for s in self.root.walk() if s.kind == "rehydrate"
         ]

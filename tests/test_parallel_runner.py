@@ -1,11 +1,13 @@
 """Wave-parallel DAG execution: determinism parity, rollback, run_async.
 
-The scheduler contract under test: **parallelism is a throughput knob,
-never a semantics knob**.  A run at parallelism 1 (which degenerates to
-the old sequential stage loop, stage-id order and all) and runs at
-parallelism 2 / 8 must produce byte-identical artifact manifests,
+The scheduler contract under test: **parallelism, ordering mode and
+streaming are throughput knobs, never semantics knobs**.  A run at
+parallelism 1 in stage_id order with streaming off (which degenerates to
+the old sequential stage loop) and runs across the full matrix —
+schedule ∈ {stage_id, critical_path} × streaming ∈ {off, on} ×
+parallelism ∈ {1, 2, 8} — must produce byte-identical artifact manifests,
 identical check verdicts, identical node-cache entries and fingerprints —
-and a mid-DAG audit failure must roll back identically.
+and a mid-DAG audit failure must roll back identically in every mode.
 """
 import threading
 import time
@@ -74,7 +76,13 @@ def build_fanout_pipeline(threshold: float = 10.0) -> Pipeline:
     return p
 
 
-def _run_once(parallelism: int, *, threshold: float = 10.0):
+def _run_once(
+    parallelism: int,
+    *,
+    threshold: float = 10.0,
+    schedule: str = "critical_path",
+    streaming=None,
+):
     rng = np.random.default_rng(7)
     with _client(parallelism) as client:
         client.write_table(
@@ -86,6 +94,8 @@ def _run_once(parallelism: int, *, threshold: float = 10.0):
             pushdown=False,
             parallelism=parallelism,
             raise_errors=False,
+            schedule=schedule,
+            streaming=streaming,
         )
         cache_entries = {
             fp: dict(e.outputs)
@@ -98,43 +108,73 @@ def _run_once(parallelism: int, *, threshold: float = 10.0):
             "cache_entries": cache_entries,
             "node_fps": dict(handle.plan.node_fingerprints),
             "parallelism": handle.stats.get("parallelism"),
+            "scheduler": handle.stats.get("scheduler", {}),
             "branches": client.branches(),
             "head_tables": client.tables(),
         }
 
 
+#: the full determinism matrix: ordering mode × streaming × parallelism.
+#: (stage_id, False, 1) is the sequential PR-5 baseline everything else
+#: must match byte-for-byte.
+SCHEDULE_MATRIX = [
+    (schedule, streaming, p)
+    for schedule in ("stage_id", "critical_path")
+    for streaming in (False, True)
+    for p in PARALLELISMS
+]
+
+
 def test_parallelism_parity_matrix():
-    """Parallelism 1 (the sequential baseline) vs 2 vs 8: byte-identical
-    artifact manifests (content-addressed keys), identical verdicts,
-    identical node-cache entries and fingerprints."""
-    results = {p: _run_once(p) for p in PARALLELISMS}
-    base = results[1]
+    """The full scheduler matrix vs the sequential baseline (stage_id,
+    streaming off, parallelism 1): byte-identical artifact manifests
+    (content-addressed keys), identical verdicts, identical node-cache
+    entries and fingerprints — ordering mode, streaming handoff and
+    parallelism change throughput only."""
+    base = _run_once(1, schedule="stage_id", streaming=False)
     assert base["state"] is RunState.SUCCESS
     assert base["parallelism"] == 1
-    for p in PARALLELISMS[1:]:
-        got = results[p]
-        assert got["state"] is RunState.SUCCESS
-        assert got["parallelism"] == p
-        assert got["artifacts"] == base["artifacts"]
-        assert got["checks"] == base["checks"]
-        assert got["cache_entries"] == base["cache_entries"]
-        assert got["node_fps"] == base["node_fps"]
-        assert got["head_tables"] == base["head_tables"]
+    for schedule, streaming, p in SCHEDULE_MATRIX:
+        if (schedule, streaming, p) == ("stage_id", False, 1):
+            continue
+        got = _run_once(p, schedule=schedule, streaming=streaming)
+        label = f"{schedule} streaming={streaming} parallelism={p}"
+        assert got["state"] is RunState.SUCCESS, label
+        assert got["parallelism"] == p, label
+        assert got["artifacts"] == base["artifacts"], label
+        assert got["checks"] == base["checks"], label
+        assert got["cache_entries"] == base["cache_entries"], label
+        assert got["node_fps"] == base["node_fps"], label
+        assert got["head_tables"] == base["head_tables"], label
+        assert got["scheduler"]["schedule"] == schedule, label
+        assert got["scheduler"]["streaming"] is streaming, label
     # something actually fanned out: 6 nodes -> 6 isomorphic stages
     assert len(base["artifacts"]) == 5  # trips, m0..m2, combine
 
 
 def test_parallel_audit_failure_rolls_back_identically():
-    """Mid-DAG audit failure under concurrency: AUDIT_FAILED handle, head
-    unmoved, ephemeral branch gone, zero cache entries persisted — same
-    as the sequential rollback."""
-    for parallelism in (1, 8):
-        res = _run_once(parallelism, threshold=10_000.0)  # audit must fail
-        assert res["state"] is RunState.AUDIT_FAILED
-        assert res["checks"]["trips_expectation"] is False
+    """Mid-DAG audit failure under concurrency, in both ordering modes
+    with and without streaming: AUDIT_FAILED handle, head unmoved,
+    ephemeral branch gone, zero cache entries persisted — same as the
+    sequential rollback."""
+    for schedule, streaming, parallelism in [
+        ("stage_id", False, 1),
+        ("stage_id", True, 8),
+        ("critical_path", False, 8),
+        ("critical_path", True, 8),
+    ]:
+        res = _run_once(
+            parallelism, threshold=10_000.0,  # audit must fail
+            schedule=schedule, streaming=streaming,
+        )
+        label = f"{schedule} streaming={streaming} parallelism={parallelism}"
+        assert res["state"] is RunState.AUDIT_FAILED, label
+        assert res["checks"]["trips_expectation"] is False, label
         # rollback: nothing merged, nothing cached, no run_* branch leaked
-        assert res["head_tables"] == {"taxi_table": res["head_tables"]["taxi_table"]}
-        assert res["cache_entries"] == {}
+        assert res["head_tables"] == {
+            "taxi_table": res["head_tables"]["taxi_table"]
+        }, label
+        assert res["cache_entries"] == {}, label
         assert [b for b in res["branches"] if b.startswith("run_")] == []
 
 

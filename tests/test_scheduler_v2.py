@@ -1,0 +1,306 @@
+"""Scheduler v2 unit + integration tests: cost model, critical-path
+ordering, memory-capped admission, forecast persistence.
+
+The byte-identity contract across ordering/streaming/parallelism lives in
+test_parallel_runner.py; this file covers the scheduler's own arithmetic
+(longest-path weights on hand-built DAGs, cold-vs-seeded cost estimates
+on a directly-constructed Stage) and its runtime behavior (admission
+under a tiny memory budget, predicted-vs-actual forecasts landing in the
+``latencyhist`` namespace, `repro trace` agreeing with the dispatch
+order's implementation).
+"""
+import numpy as np
+import pytest
+
+from repro.api import Client
+from repro.core import Pipeline
+from repro.core.physical import (
+    Stage,
+    critical_path_ids,
+    estimate_stage_costs,
+    longest_path_weights,
+    stage_function_spec,
+)
+from repro.examples_data import TAXI_SCHEMA, make_taxi_data
+from repro.runtime import ExecutorConfig
+from repro.runtime.resources import ResourceRequest
+from repro.telemetry.events import StageScheduled
+
+
+# ------------------------------------------------------- longest path math
+def test_longest_path_weights_linear_chain():
+    # 0 -> 1 -> 2: every stage carries itself plus everything downstream
+    costs = {0: 1.0, 1: 2.0, 2: 4.0}
+    parents = {0: (), 1: (0,), 2: (1,)}
+    assert longest_path_weights(costs, parents) == {0: 7.0, 1: 6.0, 2: 4.0}
+
+
+def test_longest_path_weights_diamond_takes_heavier_arm():
+    #     0
+    #    / \
+    #   1   2      (1 is cheap, 2 is expensive)
+    #    \ /
+    #     3
+    costs = {0: 1.0, 1: 0.5, 2: 10.0, 3: 1.0}
+    parents = {0: (), 1: (0,), 2: (0,), 3: (1, 2)}
+    w = longest_path_weights(costs, parents)
+    assert w[3] == 1.0
+    assert w[2] == 11.0  # 2 + sink
+    assert w[1] == 1.5
+    assert w[0] == 12.0  # through the heavy arm
+    assert critical_path_ids(costs, parents) == [0, 2, 3]
+
+
+def test_longest_path_weights_independent_roots():
+    # two disjoint chains: 0->2 (total 3) and 1 (total 5)
+    costs = {0: 1.0, 1: 5.0, 2: 2.0}
+    parents = {0: (), 1: (), 2: (0,)}
+    w = longest_path_weights(costs, parents)
+    assert w == {0: 3.0, 1: 5.0, 2: 2.0}
+    assert critical_path_ids(costs, parents) == [1]
+
+
+def test_critical_path_tie_breaks_toward_lowest_stage_id():
+    costs = {0: 1.0, 1: 1.0}
+    parents = {0: (), 1: ()}
+    assert critical_path_ids(costs, parents) == [0]
+
+
+# --------------------------------------------------------- cost estimation
+def _mk_stage(sid: int, fn, *, parents=(), mem_gb: int = 1) -> Stage:
+    return Stage(
+        stage_id=sid,
+        node_names=(f"n{sid}",),
+        scans={},
+        internal_inputs=(),
+        outputs=(f"n{sid}",),
+        checks=(),
+        fn=fn,
+        resources=ResourceRequest(memory_gb=mem_gb),
+        fingerprint=f"fp{sid}",
+        parent_stages=tuple(parents),
+    )
+
+
+def _fn(ctx):
+    return {}
+
+
+def test_estimate_stage_costs_cold_falls_back_to_bytes():
+    """No latency history -> the bytes heuristic; a zero-scan stage still
+    carries the fixed overhead so it is never weightless."""
+    stages = [_mk_stage(0, _fn), _mk_stage(1, _fn, parents=(0,))]
+    costs = estimate_stage_costs(stages, "p", {})
+    assert costs[0].source == "bytes"
+    assert costs[0].est_s > 0.0
+    # chain: upstream inherits downstream weight
+    assert costs[0].cp_weight_s == pytest.approx(
+        costs[0].est_s + costs[1].est_s
+    )
+    assert costs[0].cp_rank == 0 and costs[1].cp_rank == 1
+
+
+def test_estimate_stage_costs_seeded_uses_latency_median():
+    """A seeded history for the stage's function fingerprint (the SAME
+    fingerprint stage_function_spec derives — the executor's history key)
+    overrides the bytes heuristic with the median."""
+    stage = _mk_stage(0, _fn)
+    fp = stage_function_spec("p", stage).fingerprint
+    costs = estimate_stage_costs([stage], "p", {fp: 2.5})
+    assert costs[0].source == "latency"
+    assert costs[0].est_s == 2.5
+    # a different pipeline name is a different fingerprint -> cold again
+    assert estimate_stage_costs([stage], "other", {fp: 2.5})[0].source == "bytes"
+
+
+def test_stage_spec_fingerprint_matches_executor_history_key():
+    """The one-construction-site guarantee: latency medians recorded by
+    the executor under a dispatched spec's fingerprint are found by the
+    cost model's lookup for the same stage."""
+    from repro.runtime.executor import ServerlessExecutor
+
+    stage = _mk_stage(0, lambda x: x)
+    spec = stage_function_spec("pipe", stage)
+    ex = ServerlessExecutor(ExecutorConfig(max_workers=2))
+    try:
+        ex.seed_latency_history({spec.fingerprint: [1.0, 3.0, 2.0]})
+        medians = ex.latency_medians()
+        costs = estimate_stage_costs([stage], "pipe", medians)
+        assert costs[0].source == "latency"
+        assert costs[0].est_s == 2.0  # median of [1, 2, 3]
+    finally:
+        ex.shutdown()
+
+
+# ----------------------------------------------------- runtime integration
+N_ROWS = 2_000
+
+
+def _fanout_pipeline(width: int = 4) -> Pipeline:
+    p = Pipeline("sched_v2")
+    p.sql("trips", "SELECT passenger_count as count FROM taxi_table")
+    for i in range(width):
+
+        def make(i):
+            def fn(ctx, trips):
+                import jax.numpy as jnp
+
+                return {"stat": trips.column("count").astype(jnp.float32) + i}
+
+            fn.__name__ = f"w{i}"
+            return fn
+
+        p.python(make(i))
+    return p
+
+
+def _write_fixture(client):
+    rng = np.random.default_rng(11)
+    client.write_table(
+        "taxi_table", make_taxi_data(N_ROWS, rng), schema=TAXI_SCHEMA
+    )
+
+
+def test_memory_budget_serializes_admission():
+    """A 1 GB budget with 1 GB-tier stages admits one stage at a time:
+    exec spans never overlap, and the later stages report admission
+    waits — while the run itself still succeeds with full results."""
+    with Client.ephemeral(
+        shard_rows=512,
+        executor_config=ExecutorConfig(
+            max_workers=8, max_concurrent_stages=8, memory_budget_gb=1.0
+        ),
+    ) as client:
+        _write_fixture(client)
+        handle = client.run(
+            _fanout_pipeline(), fusion=False, pushdown=False
+        ).raise_for_state()
+        sched = handle.stats["scheduler"]
+        assert sched["schedule"] == "critical_path"
+        assert sched["memory_budget_gb"] == 1.0
+        assert sched["admission_waits"] >= 1
+        # from the run's own trace: no two exec spans overlap
+        trace = client.trace(handle.run_id)
+        spans = sorted(
+            (s["exec"].start, s["exec"].end)
+            for s in trace.stage_spans.values()
+            if "exec" in s
+        )
+        assert len(spans) >= 3
+        for (_, prev_end), (next_start, _) in zip(spans, spans[1:]):
+            assert next_start >= prev_end - 1e-6
+        waited = [
+            e for e in trace.stage_scheduled.values() if e.admission == "waited"
+        ]
+        assert len(waited) == sched["admission_waits"]
+
+
+def test_no_budget_allows_concurrent_admission():
+    """memory_budget_gb=None disables the gate: the same fan-out admits
+    every ready stage up to the parallelism cap."""
+    with Client.ephemeral(
+        shard_rows=512,
+        executor_config=ExecutorConfig(
+            max_workers=8, max_concurrent_stages=8, memory_budget_gb=None
+        ),
+    ) as client:
+        _write_fixture(client)
+        handle = client.run(
+            _fanout_pipeline(), fusion=False, pushdown=False
+        ).raise_for_state()
+        sched = handle.stats["scheduler"]
+        assert sched["memory_budget_gb"] is None
+        assert sched["admission_waits"] == 0
+
+
+def test_stage_scheduled_events_and_trace_agree_with_run_stats():
+    """StageScheduled telemetry carries the same estimates the run stats
+    report, and `repro trace`'s critical path uses the shared physical
+    implementation (a valid root-to-sink chain of traced stages)."""
+    with Client.ephemeral(
+        shard_rows=512,
+        executor_config=ExecutorConfig(max_workers=8, max_concurrent_stages=4),
+    ) as client:
+        _write_fixture(client)
+        handle = client.run(
+            _fanout_pipeline(), fusion=False, pushdown=False
+        ).raise_for_state()
+        sched = handle.stats["scheduler"]
+        events = [
+            e for e in client.runlog.get(handle.run_id)
+            if isinstance(e, StageScheduled)
+        ]
+        assert {e.stage_id for e in events} == {
+            int(s) for s in sched["stages"]
+        }
+        for e in events:
+            st = sched["stages"][str(e.stage_id)]
+            assert e.est_cost_s == st["est_s"]
+            assert e.cp_rank == st["cp_rank"]
+            assert e.cost_source == st["source"]
+        # model-predicted critical path: a real chain, root at a source
+        pred = sched["critical_path"]
+        assert pred, "predicted critical path must be non-empty"
+        trace = client.trace(handle.run_id)
+        observed = trace.critical_path()
+        assert observed, "observed critical path must be non-empty"
+        # both paths walk dependency edges of the same DAG
+        by_id = {s: set(ps) for s, ps in trace.stage_parents.items()}
+        for a, b in zip(observed, observed[1:]):
+            assert a in by_id.get(b, set())
+        assert "scheduler:" in trace.describe()
+
+
+def test_forecast_persists_to_latencyhist_refs():
+    """After a run, every executed stage's latencyhist ref carries the
+    scheduler's predicted-vs-actual forecast — riding the same ref the
+    lakekeeper's latency_ttl_s sweep ages out."""
+    with Client.ephemeral(
+        shard_rows=512,
+        executor_config=ExecutorConfig(max_workers=8, max_concurrent_stages=4),
+    ) as client:
+        _write_fixture(client)
+        client.run(
+            _fanout_pipeline(), fusion=False, pushdown=False
+        ).raise_for_state()
+        refs = client.store.list_refs("latencyhist")
+        assert refs, "latency histories must persist"
+        with_forecast = {
+            fp: raw for fp, raw in refs.items() if "forecast" in raw
+        }
+        assert with_forecast, "forecasts must ride the latencyhist refs"
+        for raw in with_forecast.values():
+            assert raw["forecast"]["predicted_s"] > 0.0
+            assert raw["forecast"]["actual_s"] > 0.0
+            assert raw["updated_at"] > 0.0  # the TTL sweep's age field
+
+
+def test_second_run_upgrades_cost_source_to_latency():
+    """Run twice in one client: the second run's estimates come from the
+    first run's recorded latency medians (self-correcting cost model)."""
+    with Client.ephemeral(
+        shard_rows=512,
+        executor_config=ExecutorConfig(max_workers=8, max_concurrent_stages=4),
+    ) as client:
+        _write_fixture(client)
+        first = client.run(
+            _fanout_pipeline(), fusion=False, pushdown=False, cache=False
+        ).raise_for_state()
+        sources_first = {
+            s["source"] for s in first.stats["scheduler"]["stages"].values()
+        }
+        assert sources_first == {"bytes"}  # cold: nothing seeded
+        second = client.run(
+            _fanout_pipeline(), fusion=False, pushdown=False, cache=False
+        ).raise_for_state()
+        sources_second = {
+            s["source"] for s in second.stats["scheduler"]["stages"].values()
+        }
+        assert sources_second == {"latency"}  # every stage now has history
+
+
+def test_invalid_schedule_rejected():
+    with Client.ephemeral(shard_rows=512) as client:
+        _write_fixture(client)
+        with pytest.raises(ValueError, match="schedule"):
+            client.run(_fanout_pipeline(), schedule="sjf")

@@ -40,10 +40,16 @@ N_ROWS = 2_000
 PARALLELISMS = (1, 2, 8)
 
 #: wall-clock fields stripped before comparing event sets across
-#: parallelism levels (everything timing-dependent, nothing semantic)
+#: parallelism levels (everything timing-dependent, nothing semantic).
+#: StageScheduled's admission_wait_s/admission/warm describe scheduler
+#: state at dispatch time (how long the gate held the stage, whether a
+#: compiled executable already existed) — concurrency-dependent by
+#: nature; its cost-model fields (est_cost_s, cp_rank, schedule,
+#: streaming) stay under the invariance contract.
 _TIMING_FIELDS = {
     "ts", "seq", "wall_s", "exec_s", "commit_s", "dur_s",
     "baseline_s", "deadline_s",
+    "admission_wait_s", "admission", "warm",
 }
 #: timer-driven events — whether a straggler deadline fires depends on
 #: scheduling noise, so they are excluded from the determinism contract
